@@ -1,0 +1,92 @@
+"""Chainwrite vs XLA-native collectives on the TPU-analogue mesh:
+wall-clock on 8 virtual CPU devices (subprocess) + HLO wire bytes.
+
+This is the JAX-side counterpart of Fig. 5: the "network-layer
+multicast" baseline is XLA's built-in all-reduce/all-gather; "Torrent"
+is the scheduled ppermute chain. On CPU the wall-clock ratio is not
+meaningful for TPU — the *collective wire bytes* (trip-count-aware HLO
+parse) are the portable metric and must match the ring-algorithm
+prediction 2·(L-1)/L · payload per device.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import chainwrite as cw
+from repro.launch import hlo_cost
+
+L = 8
+mesh = jax.make_mesh((L,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+N = 1 << 18  # 256k f32 per device = 1 MiB
+
+def time_fn(f, *args):
+    f(*args)  # compile+warm
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / 5 * 1e6
+
+x = jnp.ones((L, N), jnp.float32)
+
+def chain_ar(x):
+    return cw.chain_all_reduce(x[0], "x")[None]
+
+def xla_ar(x):
+    return jax.lax.psum(x[0], "x")[None]
+
+results = {}
+for name, fn in [("chain_all_reduce", chain_ar), ("xla_all_reduce", xla_ar)]:
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    jitted = jax.jit(sm)
+    us = time_fn(jitted, x)
+    cost = hlo_cost.analyze(jitted.lower(x).compile().as_text())
+    results[name] = (us, cost.coll_bytes)
+    # correctness
+    np.testing.assert_allclose(np.asarray(jitted(x))[0], np.full((N,), L, np.float32))
+
+payload = N * 4
+ring_pred = 2 * (L - 1) / L * payload
+chain_bytes = results["chain_all_reduce"][1]
+assert 0.9 * ring_pred <= chain_bytes <= 1.35 * ring_pred, (chain_bytes, ring_pred)
+for name, (us, cb) in results.items():
+    print(f"{name},{us:.1f},{cb:.0f}")
+"""
+
+
+def main() -> list[tuple[str, float, str]]:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-c", _SNIPPET], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    rows = []
+    for line in proc.stdout.strip().splitlines():
+        name, us, cb = line.split(",")
+        rows.append((f"collectives.{name}", float(us), f"wire_bytes={cb}"))
+    rows.append((
+        "collectives.subprocess_s",
+        (time.perf_counter() - t0) * 1e6, "8 virtual devices",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

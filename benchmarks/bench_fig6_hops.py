@@ -1,0 +1,72 @@
+"""Paper Fig. 6 — average hops per destination on an 8×8 mesh,
+N_dst ∈ {4, 8, 16, 24, 32, 40, 48, 63} × 128 random destination sets
+(1024 points), for unicast / multicast / naive / greedy / TSP chains.
+
+Validation targets (paper §IV-C):
+  * naive chain ≫ multicast (redundant paths);
+  * greedy ≈ multicast;
+  * TSP ≤ multicast at scale; both → ~1 hop/dst at N_dst = 63;
+  * unicast converges to the mesh's average Manhattan distance.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.scheduling import (
+    SCHEDULERS,
+    chain_total_hops,
+    multicast_total_hops,
+    unicast_total_hops,
+)
+from repro.core.topology import MeshTopology
+
+TOPO = MeshTopology(8, 8)
+GROUPS = (4, 8, 16, 24, 32, 40, 48, 63)
+REPEATS = 128
+
+
+def sweep(repeats: int = REPEATS) -> dict[int, dict[str, float]]:
+    rng = random.Random(42)
+    out: dict[int, dict[str, float]] = {}
+    for n in GROUPS:
+        acc = {"unicast": 0.0, "multicast": 0.0, "naive": 0.0,
+               "greedy": 0.0, "tsp": 0.0}
+        for _ in range(repeats):
+            dsts = rng.sample(range(1, 64), n)
+            acc["unicast"] += unicast_total_hops(TOPO, dsts, 0) / n
+            acc["multicast"] += multicast_total_hops(TOPO, dsts, 0) / n
+            for s in ("naive", "greedy", "tsp"):
+                order = SCHEDULERS[s](TOPO, dsts, 0)
+                acc[s] += chain_total_hops(TOPO, order, 0) / n
+        out[n] = {k: v / repeats for k, v in acc.items()}
+    return out
+
+
+def main() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    table = sweep()
+    us = (time.perf_counter() - t0) * 1e6 / (len(GROUPS) * REPEATS)
+
+    big = table[63]
+    assert table[16]["naive"] > table[16]["multicast"]
+    assert table[48]["tsp"] <= table[48]["multicast"] * 1.02
+    assert big["tsp"] <= 1.15  # → ~1 hop/dst (paper's theoretical limit)
+    assert big["multicast"] <= 1.15
+
+    rows = []
+    for n, r in table.items():
+        rows.append((
+            f"fig6.avg_hops@n{n}", us,
+            "uni={unicast:.2f} mc={multicast:.2f} naive={naive:.2f} "
+            "greedy={greedy:.2f} tsp={tsp:.2f}".format(**r),
+        ))
+    rows.append(("fig6.tsp_beats_multicast@48", us,
+                 str(table[48]["tsp"] <= table[48]["multicast"])))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

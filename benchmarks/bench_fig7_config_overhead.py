@@ -1,0 +1,32 @@
+"""Paper Fig. 7 — Chainwrite configuration overhead: 64 KB copy to
+1–8 destinations; linear fit must give the paper's 82 CC/destination."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.simulator import config_overhead_per_destination
+from repro.core.topology import MeshTopology
+
+TOPO = MeshTopology(4, 5)
+
+
+def main() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    res = config_overhead_per_destination(TOPO, src=0, size_bytes=64 * 1024,
+                                          max_dsts=8)
+    us = (time.perf_counter() - t0) * 1e6
+    slope = res["slope_cc_per_dst"]
+    assert abs(slope - 82.0) <= 3.0, slope
+    lats = res["latencies_cc"]
+    return [
+        ("fig7.slope_cc_per_dst", us, f"{slope:.1f}"),
+        ("fig7.latency_1dst_cc", us, str(lats[0])),
+        ("fig7.latency_8dst_cc", us, str(lats[-1])),
+        ("fig7.linear", us, str(all(b > a for a, b in zip(lats, lats[1:])))),
+    ]
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

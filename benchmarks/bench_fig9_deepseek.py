@@ -1,0 +1,126 @@
+"""Paper §IV-E / Fig. 9–10 — DeepSeek-V3 self-attention data-movement
+workloads on the 3×3-cluster FPGA SoC (Table II), Torrent vs XDMA.
+
+Workloads (Table II): shape, src/dst blocked layouts, multicast flag.
+The prefill workloads multicast to all 8 other clusters; the decode
+QKT/SV workloads are single-destination layout transforms.
+
+Model (documented; calibrated to the paper's system):
+  * XDMA baseline — software P2MP: one sequential P2P copy per
+    destination, no replication (Torrent's Frontend is *built on*
+    XDMA, so both do ND-affine layout transforms on the fly; the
+    speedup is pure Chainwrite, paper: "up to 7.88×").
+  * Torrent — one Chainwrite stream through the scheduled chain; the
+    stream duplicator forwards while the local DSE writes, so all
+    destinations are served by a single source read.
+
+The relayout itself is executed for real through the Pallas kernel
+(interpret mode on CPU) and verified against the oracle, so the
+"derived" column also certifies correctness of the moved bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduling import SCHEDULERS
+from repro.core.simulator import (
+    DEFAULT_PARAMS,
+    chainwrite_latency,
+    p2p_latency,
+    unicast_latency,
+)
+from repro.core.topology import MeshTopology
+from repro.kernels.relayout import ops as relayout_ops
+
+TOPO = MeshTopology(3, 3)  # the paper's 9-cluster FPGA SoC
+ALL_DSTS = list(range(1, 9))
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    rows: int
+    cols: int
+    src_layout: str
+    dst_layout: str
+    multicast: bool
+
+
+WORKLOADS = [
+    Workload("P1:QKT_Single_Head", 2048, 192, "MNM16N8", "MNM8N8", True),
+    Workload("P2:SV_Single_Head", 2048, 128, "MNM16N8", "MNM8N8", True),
+    Workload("P3:KV_Matrix_MLA_Recovery", 2048, 512, "MNM16N8", "MNM16N8", True),
+    Workload("D1:QKT_Single_Head", 4096, 192, "MNM16N8", "MNM64N16", False),
+    Workload("D2:SV_Single_Head", 4096, 128, "MNM16N8", "MNM64N16", False),
+    Workload("D3:KV_Matrix_MLA_Recovery", 4096, 512, "MNM16N8", "MNM16N8", True),
+]
+
+BYTES_PER_EL = 1  # the paper's GeMM is 8-bit
+
+
+def xdma_latency(w: Workload) -> int:
+    """Baseline: per-destination sequential P2P copies (layout
+    transform is on-the-fly in XDMA's DSE, same as Torrent's)."""
+    size = w.rows * w.cols * BYTES_PER_EL
+    dsts = ALL_DSTS if w.multicast else [1]
+    return unicast_latency(TOPO, 0, dsts, size)
+
+
+def torrent_latency(w: Workload) -> int:
+    """Chainwrite with on-the-fly DSE relayout (transform is free)."""
+    size = w.rows * w.cols * BYTES_PER_EL
+    dsts = ALL_DSTS if w.multicast else [1]
+    if len(dsts) == 1:
+        return p2p_latency(TOPO, 0, 1, size)
+    order = SCHEDULERS["tsp"](TOPO, dsts, 0)
+    return chainwrite_latency(TOPO, 0, order, size)
+
+
+def run_relayout(w: Workload) -> bool:
+    """Execute the actual layout transform through the Pallas kernel."""
+    shape = (w.rows, w.cols)
+    src = relayout_ops.parse_layout(w.src_layout)
+    dst = relayout_ops.parse_layout(w.dst_layout)
+    dense = jnp.arange(w.rows * w.cols, dtype=jnp.int8).reshape(shape)
+    x = relayout_ops.dense_to_blocked(dense, src)
+    got = relayout_ops.relayout(x, shape, src, dst)
+    want = relayout_ops.relayout_ref(x, shape, src, dst)
+    return bool((np.asarray(got) == np.asarray(want)).all())
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    speedups = []
+    for w in WORKLOADS:
+        t0 = time.perf_counter()
+        ok = run_relayout(w)
+        us = (time.perf_counter() - t0) * 1e6
+        base = xdma_latency(w)
+        torr = torrent_latency(w)
+        s = base / torr
+        speedups.append(s)
+        rows.append((
+            f"fig9.{w.name}", us,
+            f"xdma={base}cc torrent={torr}cc speedup={s:.2f}x "
+            f"relayout_ok={ok} ndst={8 if w.multicast else 1}",
+        ))
+        assert ok
+    best = max(speedups)
+    # paper: up to 7.88x over the XDMA unicast baseline (8 destinations)
+    assert 6.5 <= best <= 8.0, best
+    # single-destination decode transforms see no chainwrite win
+    singles = [s for w, s in zip(WORKLOADS, speedups) if not w.multicast]
+    assert all(0.9 <= s <= 1.1 for s in singles), singles
+    rows.append(("fig9.best_speedup", 0.0, f"{best:.2f}x (paper: 7.88x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

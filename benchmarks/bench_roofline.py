@@ -1,0 +1,110 @@
+"""§Roofline table generator — reads the dry-run artifacts under
+``experiments/dryrun/`` and emits the per-(arch × shape × mesh) roofline
+terms, dominant bottleneck and MODEL/HLO flops ratio.
+
+Run the sweep first:  PYTHONPATH=src python -m repro.launch.dryrun --all
+Then:                 PYTHONPATH=src python -m benchmarks.bench_roofline
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+
+def load(mesh: str = "single") -> list[dict]:
+    d = os.path.join(DRYRUN_DIR, mesh)
+    rows = []
+    if not os.path.isdir(d):
+        return rows
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json") and "__" in f and not f.count("__") > 1:
+            with open(os.path.join(d, f)) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def table(mesh: str = "single") -> list[dict]:
+    out = []
+    for r in load(mesh):
+        if r.get("status") == "skipped":
+            out.append({
+                "cell": f'{r["arch"]} × {r["shape"]}',
+                "status": "skipped", "reason": r.get("reason", ""),
+            })
+            continue
+        if r.get("status") != "ok":
+            out.append({"cell": f'{r["arch"]} × {r["shape"]}',
+                        "status": r.get("status", "?")})
+            continue
+        roof = r["roofline"]
+        out.append({
+            "cell": f'{r["arch"]} × {r["shape"]}',
+            "status": "ok",
+            "compute_s": roof["compute_s"],
+            "memory_s": roof["memory_s"],
+            "collective_s": roof["collective_s"],
+            "dominant": roof["dominant"],
+            "bound_s": max(roof["compute_s"], roof["memory_s"],
+                           roof["collective_s"]),
+            "roofline_fraction": (
+                roof["compute_s"]
+                / max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+            ),
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "hbm_gb_per_dev": r["memory_analysis"].get(
+                "peak_memory_in_bytes", 0) / 2**30,
+        })
+    return out
+
+
+def markdown(mesh: str = "single") -> str:
+    rows = table(mesh)
+    lines = [
+        "| cell | compute_s | memory_s | collective_s | dominant | "
+        "roofline-frac | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['cell']} | — | — | — | {r['status']} | — | — |")
+            continue
+        ufr = r["useful_flops_ratio"]
+        ufr_s = f"{ufr:.2f}" if ufr else "?"
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | **{r['dominant']}** | "
+            f"{r['roofline_fraction']:.2f} | {ufr_s} |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> list[tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    rows = [r for r in table("single") if r["status"] == "ok"]
+    us = (time.perf_counter() - t0) * 1e6
+    out = []
+    for r in rows:
+        out.append((
+            f"roofline.{r['cell'].replace(' × ', '__')}", us,
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.2f} "
+            f"c={r['compute_s']:.4f} m={r['memory_s']:.4f} "
+            f"n={r['collective_s']:.4f}",
+        ))
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        out.append(("roofline.worst_cell", us,
+                    f"{worst['cell']} frac={worst['roofline_fraction']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,49 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Individual benches also run
+standalone: ``python -m benchmarks.bench_fig5_eta_p2mp`` etc.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (
+    bench_area_power,
+    bench_collectives,
+    bench_fig5_eta_p2mp,
+    bench_fig6_hops,
+    bench_fig7_config_overhead,
+    bench_fig9_deepseek,
+    bench_roofline,
+)
+
+BENCHES = [
+    ("fig5 (eta_P2MP sweep)", bench_fig5_eta_p2mp),
+    ("fig6 (avg hops/dst)", bench_fig6_hops),
+    ("fig7 (config overhead)", bench_fig7_config_overhead),
+    ("fig9 (DeepSeek-V3 workloads)", bench_fig9_deepseek),
+    ("fig11 (area/power model)", bench_area_power),
+    ("collectives (chain vs xla)", bench_collectives),
+    ("roofline (dry-run table)", bench_roofline),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for title, mod in BENCHES:
+        try:
+            for name, us, derived in mod.main():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception:
+            failed.append(title)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Assigned input shapes × applicability, and ShapeDtypeStruct specs.
+
+Four shapes per architecture (40 cells):
+  train_4k     seq 4096  × global_batch 256   -> train_step
+  prefill_32k  seq 32768 × global_batch 32    -> prefill_step
+  decode_32k   KV 32768  × global_batch 128   -> serve_step (1 new token)
+  long_500k    KV 524288 × global_batch 1     -> serve_step (1 new token)
+
+``long_500k`` requires a sub-quadratic *cache working set*: it runs for
+SSM (mamba2: O(1) state), hybrid (jamba) and SWA (h2o-danube: ring
+buffer = window) archs, and is skipped for pure full-attention archs
+(see DESIGN.md §Shape skips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+# archs allowed to run long_500k (sub-quadratic cache working set)
+LONG_CONTEXT_ARCHS = {"mamba2-2.7b", "jamba-v0.1-52b", "h2o-danube-1.8b"}
+
+
+def applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "pure full-attention arch: 512k dense-KV decode skipped"
+    return True, ""
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if shape.kind == "train":
+        batch: dict = {}
+        if cfg.family == "vlm":  # stub frontend: precomputed embeddings
+            batch["embeds"] = _f((B, S, cfg.d_model), bf16)
+            batch["positions"] = _f((3, B, S), i32)
+        else:
+            batch["tokens"] = _f((B, S), i32)
+        if cfg.is_encdec:  # stub conv frontend: precomputed frames
+            batch["enc_frames"] = _f((B, cfg.encoder_seq_len, cfg.d_model), bf16)
+        batch["labels"] = _f((B, S), i32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = _f((B, S, cfg.d_model), bf16)
+            batch["positions"] = _f((3, B, S), i32)
+        else:
+            batch["tokens"] = _f((B, S), i32)
+        if cfg.is_encdec:
+            batch["enc_frames"] = _f((B, cfg.encoder_seq_len, cfg.d_model), bf16)
+        return {"batch": batch, "max_seq": S}
+    # decode: one new token against a seq_len-deep cache
+    from repro.models import transformer as T
+
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    return {
+        "tokens": _f((B,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache,
+    }

@@ -1,0 +1,75 @@
+"""Torrent core — the paper's contribution in JAX.
+
+* :mod:`.topology`   — 2-D mesh/torus + XY routing (SoC NoC and ICI).
+* :mod:`.scheduling` — Chainwrite sequence schedulers (Alg. 1 greedy,
+  open-path TSP) and hop accounting.
+* :mod:`.simulator`  — cycle-level NoC model (Fig. 5/6/7 reproduction).
+* :mod:`.chainwrite` — Chainwrite collectives on TPU ICI
+  (scheduled ppermute chains inside shard_map).
+* :mod:`.chaintask`  — host-side four-phase orchestration (Fig. 4).
+"""
+
+from .chainwrite import (
+    chain_all_gather,
+    chain_all_reduce,
+    chain_all_to_all,
+    chain_broadcast,
+    chain_edges,
+    chain_reduce_scatter,
+    xla_broadcast,
+)
+from .chaintask import AffinePattern, ChainConfig, ChainTask, Phase
+from .scheduling import (
+    SCHEDULERS,
+    brute_force_schedule,
+    chain_total_hops,
+    greedy_schedule,
+    multicast_total_hops,
+    naive_schedule,
+    tsp_schedule,
+    unicast_total_hops,
+)
+from .simulator import (
+    DEFAULT_PARAMS,
+    SimParams,
+    chainwrite_latency,
+    config_overhead_per_destination,
+    eta_p2mp,
+    multicast_latency,
+    p2mp_efficiency_point,
+    p2p_latency,
+    unicast_latency,
+)
+from .topology import MeshTopology
+
+__all__ = [
+    "AffinePattern",
+    "ChainConfig",
+    "ChainTask",
+    "DEFAULT_PARAMS",
+    "MeshTopology",
+    "Phase",
+    "SCHEDULERS",
+    "SimParams",
+    "brute_force_schedule",
+    "chain_all_gather",
+    "chain_all_reduce",
+    "chain_all_to_all",
+    "chain_broadcast",
+    "chain_edges",
+    "chain_reduce_scatter",
+    "chain_total_hops",
+    "chainwrite_latency",
+    "config_overhead_per_destination",
+    "eta_p2mp",
+    "greedy_schedule",
+    "multicast_latency",
+    "multicast_total_hops",
+    "naive_schedule",
+    "p2mp_efficiency_point",
+    "p2p_latency",
+    "tsp_schedule",
+    "unicast_latency",
+    "unicast_total_hops",
+    "xla_broadcast",
+]

@@ -1,0 +1,189 @@
+"""Host-side four-phase Chainwrite orchestration (paper §III-A/B, Fig. 4).
+
+Inside a compiled XLA step the four-phase handshake is static (see
+DESIGN.md §2), but *between* steps the serving/training runtime really
+does orchestrate dynamic P2MP movement (weight refresh, KV-block
+multicast, elastic re-layout). This module is that application layer:
+
+* :class:`ChainConfig` — the cfg packet of Fig. 4(c): chain linkage
+  (prev/next node), transfer geometry for the backend (AXI size field),
+  and the ND-affine access pattern for the DSE (field F).
+* :class:`ChainTask` — a P2MP task driven through the four phases
+  CFG_DISPATCH → GRANT_BACKPROP → DATA → FINISH_BACKPROP, with a
+  per-phase cycle ledger from :mod:`.simulator` so runtime decisions
+  (chain vs unicast, scheduler choice) can be made from predicted cost.
+
+The DATA phase executes a real copy through a pluggable ``transport``
+(by default an in-process store-and-forward through per-node buffers —
+each hop duplicates the stream to the local memory and the next hop,
+mirroring the Torrent data switch ①–④ port semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Sequence
+
+import numpy as np
+
+from . import simulator
+from .scheduling import SCHEDULERS
+from .topology import MeshTopology
+
+
+class Phase(enum.Enum):
+    IDLE = "idle"
+    CFG_DISPATCH = "cfg_dispatch"
+    GRANT_BACKPROP = "grant_backprop"
+    DATA = "data"
+    FINISH_BACKPROP = "finish_backprop"
+    DONE = "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class AffinePattern:
+    """ND-affine access pattern (cfg field F — the DSE program).
+
+    Reads ``prod(bounds)`` elements at ``base + sum_i idx_i*strides_i``.
+    """
+
+    base: int
+    bounds: tuple[int, ...]
+    strides: tuple[int, ...]
+
+    def indices(self) -> np.ndarray:
+        idx = np.zeros((), dtype=np.int64)
+        for b, s in zip(self.bounds, self.strides):
+            idx = idx[..., None] + np.arange(b, dtype=np.int64) * s
+        return (self.base + idx).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainConfig:
+    """One cfg frame body (Fig. 4(c) fields A–F)."""
+
+    node: int  # this Torrent's node id
+    prev_node: int | None  # field A/B: upstream link (None = initiator)
+    next_node: int | None  # field C/D: downstream link (None = tail)
+    size_bytes: int  # field E: AXI transfer size
+    pattern: AffinePattern  # field F: DSE access pattern
+
+
+Transport = Callable[[int, int, np.ndarray], None]
+
+
+class ChainTask:
+    """A single P2MP Chainwrite task, orchestrated in four phases."""
+
+    def __init__(
+        self,
+        topo: MeshTopology,
+        source: int,
+        destinations: Sequence[int],
+        payload: np.ndarray,
+        *,
+        scheduler: str = "greedy",
+        pattern: AffinePattern | None = None,
+        sim_params: simulator.SimParams = simulator.DEFAULT_PARAMS,
+    ) -> None:
+        if len(set(destinations)) != len(destinations):
+            raise ValueError("duplicate destinations")
+        if source in destinations:
+            raise ValueError("source cannot be a destination")
+        self.topo = topo
+        self.source = source
+        self.payload = np.ascontiguousarray(payload)
+        self.order: list[int] = SCHEDULERS[scheduler](
+            topo, list(destinations), source
+        )
+        self.scheduler = scheduler
+        self.sim_params = sim_params
+        self.pattern = pattern or AffinePattern(
+            base=0, bounds=(self.payload.size,), strides=(1,)
+        )
+        self.phase = Phase.IDLE
+        self.grants: set[int] = set()
+        self.finishes: set[int] = set()
+        self.node_buffers: dict[int, np.ndarray] = {}
+        self.cycle_ledger: dict[str, int] = {}
+
+    # -- cfg packets (Fig. 4c) ----------------------------------------
+    def configs(self) -> list[ChainConfig]:
+        chain = [self.source] + list(self.order)
+        cfgs = []
+        for i, node in enumerate(chain):
+            cfgs.append(
+                ChainConfig(
+                    node=node,
+                    prev_node=chain[i - 1] if i > 0 else None,
+                    next_node=chain[i + 1] if i + 1 < len(chain) else None,
+                    size_bytes=self.payload.nbytes,
+                    pattern=self.pattern,
+                )
+            )
+        return cfgs
+
+    # -- four-phase execution ------------------------------------------
+    def run(self, transport: Transport | None = None) -> dict[int, np.ndarray]:
+        """Drive all four phases; returns the per-destination buffers."""
+        p = self.sim_params
+        chain = [self.source] + list(self.order)
+        n = len(self.order)
+
+        # Phase 1 — cfg dispatch (initiator -> all members, parallel).
+        self.phase = Phase.CFG_DISPATCH
+        far = max(self.topo.distance(self.source, d) for d in self.order)
+        self.cycle_ledger["cfg"] = (
+            p.dma_setup_cc + n * p.cfg_inject_cc + far * p.router_cc + p.cfg_proc_cc
+        )
+
+        # Phase 2 — grant backward propagation (tail -> head). A node
+        # forwards the grant only once it is ready (models Fig. 4(b)).
+        self.phase = Phase.GRANT_BACKPROP
+        for node in reversed(chain[1:]):
+            self.grants.add(node)
+        hops = sum(
+            self.topo.distance(a, b) for a, b in zip(chain, chain[1:])
+        )
+        self.cycle_ledger["grant"] = hops * p.router_cc + n * p.grant_fwd_cc
+
+        # Phase 3 — data: store-and-forward through every member.
+        self.phase = Phase.DATA
+        flat = self.payload.reshape(-1)
+        gathered = flat[self.pattern.indices() % flat.size]
+        for prev, node in zip(chain, chain[1:]):
+            if transport is not None:
+                transport(prev, node, gathered)
+            self.node_buffers[node] = gathered.copy()
+        self.cycle_ledger["data"] = (
+            hops * p.router_cc
+            + n * p.sf_fill_cc
+            + simulator._ceil_div(gathered.nbytes, p.link_bw)
+        )
+
+        # Phase 4 — finish backward propagation (tail -> head).
+        self.phase = Phase.FINISH_BACKPROP
+        for node in reversed(chain[1:]):
+            self.finishes.add(node)
+        self.cycle_ledger["finish"] = hops * p.router_cc + n * p.finish_fwd_cc
+
+        self.phase = Phase.DONE
+        self.cycle_ledger["total"] = sum(
+            self.cycle_ledger[k] for k in ("cfg", "grant", "data", "finish")
+        )
+        return self.node_buffers
+
+    # -- cost predictions (runtime policy) ------------------------------
+    def predicted_cycles(self) -> int:
+        return simulator.chainwrite_latency(
+            self.topo, self.source, self.order, self.payload.nbytes, self.sim_params
+        )
+
+    def unicast_cycles(self) -> int:
+        return simulator.unicast_latency(
+            self.topo, self.source, self.order, self.payload.nbytes, self.sim_params
+        )
+
+    def speedup_vs_unicast(self) -> float:
+        return self.unicast_cycles() / max(1, self.predicted_cycles())

@@ -1,0 +1,326 @@
+"""Chainwrite collectives — the paper's P2MP mechanism on TPU ICI.
+
+The paper moves data replication out of the NoC routers and into the DMA
+endpoints: data traverses a *scheduled chain* of destinations, each hop
+an ordinary P2P transfer. On TPU the only true P2P primitive is
+``jax.lax.ppermute`` (collective-permute), so Chainwrite maps to chains
+of ppermutes inside ``shard_map``:
+
+* :func:`chain_broadcast` — P2MP multicast of a payload held by the
+  chain head to an arbitrary *subset* of devices on an axis. Supports
+  frame pipelining (``num_frames``): the payload is sliced into frames
+  that stream through the chain (store-and-forward), so chain latency
+  is (F + L - 2) frame-times rather than F·L — exactly the paper's
+  §III-C stream duplicator behaviour.
+* :func:`chain_all_gather` / :func:`chain_reduce_scatter` /
+  :func:`chain_all_reduce` — ring collectives over an explicitly
+  *scheduled* ring order (from ``core.scheduling``), replacing XLA's
+  built-in all-gather/all-reduce ("network-layer multicast" analogue).
+* :func:`chain_all_to_all` — MoE dispatch as a rotating chain.
+
+All functions must be called inside ``shard_map`` with a manual axis.
+``order`` is always a static tuple of device indices along the axis;
+non-members of a partial chain participate in the SPMD program but
+receive (and keep) zeros — the paper's "no change to the interconnect"
+property: nothing outside the chain is touched.
+
+Pure-jnp oracles for every collective live in :mod:`.chainwrite_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Axis = str | tuple[str, ...]
+
+# When True, ring/chain scans are fully unrolled. The dry-run sets this
+# so every ppermute appears as its own HLO op and the §Roofline
+# collective-bytes parser counts true wire traffic (a rolled scan's
+# body is counted once regardless of trip count).
+_STATIC_UNROLL = False
+
+
+def set_static_unroll(value: bool) -> None:
+    global _STATIC_UNROLL
+    _STATIC_UNROLL = bool(value)
+
+
+def _scan(body, carry, xs):
+    import numpy as _np
+
+    length = int(xs.shape[0]) if hasattr(xs, "shape") else len(xs)
+    return lax.scan(
+        body, carry, xs, unroll=length if _STATIC_UNROLL else 1
+    )
+
+
+def _axis_index(axis_name: Axis) -> jax.Array:
+    """Linearized index over one axis name or a tuple of axis names."""
+    if isinstance(axis_name, (tuple, list)):
+        idx = lax.axis_index(axis_name[0])
+        for name in axis_name[1:]:
+            idx = idx * lax.axis_size(name) + lax.axis_index(name)
+        return idx
+    return lax.axis_index(axis_name)
+
+
+def chain_edges(order: Sequence[int], *, wrap: bool = False) -> list[tuple[int, int]]:
+    """Directed ppermute pairs for a chain (optionally closed ring)."""
+    edges = [(int(a), int(b)) for a, b in zip(order, order[1:])]
+    if wrap and len(order) > 1:
+        edges.append((int(order[-1]), int(order[0])))
+    return edges
+
+
+def _ppermute(x: jax.Array, axis_name: Axis, perm: list[tuple[int, int]]) -> jax.Array:
+    return lax.ppermute(x, axis_name, perm)
+
+
+# ---------------------------------------------------------------------------
+# P2MP broadcast (the paper's core operation)
+# ---------------------------------------------------------------------------
+
+
+def chain_broadcast(
+    x: jax.Array,
+    axis_name: Axis,
+    order: Sequence[int],
+    *,
+    num_frames: int = 1,
+) -> jax.Array:
+    """Multicast ``x`` from device ``order[0]`` to every device in
+    ``order`` by store-and-forward chaining (paper §III-A/§III-C).
+
+    ``x`` must be materialized on the chain head (other devices pass a
+    same-shaped array whose value is ignored). Devices on the axis that
+    are not in ``order`` return zeros. With ``num_frames > 1`` the
+    payload's leading dimension is sliced into frames that pipeline
+    through the chain — one scan step per frame-hop slot, F + L - 2
+    steps total.
+    """
+    order = tuple(int(o) for o in order)
+    if len(order) == 0:
+        raise ValueError("empty chain")
+    head = order[0]
+    idx = _axis_index(axis_name)
+    is_head = idx == head
+    x = jnp.where(is_head, x, jnp.zeros_like(x))
+    if len(order) == 1:
+        return x
+    edges = chain_edges(order, wrap=False)
+
+    if num_frames <= 1:
+        # Non-pipelined: the whole payload hops down the chain, one
+        # sequential ppermute per edge; every member keeps a copy as the
+        # payload passes through (store-and-forward of a single frame).
+        out = x
+        buf = x
+        order_arr = jnp.asarray(order)
+        for step in range(len(order) - 1):
+            buf = _ppermute(buf, axis_name, [edges[step]])
+            receiver = order_arr[step + 1]
+            out = jnp.where(idx == receiver, buf, out)
+        return out
+
+    if x.shape[0] % num_frames != 0:
+        raise ValueError(
+            f"leading dim {x.shape[0]} not divisible by num_frames={num_frames}"
+        )
+    frames = x.reshape((num_frames, x.shape[0] // num_frames) + x.shape[1:])
+    order_arr = jnp.asarray(order)
+    # Ring position of this device in the chain; -1 (→ L, clamped out of
+    # range) for non-members.
+    member = (order_arr == idx).any()
+    pos = jnp.argmax(order_arr == idx)  # 0 if non-member; masked below
+    L = len(order)
+    T = num_frames + L - 2  # scan steps
+
+    def step(carry, t):
+        buf, out = carry
+        # Head injects frame t while frames remain; members forward the
+        # frame they hold. (Head's "buf" is its injection register.)
+        t_clamped = jnp.minimum(t, num_frames - 1)
+        inject = lax.dynamic_index_in_dim(frames, t_clamped, axis=0, keepdims=False)
+        buf = jnp.where(is_head & (t < num_frames), inject, buf)
+        buf = _ppermute(buf, axis_name, edges)
+        # After hop t, the device at chain position p holds frame t-(p-1).
+        fidx = t - (pos - 1)
+        valid = member & (pos > 0) & (fidx >= 0) & (fidx < num_frames)
+        fidx_c = jnp.clip(fidx, 0, num_frames - 1)
+        current = lax.dynamic_index_in_dim(out, fidx_c, axis=0, keepdims=False)
+        new = jnp.where(valid, buf, current)
+        out = lax.dynamic_update_index_in_dim(out, new, fidx_c, axis=0)
+        return (buf, out), None
+
+    buf0 = jnp.zeros_like(frames[0])
+    out0 = jnp.where(is_head, frames, jnp.zeros_like(frames))
+    (_, out), _ = _scan(step, (buf0, out0), jnp.arange(T))
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Ring collectives over a scheduled order
+# ---------------------------------------------------------------------------
+
+
+def chain_all_gather(
+    x: jax.Array,
+    axis_name: Axis,
+    order: Sequence[int] | None = None,
+    *,
+    tiled: bool = False,
+) -> jax.Array:
+    """Ring all-gather over a scheduled ring order.
+
+    Every device contributes ``x``; returns the stacked (axis 0) —
+    or, with ``tiled=True``, concatenated — shards indexed by *device
+    id along the axis* (standard all_gather semantics, so this is a
+    drop-in for ``lax.all_gather`` regardless of ring order).
+    """
+    L = _axis_size(axis_name)
+    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
+    if sorted(order) != list(range(L)):
+        raise ValueError("ring order must be a permutation of the whole axis")
+    idx = _axis_index(axis_name)
+    order_arr = jnp.asarray(order)
+    pos = jnp.argmax(order_arr == idx)
+    edges = chain_edges(order, wrap=True)
+
+    out = jnp.zeros((L,) + x.shape, x.dtype)
+    out = lax.dynamic_update_index_in_dim(out, x, idx, axis=0)
+
+    def step(carry, s):
+        buf, out = carry
+        buf = _ppermute(buf, axis_name, edges)
+        src = order_arr[(pos - s) % L]  # origin device of the shard just received
+        out = lax.dynamic_update_index_in_dim(out, buf, src, axis=0)
+        return (buf, out), None
+
+    (_, out), _ = _scan(step, (x, out), jnp.arange(1, L))
+    if tiled:
+        out = out.reshape((L * x.shape[0],) + x.shape[1:])
+    return out
+
+
+def chain_reduce_scatter(
+    x: jax.Array,
+    axis_name: Axis,
+    order: Sequence[int] | None = None,
+) -> jax.Array:
+    """Ring reduce-scatter over a scheduled ring order.
+
+    ``x`` has leading dim L (one chunk per device id along the axis);
+    returns the fully-reduced chunk owned by this device
+    (``sum_over_devices(x)[my_id]``).
+    """
+    L = _axis_size(axis_name)
+    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
+    if sorted(order) != list(range(L)):
+        raise ValueError("ring order must be a permutation of the whole axis")
+    if x.shape[0] != L:
+        raise ValueError(f"leading dim {x.shape[0]} != axis size {L}")
+    idx = _axis_index(axis_name)
+    order_arr = jnp.asarray(order)
+    pos = jnp.argmax(order_arr == idx)
+    edges = chain_edges(order, wrap=True)
+
+    # Chunks are addressed by ring position: the chunk that must end at
+    # ring position p is the one for device order[p]. The partial for
+    # position j starts at position j+1 (holding its local chunk) and
+    # travels L-1 hops, accumulating every member's contribution.
+    start_chunk = order_arr[(pos - 1) % L]
+    buf = lax.dynamic_index_in_dim(x, start_chunk, axis=0, keepdims=False)
+
+    def step(buf, s):
+        buf = _ppermute(buf, axis_name, edges)
+        j = order_arr[(pos - s - 1) % L]
+        buf = buf + lax.dynamic_index_in_dim(x, j, axis=0, keepdims=False)
+        return buf, None
+
+    buf, _ = _scan(step, buf, jnp.arange(1, L))
+    return buf
+
+
+def chain_all_reduce(
+    x: jax.Array,
+    axis_name: Axis,
+    order: Sequence[int] | None = None,
+) -> jax.Array:
+    """Ring all-reduce = reduce-scatter + all-gather on the scheduled
+    ring (bandwidth-optimal: 2·(L-1)/L of the payload per link)."""
+    L = _axis_size(axis_name)
+    lead = x.shape[0]
+    pad = (-lead) % L
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+    chunks = xp.reshape((L, xp.shape[0] // L) + x.shape[1:])
+    own = chain_reduce_scatter(chunks, axis_name, order)
+    full = chain_all_gather(own, axis_name, order, tiled=True)
+    return full[:lead] if pad else full
+
+
+def chain_all_to_all(
+    x: jax.Array,
+    axis_name: Axis,
+    order: Sequence[int] | None = None,
+) -> jax.Array:
+    """Ring all-to-all (MoE dispatch): ``x`` has leading dim L, chunk
+    ``x[d]`` is destined to device ``d``. Returns stacked chunks
+    received from every device (``out[s]`` = chunk sent by device s).
+
+    Implemented as L-1 rotations of the scheduled ring: at each step
+    every device forwards the not-yet-delivered chunks one hop and
+    keeps the chunk addressed to it — each chunk travels exactly its
+    ring distance, the chain analogue of per-pair P2P transfers.
+    """
+    L = _axis_size(axis_name)
+    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
+    if sorted(order) != list(range(L)):
+        raise ValueError("ring order must be a permutation of the whole axis")
+    if x.shape[0] != L:
+        raise ValueError(f"leading dim {x.shape[0]} != axis size {L}")
+    idx = _axis_index(axis_name)
+    order_arr = jnp.asarray(order)
+    pos = jnp.argmax(order_arr == idx)
+    edges = chain_edges(order, wrap=True)
+
+    out = jnp.zeros_like(x)
+    out = lax.dynamic_update_index_in_dim(
+        out, lax.dynamic_index_in_dim(x, idx, axis=0, keepdims=False), idx, axis=0
+    )
+
+    def step(carry, s):
+        buf, out = carry
+        buf = _ppermute(buf, axis_name, edges)
+        # After s hops, this device holds the chunk-train of the ring
+        # predecessor at distance s: origin device order[(pos - s) % L].
+        src = order_arr[(pos - s) % L]
+        mine = lax.dynamic_index_in_dim(buf, idx, axis=0, keepdims=False)
+        out = lax.dynamic_update_index_in_dim(out, mine, src, axis=0)
+        return (buf, out), None
+
+    (_, out), _ = _scan(step, (x, out), jnp.arange(1, L))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# XLA-native baselines (the "network-layer multicast" analogue)
+# ---------------------------------------------------------------------------
+
+
+def xla_broadcast(x: jax.Array, axis_name: Axis, root: int = 0) -> jax.Array:
+    """Broadcast via the fabric's native reduction (baseline)."""
+    idx = _axis_index(axis_name)
+    return lax.psum(jnp.where(idx == root, x, jnp.zeros_like(x)), axis_name)
+
+
+def _axis_size(axis_name: Axis) -> int:
+    if isinstance(axis_name, (tuple, list)):
+        return int(
+            functools.reduce(lambda a, n: a * lax.axis_size(n), axis_name, 1)
+        )
+    return int(lax.axis_size(axis_name))

@@ -1,0 +1,53 @@
+"""Pure-numpy oracles for the Chainwrite collectives.
+
+Each function takes the *global* view — ``xs[d]`` is device ``d``'s
+input along the axis — and returns the global stacked outputs, defining
+the semantics :mod:`.chainwrite` must match for any scheduled order.
+Used by tests/test_chainwrite_collectives.py.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def broadcast_ref(
+    xs: np.ndarray, order: Sequence[int]
+) -> np.ndarray:
+    """xs: (L, ...) per-device inputs. Devices in ``order`` end with the
+    head's payload; everyone else ends with zeros."""
+    out = np.zeros_like(xs)
+    head = order[0]
+    for d in order:
+        out[d] = xs[head]
+    return out
+
+
+def all_gather_ref(xs: np.ndarray, tiled: bool = False) -> np.ndarray:
+    """Every device ends with the full stack (device-id indexed) —
+    independent of ring order."""
+    L = xs.shape[0]
+    full = xs if not tiled else xs.reshape((L * xs.shape[1],) + xs.shape[2:])
+    return np.stack([full] * L)
+
+
+def reduce_scatter_ref(xs: np.ndarray) -> np.ndarray:
+    """xs: (L, L, chunk...) — xs[d][j] is device d's contribution to
+    chunk j. Device d ends with sum_d' xs[d'][d]."""
+    L = xs.shape[0]
+    total = xs.sum(axis=0)  # (L, chunk...)
+    return np.stack([total[d] for d in range(L)])
+
+
+def all_reduce_ref(xs: np.ndarray) -> np.ndarray:
+    """Every device ends with the elementwise sum."""
+    total = xs.sum(axis=0)
+    return np.stack([total] * xs.shape[0])
+
+
+def all_to_all_ref(xs: np.ndarray) -> np.ndarray:
+    """xs: (L, L, chunk...) — xs[s][d] is the chunk device s sends to
+    device d. Device d ends with out[s] = xs[s][d] (transpose)."""
+    return np.swapaxes(xs, 0, 1)

@@ -1,0 +1,294 @@
+"""Chainwrite sequence scheduling (paper §III-D).
+
+Chainwrite exposes the destination traversal order; the total number of
+link traversals ("hops") of a P2MP task is the sum of XY-route lengths
+between consecutive chain members. Two schedulers from the paper:
+
+* :func:`greedy_schedule` — Alg. 1: iteratively pick the next
+  destination whose XY path does not overlap already-used links and is
+  shortest; fall back to the nearest remaining destination when no
+  link-disjoint candidate exists. O(N^2 * path) — just-in-time.
+
+* :func:`tsp_schedule` — open-path TSP on the XY-distance matrix.
+  The paper uses OR-Tools; OR-Tools is unavailable offline so we ship
+  our own solver: exact Held–Karp DP for small instances, and
+  nearest-neighbour + 2-opt + Or-opt local search beyond that. The
+  exact solver is the oracle for the heuristic in tests.
+
+Both return the destination visit order (the source C0 is the implicit
+chain head and is not part of the returned list), matching Alg. 1.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Callable, Sequence
+
+from .topology import Coord, Link, MeshTopology
+
+# ---------------------------------------------------------------------------
+# Paper Alg. 1 — greedy link-disjoint heuristic
+# ---------------------------------------------------------------------------
+
+
+def greedy_schedule(
+    topo: MeshTopology,
+    destinations: Sequence[int],
+    source: int = 0,
+) -> list[int]:
+    """Greedy Chainwrite ordering (paper Algorithm 1).
+
+    Starts from the destination closest to the source, then repeatedly
+    selects the candidate whose XY path from the current chain tail
+    (a) does not overlap any previously used link and (b) has the
+    fewest hops; when no overlap-free candidate exists, falls back to
+    the nearest remaining destination.
+    """
+    if not destinations:
+        return []
+    remaining = list(dict.fromkeys(destinations))  # dedupe, keep order
+    # Start from the destination closest to the source (paper: min(D),
+    # "dest closest to C0" — C0 is node 0 at the origin; we use the
+    # actual XY distance which coincides with min-ID on their layout).
+    start = min(remaining, key=lambda d: (topo.distance(source, d), d))
+    order = [start]
+    remaining.remove(start)
+    used_path: set[Link] = set(topo.xy_path(source, start))
+
+    while remaining:
+        best: int | None = None
+        best_hops = topo.nx + topo.ny  # upper bound as in Alg. 1
+        best_path: list[Link] = []
+        tail = order[-1]
+        for cand in remaining:
+            path = topo.xy_path(tail, cand)
+            if not (set(path) & used_path) and len(path) < best_hops:
+                best, best_hops, best_path = cand, len(path), path
+        if best is None:  # fallback: shortest path regardless of overlap
+            best = min(remaining, key=lambda c: (topo.distance(tail, c), c))
+            best_path = topo.xy_path(tail, best)
+        order.append(best)
+        used_path.update(best_path)
+        remaining.remove(best)
+    return order
+
+
+# ---------------------------------------------------------------------------
+# Open-path TSP scheduler
+# ---------------------------------------------------------------------------
+
+
+def _pairwise_dist(
+    topo: MeshTopology, nodes: Sequence[int]
+) -> list[list[int]]:
+    return [[topo.distance(a, b) for b in nodes] for a in nodes]
+
+
+def _held_karp_open_path(dist: list[list[int]]) -> list[int]:
+    """Exact open-path TSP from node 0 (the source) via DP.
+
+    dist is (n+1)x(n+1) with index 0 = source. Returns visiting order of
+    indices 1..n (0-based into dist). O(2^n * n^2); used for n <= 13.
+    """
+    n = len(dist) - 1
+    if n == 0:
+        return []
+    FULL = 1 << n
+    INF = float("inf")
+    # dp[mask][j] = best cost to start at source, visit set `mask`,
+    # ending at destination j (0-based in 0..n-1 -> dist index j+1).
+    dp = [[INF] * n for _ in range(FULL)]
+    parent: list[list[int]] = [[-1] * n for _ in range(FULL)]
+    for j in range(n):
+        dp[1 << j][j] = dist[0][j + 1]
+    for mask in range(FULL):
+        row = dp[mask]
+        for j in range(n):
+            cj = row[j]
+            if cj == INF or not (mask >> j) & 1:
+                continue
+            dj = dist[j + 1]
+            for k in range(n):
+                if (mask >> k) & 1:
+                    continue
+                nmask = mask | (1 << k)
+                nc = cj + dj[k + 1]
+                if nc < dp[nmask][k]:
+                    dp[nmask][k] = nc
+                    parent[nmask][k] = j
+    last = min(range(n), key=lambda j: dp[FULL - 1][j])
+    order_rev = []
+    mask, j = FULL - 1, last
+    while j != -1:
+        order_rev.append(j)
+        pj = parent[mask][j]
+        mask ^= 1 << j
+        j = pj
+    return order_rev[::-1]
+
+
+def _path_cost(dist: list[list[int]], order: list[int]) -> int:
+    cost = dist[0][order[0] + 1]
+    for a, b in zip(order, order[1:]):
+        cost += dist[a + 1][b + 1]
+    return cost
+
+
+def _nearest_neighbour(dist: list[list[int]]) -> list[int]:
+    n = len(dist) - 1
+    unvisited = set(range(n))
+    order: list[int] = []
+    cur = 0  # dist index of source
+    while unvisited:
+        nxt = min(unvisited, key=lambda j: (dist[cur][j + 1], j))
+        order.append(nxt)
+        unvisited.remove(nxt)
+        cur = nxt + 1
+    return order
+
+
+def _two_opt(dist: list[list[int]], order: list[int], max_rounds: int = 60) -> list[int]:
+    """2-opt + Or-opt (segment relocation, len 1-3) for the open path.
+
+    Moves are evaluated with O(1) endpoint deltas (node 0 of ``dist`` is
+    the fixed source; the path end is open), so a full improvement round
+    is O(n^2) rather than O(n^3).
+    """
+    n = len(order)
+    if n < 2:
+        return list(order)
+    # tour[0] = source sentinel (dist index 0); tour[i>0] = dist index of
+    # the (i-1)-th visited destination.
+    tour = [0] + [i + 1 for i in order]
+    m = len(tour)  # m = n + 1
+
+    def d(i: int, j: int) -> int:
+        return dist[tour[i]][tour[j]]
+
+    for _ in range(max_rounds):
+        improved = False
+        # 2-opt: reverse tour[i..j] for 1 <= i <= j <= m-1. Open path:
+        # delta = d(i-1, j) - d(i-1, i) + (d(j, j+1) after - before if
+        # j is not the last node).
+        for i in range(1, m - 1):
+            for j in range(i + 1, m):
+                delta = d(i - 1, j) - d(i - 1, i)
+                if j < m - 1:
+                    delta += d(i, j + 1) - d(j, j + 1)
+                if delta < 0:
+                    tour[i : j + 1] = tour[i : j + 1][::-1]
+                    improved = True
+        # Or-opt: relocate segment tour[i..i+seg-1] to after position k.
+        for seg in (1, 2, 3):
+            i = 1
+            while i + seg <= m:
+                a, b = i - 1, i + seg  # neighbours of the segment
+                # cost removed by excising the segment:
+                gain = d(a, i) + (d(i + seg - 1, b) if b < m else 0)
+                bridge = dist[tour[a]][tour[b]] if b < m else 0
+                best_k, best_delta = -1, -1e-9
+                for k in range(1, m):
+                    if i - 1 <= k <= i + seg - 1:
+                        continue  # overlaps/adjacent-left of segment
+                    # insert segment between tour[k] and tour[k+1]
+                    add = dist[tour[k]][tour[i]]
+                    if k + 1 < m:
+                        add += dist[tour[i + seg - 1]][tour[k + 1]]
+                        add -= dist[tour[k]][tour[k + 1]]
+                    delta = bridge + add - gain
+                    if delta < best_delta:
+                        best_k, best_delta = k, delta
+                if best_k >= 0:
+                    segment = tour[i : i + seg]
+                    del tour[i : i + seg]
+                    k = best_k if best_k < i else best_k - seg
+                    tour[k + 1 : k + 1] = segment
+                    improved = True
+                else:
+                    i += 1
+        if not improved:
+            break
+    return [t - 1 for t in tour[1:]]
+
+
+def tsp_schedule(
+    topo: MeshTopology,
+    destinations: Sequence[int],
+    source: int = 0,
+    exact_threshold: int = 13,
+) -> list[int]:
+    """Open-path TSP Chainwrite ordering (paper §III-D strategy 2).
+
+    Exact (Held–Karp) for ≤ ``exact_threshold`` destinations, otherwise
+    nearest-neighbour + 2-opt/Or-opt local search.
+    """
+    dests = list(dict.fromkeys(destinations))
+    if not dests:
+        return []
+    nodes = [source] + dests
+    dist = _pairwise_dist(topo, nodes)
+    if len(dests) <= exact_threshold:
+        idx_order = _held_karp_open_path(dist)
+    else:
+        idx_order = _two_opt(dist, _nearest_neighbour(dist))
+    return [dests[i] for i in idx_order]
+
+
+def naive_schedule(
+    topo: MeshTopology, destinations: Sequence[int], source: int = 0
+) -> list[int]:
+    """Naive ordering by cluster ID (the paper's baseline in Fig. 6)."""
+    del topo, source
+    return sorted(dict.fromkeys(destinations))
+
+
+SCHEDULERS: dict[str, Callable[..., list[int]]] = {
+    "naive": naive_schedule,
+    "greedy": greedy_schedule,
+    "tsp": tsp_schedule,
+}
+
+
+# ---------------------------------------------------------------------------
+# Hop accounting (paper Fig. 6 metric)
+# ---------------------------------------------------------------------------
+
+
+def chain_total_hops(
+    topo: MeshTopology, order: Sequence[int], source: int = 0
+) -> int:
+    """Total link traversals of a Chainwrite visiting ``order``."""
+    if not order:
+        return 0
+    hops = topo.distance(source, order[0])
+    for a, b in zip(order, order[1:]):
+        hops += topo.distance(a, b)
+    return hops
+
+
+def unicast_total_hops(
+    topo: MeshTopology, destinations: Sequence[int], source: int = 0
+) -> int:
+    """Total link traversals of N independent unicasts (iDMA model)."""
+    return sum(topo.distance(source, d) for d in destinations)
+
+
+def multicast_total_hops(
+    topo: MeshTopology, destinations: Sequence[int], source: int = 0
+) -> int:
+    """Link traversals of XY network-layer multicast (shared prefixes)."""
+    return len(topo.multicast_tree_links(source, list(destinations)))
+
+
+def brute_force_schedule(
+    topo: MeshTopology, destinations: Sequence[int], source: int = 0
+) -> list[int]:
+    """Exhaustive optimal order — test oracle only (n <= 8)."""
+    dests = list(dict.fromkeys(destinations))
+    best = None
+    best_cost = None
+    for perm in itertools.permutations(dests):
+        c = chain_total_hops(topo, perm, source)
+        if best_cost is None or c < best_cost:
+            best, best_cost = list(perm), c
+    return best or []

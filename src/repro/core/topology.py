@@ -1,0 +1,118 @@
+"""2-D mesh / torus topology with XY (dimension-ordered) routing.
+
+This is the substrate both for the paper-faithful NoC model (SoC mesh,
+Fig. 1/6) and for scheduling chain orders on the TPU ICI torus: a TPU
+pod slice is a 2-D (or 3-D) torus of chips, and dimension-ordered
+routing is the standard ICI route, so the same path/hop machinery
+serves both.
+
+Coordinates are ``(x, y)`` with ``node_id = y * nx + x`` (row-major by
+rows of ``nx``), matching the paper's cluster numbering (C0 at origin).
+Links are directed edges between adjacent nodes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+Coord = tuple[int, int]
+Link = tuple[Coord, Coord]  # directed (src, dst), adjacent nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """A 2-D mesh (optionally wrap-around torus) with XY routing."""
+
+    nx: int
+    ny: int
+    torus: bool = False
+
+    # -- node helpers -------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return self.nx * self.ny
+
+    def coord(self, node_id: int) -> Coord:
+        if not 0 <= node_id < self.num_nodes:
+            raise ValueError(f"node {node_id} outside {self.nx}x{self.ny} mesh")
+        return (node_id % self.nx, node_id // self.nx)
+
+    def node_id(self, coord: Coord) -> int:
+        x, y = coord
+        if not (0 <= x < self.nx and 0 <= y < self.ny):
+            raise ValueError(f"coord {coord} outside {self.nx}x{self.ny} mesh")
+        return y * self.nx + x
+
+    def nodes(self) -> Iterator[int]:
+        return iter(range(self.num_nodes))
+
+    # -- distance / routing -------------------------------------------
+    def _axis_steps(self, a: int, b: int, n: int) -> list[int]:
+        """Unit steps along one axis from a to b (shortest direction)."""
+        if a == b:
+            return []
+        if not self.torus:
+            step = 1 if b > a else -1
+            return [step] * abs(b - a)
+        fwd = (b - a) % n
+        bwd = (a - b) % n
+        if fwd <= bwd:
+            return [1] * fwd
+        return [-1] * bwd
+
+    def distance(self, a: Coord | int, b: Coord | int) -> int:
+        """Hop count of the XY route (Manhattan / torus-Manhattan)."""
+        ca = self.coord(a) if isinstance(a, int) else a
+        cb = self.coord(b) if isinstance(b, int) else b
+        return len(self._axis_steps(ca[0], cb[0], self.nx)) + len(
+            self._axis_steps(ca[1], cb[1], self.ny)
+        )
+
+    def xy_path(self, src: Coord | int, dst: Coord | int) -> list[Link]:
+        """Directed links of the XY (X-first, then Y) route src -> dst."""
+        cur = self.coord(src) if isinstance(src, int) else src
+        dst_c = self.coord(dst) if isinstance(dst, int) else dst
+        links: list[Link] = []
+        for sx in self._axis_steps(cur[0], dst_c[0], self.nx):
+            nxt = ((cur[0] + sx) % self.nx, cur[1])
+            links.append((cur, nxt))
+            cur = nxt
+        for sy in self._axis_steps(cur[1], dst_c[1], self.ny):
+            nxt = (cur[0], (cur[1] + sy) % self.ny)
+            links.append((cur, nxt))
+            cur = nxt
+        return links
+
+    def path_nodes(self, src: Coord | int, dst: Coord | int) -> list[Coord]:
+        """Nodes visited on the XY route, inclusive of both endpoints."""
+        src_c = self.coord(src) if isinstance(src, int) else src
+        links = self.xy_path(src_c, dst)
+        return [src_c] + [l[1] for l in links]
+
+    # -- multicast tree (network-layer baseline) ----------------------
+    def multicast_tree_links(
+        self, src: Coord | int, dsts: Sequence[Coord | int]
+    ) -> set[Link]:
+        """Links used by XY-routed network-layer multicast.
+
+        Models the ESP-style router behaviour: one packet follows
+        XY routes to every destination; branches that share a prefix
+        share the links (the router replicates at divergence points).
+        The link set is therefore the union of the per-destination XY
+        paths.
+        """
+        links: set[Link] = set()
+        for d in dsts:
+            links.update(self.xy_path(src, d))
+        return links
+
+    def snake_order(self) -> list[int]:
+        """Boustrophedon (snake) node order — a Hamiltonian path on the
+        mesh where every hop is 1 physical link. The natural 'perfect'
+        chain order when the destination set is the whole mesh."""
+        order: list[int] = []
+        for y in range(self.ny):
+            xs = range(self.nx) if y % 2 == 0 else range(self.nx - 1, -1, -1)
+            order.extend(self.node_id((x, y)) for x in xs)
+        return order

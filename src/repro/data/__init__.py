@@ -1,0 +1,1 @@
+from .pipeline import MarkovSource, Prefetcher, UniformSource, make_device_placer

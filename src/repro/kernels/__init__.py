@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots (validated in
+interpret mode on CPU; Mosaic-compiled on TPU):
+
+* :mod:`.relayout`        — DSE blocked-layout transform (paper P1/P2).
+* :mod:`.flash_attention` — blockwise attention (prefill hot spot),
+  causal + sliding-window, GQA via index maps.
+"""

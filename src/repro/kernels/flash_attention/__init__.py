@@ -1,0 +1,1 @@
+from .ops import attention_ref, flash_attention

@@ -1,0 +1,85 @@
+"""Chunked (online-softmax) attention in pure JAX — the lowerable twin
+of the Pallas flash kernel.
+
+The Pallas kernel is the TPU execution path; this ``lax.scan`` over KV
+chunks is semantically identical, runs/lowers on every backend (the
+512-device dry-run can't lower Mosaic), and has the same O(S·chunk)
+memory profile, so roofline terms derived from it transfer to the
+kernel. Supports GQA (grouped heads without materializing repeated
+K/V), causal masking and sliding windows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "chunk")
+)
+def attention_chunked(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+
+    C = min(chunk, S)
+    pad = (-S) % C
+    Sk = S + pad
+    nc = Sk // C
+    if pad:  # pad K/V with masked-out slots
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, group, S, D)
+    kc = jnp.moveaxis(k.reshape(B, Hkv, nc, C, D), 2, 0)  # (nc,B,Hkv,C,D)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nc, C, D), 2, 0)
+    starts = jnp.arange(nc) * C
+    rows = jnp.arange(S)[:, None]  # (S, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, start = xs
+        s = jnp.einsum(
+            "bhgsd,bhcd->bhgsc", qg, kb.astype(jnp.float32)
+        )  # (B,Hkv,g,S,C)
+        cols = start + jnp.arange(C)[None, :]  # (1, C)
+        mask = cols < S  # padding
+        if causal:
+            mask = mask & (cols <= rows)
+        if window is not None:
+            mask = mask & (cols > rows - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = s.max(-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhgsc,bhcd->bhgsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group, S, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, S, 1), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, group, S, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, acc0), (kc, vc, starts))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0
+    out = (acc / l).reshape(B, H, S, D)
+    return out.astype(q.dtype)

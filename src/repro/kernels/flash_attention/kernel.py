@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: blockwise (flash) attention with online softmax.
+
+Grid is ``(B*H, num_q_blocks, num_kv_blocks)``; the kv dimension is the
+innermost (fastest-iterating) grid axis, so the f32 accumulator, running
+max and running sum live in VMEM scratch and persist across kv steps —
+the canonical TPU flash-attention schedule. Q/K/V blocks are staged via
+BlockSpec into VMEM; GQA is handled in the K/V index maps (query head h
+reads kv head ``h // group``), so K/V are never materialized per-head.
+
+VMEM working set per step: q(block_q×D) + k,v(block_k×D) + acc — with
+the default 512/512 blocks and D=128 at bf16 that is < 1 MiB.
+
+Masking supports causal and sliding-window (SWA); fully-masked kv blocks
+are skipped via ``pl.when`` so SWA cost scales with the window, not the
+sequence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    block_q: int, block_k: int, num_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Block-level relevance: skip kv blocks that are entirely masked.
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest query row may look back `window-1`; block relevant if
+        # its newest column >= oldest allowed column of oldest query.
+        relevant &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(relevant)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)  # (block_k, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (block_q, 1)
+        l_prev = l_ref[...]
+        m_cur = s.max(-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    scale = float(D ** -0.5) if scale is None else float(scale)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    if S % block_q or S % block_k:
+        raise ValueError(f"seq {S} must be divisible by blocks {block_q}/{block_k}")
+    num_q, num_kv = S // block_q, S // block_k
+
+    qr = q.reshape(B * H, S, D)
+    kr = k.reshape(B * Hkv, S, D)
+    vr = v.reshape(B * Hkv, S, D)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b, h = bh // H, bh % H
+        return (b * Hkv + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=num_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, num_q, num_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running sum l
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+Semantics: softmax(Q K^T * scale + mask) V with optional causal masking
+and sliding-window attention (SWA, window counts how many past tokens a
+query may attend to, inclusive of itself). GQA: K/V have ``num_kv_heads``
+heads; query head h attends to kv head ``h // (H // H_kv)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, Hkv, S, D)
+    v: jnp.ndarray,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    group = H // Hkv
+    scale = D ** -0.5 if scale is None else scale
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: blocked-layout transform (the Torrent DSE).
+
+The paper's Data Streaming Engine performs ND-affine reads so a matrix
+can leave the source memory already in the destination layout (the P1/P2
+workloads transform ``MNM16N8 -> MNM8N8`` on the fly). On TPU the same
+job is an HBM->VMEM->HBM tiled relayout: each grid step stages one
+*super-tile* — ``lcm`` of the two block heights × ``lcm`` of the two
+block widths, padded up to MXU/VPU-friendly multiples — in VMEM,
+re-tiles it with registers only (transpose/reshape), and writes it back
+in the destination blocking.
+
+VMEM budget: one super-tile in, one out. With the default 256×256 f32
+super-tile that is 2 × 256 KiB, well inside the ~16 MiB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _supertile(src_block: tuple[int, int], dst_block: tuple[int, int],
+               shape: tuple[int, int], target: int = 256) -> tuple[int, int]:
+    """Smallest VMEM super-tile compatible with both blockings, scaled
+    up toward ``target`` (sublane/lane-aligned) when it divides shape."""
+    lm = math.lcm(src_block[0], dst_block[0])
+    ln = math.lcm(src_block[1], dst_block[1])
+    M, N = shape
+    tm, tn = lm, ln
+    while tm * 2 <= min(target, M) and M % (tm * 2) == 0:
+        tm *= 2
+    while tn * 2 <= min(target, N) and N % (tn * 2) == 0:
+        tn *= 2
+    return tm, tn
+
+
+def _relayout_kernel(x_ref, o_ref, *, tm: int, tn: int,
+                     src_block: tuple[int, int], dst_block: tuple[int, int]):
+    sbm, sbn = src_block
+    dbm, dbn = dst_block
+    # x_ref: (tm//sbm, tn//sbn, sbm, sbn) — the super-tile in src blocking.
+    x = x_ref[...]
+    dense = x.transpose(0, 2, 1, 3).reshape(tm, tn)
+    out = dense.reshape(tm // dbm, dbm, tn // dbn, dbn).transpose(0, 2, 1, 3)
+    o_ref[...] = out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shape", "src_block", "dst_block", "interpret"),
+)
+def relayout_pallas(
+    x: jax.Array,
+    shape: tuple[int, int],
+    src_block: tuple[int, int],
+    dst_block: tuple[int, int],
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked(src_block) -> blocked(dst_block) layout transform.
+
+    ``x``: (M//sbm, N//sbn, sbm, sbn). Returns (M//dbm, N//dbn, dbm, dbn).
+    """
+    M, N = shape
+    sbm, sbn = src_block
+    dbm, dbn = dst_block
+    if (M % sbm, N % sbn, M % dbm, N % dbn) != (0, 0, 0, 0):
+        raise ValueError(f"blocks {src_block}/{dst_block} must divide {shape}")
+    tm, tn = _supertile(src_block, dst_block, shape)
+    grid = (M // tm, N // tn)
+    out_shape = jax.ShapeDtypeStruct((M // dbm, N // dbn, dbm, dbn), x.dtype)
+    kernel = functools.partial(
+        _relayout_kernel, tm=tm, tn=tn, src_block=src_block, dst_block=dst_block
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (tm // sbm, tn // sbn, sbm, sbn),
+                lambda i, j: (i, j, 0, 0),
+            )
+        ],
+        out_specs=pl.BlockSpec(
+            (tm // dbm, tn // dbn, dbm, dbn),
+            lambda i, j: (i, j, 0, 0),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x)

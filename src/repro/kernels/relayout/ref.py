@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the relayout (DSE layout-transform) kernel.
+
+A *blocked layout* ``(bm, bn)`` stores an (M, N) matrix as the 4-D array
+``(M//bm, N//bn, bm, bn)`` — the paper's ``MNM16N8`` notation is block
+height 16 × block width 8 (elements within a block are row-major, blocks
+are row-major over the block grid). The DSE's ND-affine access engine
+converts between such layouts; this oracle defines the semantics the
+Pallas kernel must match.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax.numpy as jnp
+
+_LAYOUT_RE = re.compile(r"^MNM(\d+)N(\d+)$")
+
+
+def parse_layout(layout: str) -> tuple[int, int]:
+    """Parse the paper's layout string, e.g. ``"MNM16N8"`` -> (16, 8)."""
+    m = _LAYOUT_RE.match(layout)
+    if not m:
+        raise ValueError(f"unrecognized layout string: {layout!r}")
+    return int(m.group(1)), int(m.group(2))
+
+
+def blocked_to_dense(x: jnp.ndarray, shape: tuple[int, int]) -> jnp.ndarray:
+    """(M//bm, N//bn, bm, bn) blocked -> (M, N) dense."""
+    mb, nb, bm, bn = x.shape
+    M, N = shape
+    assert mb * bm == M and nb * bn == N, (x.shape, shape)
+    return x.transpose(0, 2, 1, 3).reshape(M, N)
+
+
+def dense_to_blocked(x: jnp.ndarray, block: tuple[int, int]) -> jnp.ndarray:
+    """(M, N) dense -> (M//bm, N//bn, bm, bn) blocked."""
+    M, N = x.shape
+    bm, bn = block
+    assert M % bm == 0 and N % bn == 0, (x.shape, block)
+    return x.reshape(M // bm, bm, N // bn, bn).transpose(0, 2, 1, 3)
+
+
+def relayout_ref(
+    x: jnp.ndarray,
+    shape: tuple[int, int],
+    src_block: tuple[int, int],
+    dst_block: tuple[int, int],
+) -> jnp.ndarray:
+    """Oracle: blocked(src) -> dense -> blocked(dst)."""
+    return dense_to_blocked(blocked_to_dense(x, shape), dst_block)

@@ -1,0 +1,215 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, WITHOUT allocating model memory
+(ShapeDtypeStruct inputs only):
+
+* proof the distribution config is coherent (`.lower().compile()`),
+* ``memory_analysis()``  — per-device bytes (fits-in-HBM evidence),
+* ``cost_analysis()``    — FLOPs / bytes for §Roofline,
+* HLO collective-bytes breakdown (§Roofline collective term).
+
+One cell per process (XLA leaks across big compiles on one core):
+``python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+--mesh single`` runs one cell; ``--all`` spawns subprocesses.
+
+Results land in ``experiments/dryrun/<mesh>/<arch>__<shape>.json``.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             collectives: str = "xla", remat: str = "dots",
+             variant: str = "baseline") -> dict:
+    import jax
+
+    from repro import configs as C
+    from repro.launch import roofline as R
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    ok, reason = C.applicable(arch, shape_name)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "collectives": collectives, "remat": remat, "variant": variant,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, collectives=collectives,
+                      remat=remat, variant=variant)
+    lowered = cell.lower()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    roof = R.extract(compiled)
+    cfg = cell.cfg
+    n_active = _active_params(arch, cfg)
+    tokens = (
+        cell.shape.global_batch * cell.shape.seq_len
+        if cell.shape.kind in ("train", "prefill")
+        else cell.shape.global_batch
+    )
+    mf = R.model_flops(n_active, tokens, cell.shape.kind)
+    chips = mesh.devices.size
+    flops_global = roof.flops * chips
+
+    rec.update(
+        status="ok",
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        chips=chips,
+        memory_analysis=_mem_dict(mem),
+        roofline=roof.as_dict(),
+        model_flops_global=mf,
+        hlo_flops_global=flops_global,
+        useful_flops_ratio=(mf / flops_global) if flops_global else None,
+    )
+    return rec
+
+
+def _active_params(arch: str, cfg) -> int:
+    """Active (per-token) parameter count — MoE counts top-k+shared."""
+    import jax
+
+    from repro.models import transformer as T
+
+    shapes = jax.eval_shape(lambda: T.model_init(jax.random.PRNGKey(0), cfg))
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    if not cfg.num_experts:
+        return total
+    # subtract routed-expert params not active per token
+    moe_layers = sum(
+        1 for i in range(cfg.num_layers) if cfg.layer_spec(i).ffn == "moe"
+    )
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    inactive = moe_layers * per_expert * (cfg.num_experts - cfg.moe_top_k)
+    return total - inactive
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for key in (
+        "temp_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        val = getattr(mem, key, None)
+        if val is not None:
+            out[key] = int(val)
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch")
+    p.add_argument("--shape")
+    p.add_argument("--mesh", choices=("single", "multi"), default="single")
+    p.add_argument("--collectives", choices=("xla", "torrent"), default="xla")
+    p.add_argument("--remat", default="dots")
+    p.add_argument("--variant", default="baseline",
+                   help="optimization bundle from steps.VARIANTS")
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--meshes", default="single,multi")
+    p.add_argument("--timeout", type=int, default=3000)
+    args = p.parse_args()
+
+    if args.all:
+        from repro import configs as C
+
+        failures = []
+        for mesh_kind in args.meshes.split(","):
+            for arch in C.ARCHS:
+                for shape in C.SHAPES:
+                    rc = _run_subprocess(arch, shape, mesh_kind, args)
+                    if rc != 0:
+                        failures.append((mesh_kind, arch, shape))
+        if failures:
+            print("FAILED CELLS:", failures)
+            sys.exit(1)
+        print("ALL CELLS OK")
+        return
+
+    out_dir = os.path.join(args.out, args.mesh)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if args.collectives == "xla" else f"__{args.collectives}"
+    if args.variant != "baseline":
+        suffix += f"__{args.variant}"
+    if args.remat != "dots":
+        suffix += f"__remat-{args.remat}"
+    path = os.path.join(out_dir, f"{args.arch}__{args.shape}{suffix}.json")
+    try:
+        rec = run_cell(
+            args.arch, args.shape, args.mesh, out_dir,
+            collectives=args.collectives, remat=args.remat,
+            variant=args.variant,
+        )
+    except Exception:
+        rec = {
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "status": "error", "traceback": traceback.format_exc(),
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(rec["traceback"], file=sys.stderr)
+        sys.exit(1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    if rec["status"] == "ok":
+        print(
+            f"{args.arch} × {args.shape} × {args.mesh}: OK "
+            f"compile={rec['compile_s']}s dominant={rec['roofline']['dominant']}"
+        )
+    else:
+        print(f"{args.arch} × {args.shape} × {args.mesh}: {rec['status']} ({rec.get('reason','')})")
+
+
+def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
+    out_dir = os.path.join(args.out, mesh_kind)
+    suffix = "" if args.collectives == "xla" else f"__{args.collectives}"
+    path = os.path.join(out_dir, f"{arch}__{shape}{suffix}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            if json.load(f).get("status") in ("ok", "skipped"):
+                print(f"skip (cached): {path}")
+                return 0
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+        "--collectives", args.collectives, "--remat", args.remat,
+        "--out", args.out,
+    ]
+    print("::", " ".join(cmd[3:]), flush=True)
+    try:
+        r = subprocess.run(cmd, timeout=args.timeout)
+        return r.returncode
+    except subprocess.TimeoutExpired:
+        print(f"TIMEOUT: {arch} {shape} {mesh_kind}")
+        return 124
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Hot-spot breakdown of a compiled cell — the dry-run 'profiler'.
+
+With no real TPU, the optimization loop's profile is the trip-count-
+scaled HLO cost: this tool ranks instructions (and opcode classes) by
+bytes / flops / collective bytes so each §Perf iteration can name the
+op it is attacking and by how much.
+
+    PYTHONPATH=src python -m repro.launch.hlo_breakdown \
+        --arch deepseek-v2-lite-16b --shape prefill_32k --top 15
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+from collections import defaultdict
+
+from repro.launch import hlo_cost
+
+
+def breakdown(hlo_text: str) -> tuple[list, dict, dict]:
+    comps = hlo_cost.parse_module(hlo_text)
+    mc = hlo_cost.ModuleCost(comps)
+    items: list = []
+    by_op_bytes: dict[str, float] = defaultdict(float)
+    by_op_flops: dict[str, float] = defaultdict(float)
+
+    def walk(name: str, scale: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for instr in comp.instrs:
+            base = (instr.opcode[:-6] if instr.opcode.endswith("-start")
+                    else instr.opcode)
+            if base == "while":
+                m = hlo_cost._TRIP_RE.search(instr.attrs)
+                trip = int(m.group(1)) if m else 1
+                b = hlo_cost._BODY_RE.search(instr.attrs)
+                c = hlo_cost._COND_RE.search(instr.attrs)
+                if b:
+                    walk(b.group(1), scale * trip)
+                if c:
+                    walk(c.group(1), scale * trip)
+                continue
+            if base in ("call", "async-start"):
+                m = hlo_cost._CALLS_RE.search(instr.attrs)
+                if m:
+                    walk(m.group(1), scale)
+                continue
+            cost = mc.instr_cost(instr, comp)
+            if cost.bytes or cost.flops:
+                meta = ""
+                i = instr.attrs.find('op_name="')
+                if i >= 0:
+                    meta = instr.attrs[i + 9: instr.attrs.find('"', i + 9)]
+                items.append((
+                    cost.bytes * scale, cost.flops * scale, scale,
+                    instr.name, instr.shapes[:1], meta,
+                ))
+                by_op_bytes[base] += cost.bytes * scale
+                by_op_flops[base] += cost.flops * scale
+
+    walk(mc._find_entry(), 1.0)
+    return items, dict(by_op_bytes), dict(by_op_flops)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--variant", default="baseline")
+    p.add_argument("--collectives", default="xla")
+    p.add_argument("--remat", default="dots")
+    p.add_argument("--top", type=int, default=15)
+    p.add_argument("--by", choices=("bytes", "flops"), default="bytes")
+    args = p.parse_args()
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cell = build_cell(args.arch, args.shape, mesh, variant=args.variant,
+                      collectives=args.collectives, remat=args.remat)
+    compiled = cell.lower().compile()
+    items, by_bytes, by_flops = breakdown(compiled.as_text())
+
+    total_b = sum(by_bytes.values())
+    total_f = sum(by_flops.values())
+    print(f"== {args.arch} × {args.shape} ({args.variant}) ==")
+    print(f"total bytes {total_b:.4g}   total flops {total_f:.4g}")
+    print("\n-- by opcode (bytes) --")
+    for op, b in sorted(by_bytes.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {op:25s} {b:10.4g}  ({100 * b / total_b:5.1f}%)")
+    key = 0 if args.by == "bytes" else 1
+    print(f"\n-- top instructions by {args.by} --")
+    for it in sorted(items, key=lambda t: -t[key])[: args.top]:
+        b, f, scale, name, shapes, meta = it
+        print(f"  {b:10.4g}B {f:10.4g}F x{scale:4.0f} {name:38s} "
+              f"{shapes} {meta[:60]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction (single-pod 16×16, multi-pod 2×16×16).
+
+Functions, not module-level constants — importing this module never
+touches jax device state (device count locks on first use)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def _make(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over the actually-present devices (tests/examples)."""
+    n = len(jax.devices())
+    data = (n // model) if data is None else data
+    return _make((data, model), ("data", "model"))

@@ -1,0 +1,183 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device   / peak_flops_per_chip
+    memory     = HLO_bytes_per_device   / hbm_bw_per_chip
+    collective = collective_bytes_per_device / ici_link_bw
+
+``cost_analysis()`` reports the *per-device* SPMD module, so dividing
+by per-chip rates directly gives per-device seconds (algebraically
+identical to global/(chips×rate)). Collective bytes are not in
+cost_analysis — we parse the HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` counted, ``-done`` skipped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0  # token/opaque types
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind *operand* bytes summed over the module.
+
+    Post-optimization HLO prints operands untyped, so operand bytes are
+    derived from the (typed) result shape: all-reduce / all-to-all /
+    collective-permute results equal their operands; all-gather operand
+    = result / group_size; reduce-scatter operand = result × group_size.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue  # async completion — counted at -start
+        op = m.group(2)
+        result_bytes = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(m.group(1))
+        )
+        if op == "all-gather":
+            result_bytes //= _group_size(line)
+        elif op == "reduce-scatter":
+            result_bytes *= _group_size(line)
+        out[op] += result_bytes
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device (trip-count corrected)
+    hbm_bytes: float  # per-device, upper bound (fusion-boundary model)
+    coll_bytes: float  # per-device (wire)
+    coll_breakdown: dict[str, int]
+    xla_raw_flops: float = 0.0  # cost_analysis() (while bodies ×1)
+    xla_raw_bytes: float = 0.0
+    # lower bound: each buffer written once, elementwise fully fused —
+    # the TPU-optimistic end of the memory-term bracket.
+    hbm_bytes_lb: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def memory_lb_s(self) -> float:
+        return self.hbm_bytes_lb / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "collective_breakdown": self.coll_breakdown,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "memory_lb_s": self.memory_lb_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "xla_raw_flops": self.xla_raw_flops,
+            "xla_raw_bytes": self.xla_raw_bytes,
+        }
+
+
+def extract(compiled) -> Roofline:
+    """Roofline terms from the compiled module.
+
+    Primary source is our trip-count-aware HLO cost model
+    (:mod:`.hlo_cost`): XLA's ``cost_analysis()`` visits each ``while``
+    body once, undercounting a scanned N-layer model by ~N×.  The raw
+    XLA numbers are kept alongside for cross-checking.
+    """
+    from . import hlo_cost
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # some backends return [dict]
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    cost = hlo_cost.analyze(compiled.as_text())
+    return Roofline(
+        flops=cost.flops,
+        hbm_bytes=cost.bytes,
+        coll_bytes=cost.coll_bytes,
+        coll_breakdown={k: int(v) for k, v in cost.coll.items()},
+        xla_raw_flops=xla_flops,
+        xla_raw_bytes=xla_bytes,
+        hbm_bytes_lb=cost.bytes_lb,
+    )
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D training / 2·N·D inference forward (per step, global)."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

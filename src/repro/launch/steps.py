@@ -1,0 +1,266 @@
+"""jit-able step builders: train / prefill / serve, with sharding specs.
+
+``build_cell`` is the single entry used by the dry-run, the trainer and
+the benchmarks: given (arch config, shape, mesh) it returns the step
+function plus fully-resolved in/out shardings and ShapeDtypeStruct
+arguments — everything needed to ``jit(...).lower().compile()`` without
+allocating a single parameter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as C
+from repro.configs.shapes import Shape, input_specs
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.parallel.collectives import torrent_grad_reduce
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch × shape × mesh) dry-run/benchmark cell."""
+
+    cfg: ModelConfig
+    shape: Shape
+    mesh: jax.sharding.Mesh
+    step_fn: Callable
+    args: tuple  # ShapeDtypeStructs (or concrete arrays)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(
+            self.step_fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        with jax.set_mesh(self.mesh):
+            return jitted.lower(*self.args)
+
+
+def _sanitize(spec: P | None, mesh) -> P:
+    """Drop axes the mesh doesn't have (e.g. 'pod' on single-pod)."""
+    if spec is None:
+        return P()
+    names = set(mesh.axis_names)
+    out = []
+    for el in spec:
+        if el is None:
+            out.append(None)
+        elif isinstance(el, tuple):
+            kept = tuple(a for a in el if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(el if el in names else None)
+    return P(*out)
+
+
+def _named(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _sanitize(s, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    *,
+    remat: str = "dots",
+    collectives: str = "xla",
+    mesh=None,
+    batch_specs=None,
+    loss_chunks: int = 8,
+    microbatches: int = 1,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` runs gradient accumulation: the global batch is
+    split along dim 0 and scanned, dividing the activation working set
+    by M at unchanged math (equal microbatches ⇒ mean-of-means == global
+    mean) — the HBM-fit lever for the large training cells (§Perf).
+    """
+
+    def grad_fn_local(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch, remat=remat, loss_chunks=loss_chunks),
+            has_aux=True,
+        )(params)
+        return grads, metrics
+
+    def grad_fn(params, batch):
+        if collectives == "torrent":
+            return torrent_grad_reduce(
+                grad_fn_local, mesh, batch_specs
+            )(params, batch)
+        return grad_fn_local(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            M = microbatches
+            split = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch
+            )
+
+            def body(acc, mbatch):
+                grads, metrics = grad_fn(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            acc, ms = jax.lax.scan(body, zeros, split)
+            grads = jax.tree.map(lambda g: g / M, acc)
+            metrics = jax.tree.map(lambda m: m.mean(0), ms)
+        else:
+            grads, metrics = grad_fn(params, batch)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int, *, remat: str = "dots"):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch, max_seq, remat=remat)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, pos, cache):
+        logits, new_cache = T.decode_step(params, cfg, tokens, pos, cache)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly (dry-run entry)
+# ---------------------------------------------------------------------------
+
+
+# Named optimization bundles for the §Perf hillclimb. "baseline" is the
+# paper-faithful configuration; each variant is one recorded change.
+VARIANTS: dict[str, dict] = {
+    "baseline": {},
+    # chunked online-softmax attention (flash twin) — kills the S²
+    # score materialization that dominates every memory term.
+    "chunked": {"attn_impl": "chunked"},
+    # + absorbed MLA decode + bf16 MoE wire + bf16 norms + row-wise
+    # (DP×EP-shardable) MoE dispatch.
+    "opt": {
+        "attn_impl": "chunked", "mla_absorb": True,
+        "moe_bf16_wire": True, "bf16_norm": True, "moe_row_dispatch": True,
+    },
+    # opt + query-sequence-sharded attention (heads ∤ TP archs).
+    "opt-seq": {
+        "attn_impl": "chunked", "mla_absorb": True,
+        "moe_bf16_wire": True, "bf16_norm": True, "moe_row_dispatch": True,
+        "attn_seq_shard": True,
+    },
+}
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: jax.sharding.Mesh,
+    *,
+    collectives: str = "xla",
+    remat: str = "dots",
+    smoke: bool = False,
+    variant: str = "baseline",
+) -> Cell:
+    cfg = C.get_smoke_config(arch) if smoke else C.get_config(arch)
+    if VARIANTS.get(variant):
+        cfg = dataclasses.replace(cfg, **VARIANTS[variant])
+    shape = C.SHAPES[shape_name]
+    tp = mesh.shape.get("model", 1)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+    params_shape = jax.eval_shape(
+        lambda: T.model_init(jax.random.PRNGKey(0), cfg)
+    )
+    pspecs = shd.param_pspecs(params_shape, cfg, tp=tp)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.OptConfig()
+        opt_shape = jax.eval_shape(lambda: adamw.init(params_shape))
+        ospecs = shd.opt_pspecs(pspecs, params_shape, data_size=mesh.shape.get("data", 1))
+        bspecs = shd.batch_pspecs(cfg, shape)
+        bspecs_clean = jax.tree.map(
+            lambda s: _sanitize(s, mesh), bspecs,
+            is_leaf=lambda x: isinstance(x, P) or x is None,
+        )
+        step = make_train_step(
+            cfg, opt_cfg, remat=remat, collectives=collectives,
+            mesh=mesh, batch_specs=bspecs_clean,
+        )
+        return Cell(
+            cfg=cfg, shape=shape, mesh=mesh, step_fn=step,
+            args=(params_shape, opt_shape, specs["batch"]),
+            in_shardings=(
+                _named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspecs)
+            ),
+            out_shardings=(
+                _named(mesh, pspecs), _named(mesh, ospecs), None
+            ),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        bspecs = shd.batch_pspecs(cfg, shape)
+        cache_shape = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, specs["max_seq"])
+        )
+        cspecs = shd.cache_pspecs(cache_shape, cfg, shape, tp=tp)
+        step = make_prefill_step(cfg, specs["max_seq"], remat=remat)
+        return Cell(
+            cfg=cfg, shape=shape, mesh=mesh, step_fn=step,
+            args=(params_shape, specs["batch"]),
+            in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+            out_shardings=(
+                NamedSharding(mesh, _sanitize(P(shd.BATCH_AXES, None), mesh)),
+                _named(mesh, cspecs),
+            ),
+        )
+
+    # decode
+    cspecs = shd.cache_pspecs(specs["cache"], cfg, shape, tp=tp)
+    long_ctx = shape.global_batch == 1
+    tok_spec = P() if long_ctx else _sanitize(P(shd.BATCH_AXES), mesh)
+    step = make_serve_step(cfg)
+    return Cell(
+        cfg=cfg, shape=shape, mesh=mesh, step_fn=step,
+        args=(params_shape, specs["tokens"], specs["pos"], specs["cache"]),
+        in_shardings=(
+            _named(mesh, pspecs),
+            NamedSharding(mesh, tok_spec),
+            NamedSharding(mesh, P()),
+            _named(mesh, cspecs),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, tok_spec),
+            _named(mesh, cspecs),
+        ),
+        donate_argnums=(3,),
+    )

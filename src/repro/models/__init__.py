@@ -1,0 +1,24 @@
+"""Pure-JAX model zoo (no flax): unified decoder-LM framework covering
+dense GQA / MLA / fine-grained MoE / Mamba-2 SSD / hybrid / enc-dec /
+VLM-backbone families. See transformer.py for assembly."""
+
+from .config import LayerSpec, ModelConfig
+from .transformer import (
+    decode_step,
+    forward_hidden,
+    init_cache,
+    loss_fn,
+    model_init,
+    prefill,
+)
+
+__all__ = [
+    "LayerSpec",
+    "ModelConfig",
+    "decode_step",
+    "forward_hidden",
+    "init_cache",
+    "loss_fn",
+    "model_init",
+    "prefill",
+]

@@ -1,0 +1,457 @@
+"""Attention mixers: GQA (+RoPE/M-RoPE/SWA) and MLA (DeepSeek-V2).
+
+Each mixer exposes ``*_init`` and ``*_apply``; apply handles both the
+full-sequence path (training / prefill — optionally through the Pallas
+flash kernel) and the single-token decode path (KV cache update). KV
+caches for SWA archs are ring buffers of ``window`` slots, which is what
+makes ``long_500k`` decode O(window) instead of O(S).
+
+MLA decode is the paper's own FPGA workload (P3/D3 "KV_Matrix_MLA
+Recovery"): the compressed KV (rank ``kv_lora + qk_rope``) is the only
+thing cached; per-head K/V are *recovered* by up-projection at use —
+under tensor parallelism the compressed cache is multicast to all
+shards (Chainwrite) and every shard recovers only its heads' slice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_mrope, apply_rope, cast
+from repro.kernels.flash_attention.chunked import attention_chunked
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+
+NEG_INF = -1e30
+
+
+def _full_attention(qt, kt, vt, cfg: ModelConfig, *, causal: bool):
+    """Dispatch on cfg.attn_impl: 'reference' (materialized S² scores),
+    'chunked' (online-softmax lax.scan — the lowerable flash twin), or
+    'flash' (Pallas kernel; interpret mode off-TPU).
+
+    With ``cfg.attn_seq_shard`` the query *sequence* is sharded over the
+    TP axis instead of heads (K/V replicated) — the right layout when
+    the head count doesn't divide TP (qwen2-vl: 28 heads on 16-way),
+    where head sharding would silently all-gather full activations.
+    """
+    from repro.parallel.hints import BATCH, TP, maybe_shard
+
+    if cfg.attn_seq_shard:
+        qt = maybe_shard(qt, BATCH, None, TP, None)
+        kt = maybe_shard(kt, BATCH, None, None, None)
+        vt = maybe_shard(vt, BATCH, None, None, None)
+    if cfg.attn_impl == "flash":
+        out = flash_attention(qt, kt, vt, causal=causal, window=cfg.sliding_window)
+    elif cfg.attn_impl == "chunked":
+        out = attention_chunked(
+            qt, kt, vt, causal=causal, window=cfg.sliding_window,
+            chunk=cfg.attn_chunk,
+        )
+    else:
+        out = attention_ref(qt, kt, vt, causal=causal, window=cfg.sliding_window)
+    if cfg.attn_seq_shard:
+        out = maybe_shard(out, BATCH, None, TP, None)
+    return out
+
+
+def _normal(key, shape, scale):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _normal(ks[0], (d, H * Dh), d ** -0.5),
+        "wk": _normal(ks[1], (d, Hkv * Dh), d ** -0.5),
+        "wv": _normal(ks[2], (d, Hkv * Dh), d ** -0.5),
+        "wo": _normal(ks[3], (H * Dh, d), (H * Dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ cast(params["wq"])
+    k = x @ cast(params["wk"])
+    v = x @ cast(params["wv"])
+    if cfg.qkv_bias:
+        q = q + cast(params["bq"])
+        k = k + cast(params["bk"])
+        v = v + cast(params["bv"])
+    return (
+        q.reshape(B, S, H, Dh),
+        k.reshape(B, S, Hkv, Dh),
+        v.reshape(B, S, Hkv, Dh),
+    )
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig):
+    if cfg.pos_scheme == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos_scheme == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # 'learned' / 'none': positions handled at the embedding level.
+    return q, k
+
+
+def gqa_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S) or (3, B, S) for M-RoPE
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence GQA (training / prefill), no cache."""
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))  # (B,H,S,D)
+    out = _full_attention(qt, kt, vt, cfg, causal=causal)
+    B, S = x.shape[:2]
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return out @ cast(params["wo"])
+
+
+def gqa_prefill(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    max_seq: int,
+) -> tuple[jax.Array, dict]:
+    """Full-sequence attention that also emits the decode KV cache
+    (ring-buffer layout for SWA archs)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    q, k = _rope_qk(q, k, positions, cfg)
+    qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    out = _full_attention(qt, kt, vt, cfg, causal=True)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1) @ cast(params["wo"])
+
+    slots = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    cache = gqa_init_cache(cfg, B, max_seq)
+    keep = jnp.arange(max(0, S - slots), S)  # last `slots` tokens
+    slot_ids = keep % slots
+    ck = cache["k"].at[:, slot_ids].set(k[:, keep].astype(jnp.bfloat16))
+    cv = cache["v"].at[:, slot_ids].set(v[:, keep].astype(jnp.bfloat16))
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    slots = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    Hkv, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, slots, Hkv, Dh)
+    return {
+        "k": jnp.zeros(shape, jnp.bfloat16),
+        "v": jnp.zeros(shape, jnp.bfloat16),
+    }
+
+
+def gqa_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    pos: jax.Array,  # scalar int32 — current absolute position
+    cache: dict,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    """Single-token decode with (ring-buffer for SWA) KV cache."""
+    B = x.shape[0]
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, x, cfg)  # (B,1,*,Dh)
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos_b = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    q, k = _rope_qk(q, k, pos_b, cfg)
+
+    slots = cache["k"].shape[1]
+    slot = pos % slots  # ring buffer for SWA; identity when slots == max_seq
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    group = H // Hkv
+    qh = q[:, 0].reshape(B, Hkv, group, Dh)
+    # bf16 reads with f32 accumulation — no f32 copy of the cache
+    # (dtype hygiene: cuts decode HBM traffic ~3x vs materialized casts).
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qh.astype(ck.dtype), ck,
+        preferred_element_type=jnp.float32,
+    ) * (Dh ** -0.5)
+    # Valid slots: written positions only (a ring buffer is fully valid
+    # once wrapped; before wrapping, slots > pos are empty).
+    slot_ids = jnp.arange(slots)
+    valid = jnp.where(pos >= slots, jnp.ones((slots,), bool), slot_ids <= pos)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * Dh).astype(x.dtype)
+    return out @ cast(params["wo"]), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": _normal(ks[0], (d, H * (dn + dr)), d ** -0.5),
+        "w_dkv": _normal(ks[1], (d, r + dr), d ** -0.5),  # compress (+ shared rope key)
+        "w_uk": _normal(ks[2], (r, H * dn), r ** -0.5),  # K recovery
+        "w_uv": _normal(ks[3], (r, H * dv), r ** -0.5),  # V recovery
+        "wo": _normal(ks[4], (H * dv, d), (H * dv) ** -0.5),
+    }
+
+
+def _mla_qkv(params, x, positions, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q = (x @ cast(params["wq"])).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = x @ cast(params["w_dkv"])  # (B, S, r + dr)
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c, k_rope
+
+
+def _mla_attend(params, q_nope, q_rope, c, k_rope, cfg: ModelConfig,
+                mask: jax.Array | None):
+    """Attention over recovered K/V. c: (B,T,r); k_rope: (B,T,dr);
+    q_*: (B,S,H,*). mask: (S,T) boolean or None (full)."""
+    if cfg.attn_impl == "chunked" and mask is not None:
+        return _mla_attend_chunked(params, q_nope, q_rope, c, k_rope, cfg)
+    B, T = c.shape[:2]
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    # KV recovery (the paper's P3/D3 multicast workload under TP).
+    k_nope = (c @ cast(params["w_uk"])).reshape(B, T, H, dn)
+    v = (c @ cast(params["w_uv"])).reshape(B, T, H, dv)
+    scale = (dn + dr) ** -0.5
+    s = (
+        jnp.einsum("bshd,bthd->bhst", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    ) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.reshape(B, -1, H * dv).astype(q_nope.dtype) @ cast(params["wo"])
+
+
+def _mla_attend_chunked(params, q_nope, q_rope, c, k_rope, cfg: ModelConfig):
+    """Causal MLA attention, online-softmax over T chunks.
+
+    Recovery ("the paper's multicast operand") happens per KV chunk
+    inside the scan — same math and total FLOPs as :func:`_mla_attend`,
+    but nothing quadratic (or proportional to T·H·dn) is materialized.
+    Assumes S == T with a causal mask (training / prefill)."""
+    B, T = c.shape[:2]
+    S = q_nope.shape[1]
+    assert S == T, (S, T)
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = (dn + dr) ** -0.5
+    C = min(cfg.attn_chunk, T)
+    pad = (-T) % C
+    Tp = T + pad
+    if pad:
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    nc = Tp // C
+    cc = jnp.moveaxis(c.reshape(B, nc, C, -1), 1, 0)  # (nc,B,C,r)
+    krc = jnp.moveaxis(k_rope.reshape(B, nc, C, dr), 1, 0)
+    starts = jnp.arange(nc) * C
+    rows = jnp.arange(S)[:, None]
+    qn = q_nope.astype(jnp.float32) * scale  # (B,S,H,dn)
+    qr = q_rope.astype(jnp.float32) * scale  # (B,S,H,dr)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        cb, krb, start = xs  # (B,C,r), (B,C,dr)
+        k_nope = (cb @ cast(params["w_uk"])).reshape(B, C, H, dn)
+        vb = (cb @ cast(params["w_uv"])).reshape(B, C, H, dv)
+        s = (
+            jnp.einsum("bshd,bthd->bhst", qn, k_nope.astype(jnp.float32))
+            + jnp.einsum("bshd,btd->bhst", qr, krb.astype(jnp.float32))
+        )  # (B,H,S,C)
+        cols = start + jnp.arange(C)[None, :]
+        mask = (cols < T) & (cols <= rows)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = s.max(-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bhst,bthd->bhsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S, 1), jnp.float32)
+    acc0 = jnp.zeros((B, H, S, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (cc, krc, starts))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l).transpose(0, 2, 1, 3)  # (B,S,H,dv)
+    return out.reshape(B, S, H * dv).astype(q_nope.dtype) @ cast(params["wo"])
+
+
+def mla_apply(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    S = x.shape[1]
+    q_nope, q_rope, c, k_rope = _mla_qkv(params, x, positions, cfg)
+    mask = None
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+    return _mla_attend(params, q_nope, q_rope, c, k_rope, cfg, mask)
+
+
+def mla_prefill(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    max_seq: int,
+) -> tuple[jax.Array, dict]:
+    B, S, _ = x.shape
+    q_nope, q_rope, c, k_rope = _mla_qkv(params, x, positions, cfg)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    out = _mla_attend(params, q_nope, q_rope, c, k_rope, cfg, mask)
+    cache = mla_init_cache(cfg, B, max_seq)
+    ckv = cache["ckv"].at[:, :S].set(c.astype(jnp.bfloat16))
+    krope = cache["krope"].at[:, :S].set(k_rope.astype(jnp.bfloat16))
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    return {
+        "ckv": jnp.zeros((batch, max_seq, r), jnp.bfloat16),
+        "krope": jnp.zeros((batch, max_seq, dr), jnp.bfloat16),
+    }
+
+
+def mla_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    pos: jax.Array,
+    cache: dict,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    B = x.shape[0]
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c, k_rope = _mla_qkv(params, x, pos_b, cfg)
+    cckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], c.astype(cache["ckv"].dtype), (0, pos, 0))
+    ckrope = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
+    new_cache = {"ckv": cckv, "krope": ckrope}
+    if cfg.mla_absorb:
+        return _mla_decode_absorbed(
+            params, q_nope, q_rope, cckv, ckrope, pos, cfg
+        ), new_cache
+    T = cckv.shape[1]
+    mask = (jnp.arange(T) <= pos)[None, :]  # (1, T)
+    out = _mla_attend(params, q_nope, q_rope, cckv, ckrope, cfg, mask)
+    return out, new_cache
+
+
+def _mla_decode_absorbed(params, q_nope, q_rope, cckv, ckrope, pos,
+                         cfg: ModelConfig):
+    """Weight-absorbed MLA decode (beyond-paper; exact same math).
+
+    Instead of recovering per-head K/V for the whole cache
+    (2·T·H·(dn+dv) values — the paper's P3/D3 recovery traffic), absorb
+    W_uk into the query and W_uv into the output: attention runs
+    directly against the compressed (r + dr)-wide cache, cutting decode
+    HBM traffic by ~2·H·(dn+dv)/(r+dr) ≈ 7× for deepseek-v2-lite."""
+    B = q_nope.shape[0]
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    T = cckv.shape[1]
+    scale = (dn + dr) ** -0.5
+    w_uk = cast(params["w_uk"]).reshape(r, H, dn)
+    w_uv = cast(params["w_uv"]).reshape(r, H, dv)
+    # q ⟵ q · W_uk  (B,H,r): per-step cost H·dn·r, independent of T
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
+                     preferred_element_type=jnp.float32)
+    s = (
+        jnp.einsum("bhr,btr->bht", q_c.astype(cckv.dtype), cckv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(ckrope.dtype),
+                     ckrope, preferred_element_type=jnp.float32)
+    ) * scale
+    mask = (jnp.arange(T) <= pos)[None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bht,btr->bhr", p.astype(cckv.dtype), cckv,
+                     preferred_element_type=jnp.float32)  # (B,H,r)
+    out = jnp.einsum("bhr,rhd->bhd", o_c, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * dv).astype(q_nope.dtype)
+    return out @ cast(params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, H, Dh = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _normal(ks[0], (d, H * Dh), d ** -0.5),
+        "wk": _normal(ks[1], (d, H * Dh), d ** -0.5),
+        "wv": _normal(ks[2], (d, H * Dh), d ** -0.5),
+        "wo": _normal(ks[3], (H * Dh, d), (H * Dh) ** -0.5),
+    }
+
+
+def cross_attn_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, d) decoder states
+    enc: jax.Array,  # (B, T, d) encoder output
+    cfg: ModelConfig,
+) -> jax.Array:
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    H, Dh = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ cast(params["wq"])).reshape(B, S, H, Dh)
+    k = (enc @ cast(params["wk"])).reshape(B, T, H, Dh)
+    v = (enc @ cast(params["wv"])).reshape(B, T, H, Dh)
+    s = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (Dh ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H * Dh).astype(x.dtype) @ cast(params["wo"])

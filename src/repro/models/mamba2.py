@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan + O(1) decode.
+
+The SSD form computes, per head h with scalar decay ``a_h = -exp(A_log)``:
+
+    state:  h_t = exp(dt_t a) h_{t-1} + dt_t * (B_t ⊗ x_t)
+    out:    y_t = C_t · h_t + D x_t
+
+Training uses the chunked algorithm (Mamba-2 paper §6): within a chunk
+of Q tokens the recurrence is expanded into a masked "attention"
+(quadratic in Q only); across chunks a single per-(batch, head) scalar
+decay carries the (P×N) state, scanned sequentially over S/Q chunks.
+Decode is the plain single-token recurrence — the whole point of the
+``long_500k`` shape: cache is O(1) in context length (conv window +
+(H, P, N) state).
+
+All SSD arithmetic is f32; projections are bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import cast, gated_rmsnorm, rmsnorm_init
+
+_normal = lambda key, shape, scale: jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    H = cfg.ssm_nheads
+    P = cfg.ssm_headdim
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P, G, N, conv_dim
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Projections are kept separate (z/x vs B,C/dt, conv_x vs conv_BC)
+    so tensor parallelism can shard the d_inner (head) dimension while
+    replicating the small group/dt projections."""
+    d = cfg.d_model
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    W = cfg.ssm_conv
+    return {
+        "in_z": _normal(ks[0], (d, d_in), s),
+        "in_x": _normal(ks[1], (d, d_in), s),
+        "in_BC": _normal(ks[2], (d, 2 * G * N), s),
+        "in_dt": _normal(ks[3], (d, H), s),
+        "conv_x_w": _normal(ks[4], (W, d_in), W ** -0.5),
+        "conv_x_b": jnp.zeros((d_in,), jnp.float32),
+        "conv_BC_w": _normal(ks[5], (W, 2 * G * N), W ** -0.5),
+        "conv_BC_b": jnp.zeros((2 * G * N,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # a = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in),
+        "out_proj": _normal(jax.random.fold_in(key, 7), (d_in, d), d_in ** -0.5),
+    }
+
+
+def _project(params: dict, xin: jax.Array, cfg: ModelConfig):
+    """xin @ separate projections -> (z, x, BC, dt)."""
+    z = xin @ cast(params["in_z"])
+    x = xin @ cast(params["in_x"])
+    BC = xin @ cast(params["in_BC"])
+    dt = xin @ cast(params["in_dt"])
+    return z, x, BC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C)."""
+    W, C = w.shape
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),  # (W, 1, C)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return (out + b).astype(xBC.dtype)
+
+
+def mamba2_apply(params: dict, xin: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence chunked SSD. xin: (B, S, d_model)."""
+    y, _ = _ssd_forward(params, xin, cfg)
+    return y
+
+
+def mamba2_prefill(
+    params: dict, xin: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also returns the decode cache (final
+    SSM state + conv window tail)."""
+    return _ssd_forward(params, xin, cfg)
+
+
+def _ssd_forward(
+    params: dict, xin: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, dict]:
+    B, S, _ = xin.shape
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    Sp = S + pad
+    nc = Sp // Q
+
+    z, x_raw, BC_raw, dt = _project(params, xin, cfg)
+    W = cfg.ssm_conv
+    xBC_raw = jnp.concatenate([x_raw, BC_raw], -1)  # cached for decode
+    tail = xBC_raw[:, max(0, S - (W - 1)) :]
+    if tail.shape[1] < W - 1:  # left-pad with zeros (conv's implicit state)
+        tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+    x = _causal_conv(x_raw, params["conv_x_w"], params["conv_x_b"])
+    BC = _causal_conv(BC_raw, params["conv_BC_w"], params["conv_BC_b"])
+    x = jax.nn.silu(x.astype(jnp.float32))
+    BC = jax.nn.silu(BC.astype(jnp.float32))
+    Bm, Cm = jnp.split(BC, [G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    if pad:
+        # dt = 0 on padded positions makes the state update an exact
+        # identity there (decay exp(0)=1, contribution dt·Bx = 0).
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, Bm, Cm, dt = zpad(x), zpad(Bm), zpad(Cm), zpad(dt)
+
+    # reshape to heads / groups (all f32 from here)
+    x = x.reshape(B, nc, Q, H, P)
+    Bm = Bm.reshape(B, nc, Q, G, N)
+    Cm = Cm.reshape(B, nc, Q, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=3)  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=3)
+    dt = dt.reshape(B, nc, Q, H)
+    a = -jnp.exp(params["A_log"])  # (H,)
+    dA = dt * a  # (B,nc,Q,H) negative
+    lam = jnp.cumsum(dA, axis=2)  # Λ inclusive cumsum within chunk
+
+    # ---- intra-chunk (masked attention form) -------------------------
+    # att[i,j] = (C_i·B_j) exp(Λ_i - Λ_j) dt_j  for j <= i
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)  # (B,nc,H,Q,Q)
+    decay = jnp.exp(lam[:, :, :, None, :] - lam[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    decay = jnp.moveaxis(decay, -1, 2)  # (B,nc,H,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    att = jnp.where(mask, cb * decay, 0.0) * jnp.moveaxis(dt, 2, 3)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", att, x)
+
+    # ---- chunk states + sequential inter-chunk scan -------------------
+    # state contributed by chunk c: S_c = sum_j exp(Λ_last - Λ_j) dt_j B_j ⊗ x_j
+    seg = jnp.exp(lam[:, :, -1:, :] - lam) * dt  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", seg, Bh, x)  # (B,nc,H,N,P)
+    gamma = jnp.exp(lam[:, :, -1, :])  # (B,nc,H) chunk total decay
+
+    def scan_fn(h_prev, inp):
+        g_c, s_c = inp  # (B,H), (B,H,N,P)
+        h_new = g_c[..., None, None] * h_prev + s_c
+        return h_new, h_prev  # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_before = lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(gamma, 1, 0), jnp.moveaxis(S_c, 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)  # (B,nc,H,N,P)
+
+    # y_inter[i] = C_i · exp(Λ_i) h_{c-1}
+    y_inter = jnp.einsum(
+        "bcqhn,bchnp->bcqhp", Ch * jnp.exp(lam)[..., None], h_before
+    )
+
+    y = y_intra + y_inter + x * params["D"][:, None]  # (B,nc,Q,H,P)
+    y = y.reshape(B, Sp, d_in)[:, :S]
+    y = gated_rmsnorm(params["norm"], y, z.astype(jnp.float32), cfg.norm_eps)
+    out = cast(y) @ cast(params["out_proj"])
+
+    # final state (for prefill -> decode handoff): one more scan step
+    h_final = gamma[:, -1][..., None, None] * h_before[:, -1] + S_c[:, -1]
+    cache = {"conv": tail.astype(jnp.bfloat16), "ssm": h_final}
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init_cache(cfg: ModelConfig, batch: int) -> dict:
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba2_decode(
+    params: dict,
+    xin: jax.Array,  # (B, 1, d_model)
+    cache: dict,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    B = xin.shape[0]
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    z, x_raw, BC_raw, dt = _project(params, xin[:, 0], cfg)
+
+    xBC_t = jnp.concatenate([x_raw, BC_raw], -1)  # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], xBC_t[:, None, :]], axis=1)  # (B,W,conv)
+    conv_w = jnp.concatenate([params["conv_x_w"], params["conv_BC_w"]], -1)
+    conv_b = jnp.concatenate([params["conv_x_b"], params["conv_BC_b"]], -1)
+    conv_out = jnp.einsum(
+        "bwc,wc->bc", window.astype(jnp.float32), conv_w
+    ) + conv_b
+    xBC = jax.nn.silu(conv_out)
+    x, Bm, Cm = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    x = x.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(dtv * -jnp.exp(params["A_log"]))  # (B,H)
+    h = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtv, Bh, x
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + x * params["D"][:, None]
+    y = y.reshape(B, 1, d_in)
+    y = gated_rmsnorm(params["norm"], y, z[:, None, :].astype(jnp.float32), cfg.norm_eps)
+    out = cast(y) @ cast(params["out_proj"])
+    return out, {"conv": window[:, 1:].astype(jnp.bfloat16), "ssm": h}

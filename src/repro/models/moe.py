@@ -1,0 +1,224 @@
+"""Fine-grained MoE (DeepSeek-MoE style: shared + routed experts, top-k).
+
+Dispatch is sort-based with a static capacity — no (T, E, C) one-hot
+tensors, so memory scales with T·k·d (the real dispatch traffic):
+
+1. router top-k → flat assignment list (T·k,),
+2. position-in-expert via argsort + searchsorted,
+3. scatter into the (E, C, d) expert buffer (``mode='drop'`` enforces
+   capacity — overflow assignments are dropped, standard practice),
+4. batched expert FFN — one einsum over the expert dim (EP: experts
+   sharded over the ``model`` axis; XLA materializes the token exchange
+   as all-to-all, or the Torrent chain collective in torrent mode),
+5. gather-combine weighted by router probs (``mode='fill'`` zeroes
+   dropped assignments).
+
+The aux load-balancing loss (switch-style E·Σ f_i·P_i) is returned to
+the caller and folded into the training loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cast, swiglu, swiglu_init
+from repro.parallel.hints import BATCH, SEQ, TP, maybe_shard
+
+_normal = lambda key, shape, scale: jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _normal(ks[0], (d, E), d ** -0.5),
+        "wg": _normal(ks[1], (E, d, f), d ** -0.5),
+        "wu": _normal(ks[2], (E, d, f), d ** -0.5),
+        "wd": _normal(ks[3], (E, f, d), f ** -0.5),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, cfg.num_shared_experts * f)
+    return p
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(math.ceil(tokens * cfg.moe_top_k / cfg.num_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    if cfg.moe_row_dispatch:
+        return moe_apply_rowwise(params, x, cfg)
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    T = B * S
+    C = capacity(cfg, T)
+    xf = x.reshape(T, d)
+
+    # -- routing (f32) --------------------------------------------------
+    logits = xf.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)  # deepseek renormalizes
+
+    # aux load-balance loss: E * sum_i f_i * P_i
+    P_i = probs.mean(0)
+    f_i = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    aux = cfg.router_aux_loss_coef * E * jnp.sum(f_i * P_i)
+
+    # -- position-in-expert (sort trick, no one-hot) ---------------------
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    tok_id = jnp.arange(T * k) // k
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_sorted = jnp.arange(T * k) - starts[sorted_e]
+    pos = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(pos_sorted.astype(jnp.int32))
+
+    # -- dispatch: (E, C, d), capacity drop ------------------------------
+    sel = xf[tok_id]  # (T*k, d) — the dispatch wire traffic
+    # token-major (T*k) order aligns with xf's batch sharding; tell
+    # GSPMD so it doesn't all-gather the token stream to every device.
+    sel = maybe_shard(sel, BATCH, None)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, pos].set(sel, mode="drop")
+    buf = maybe_shard(buf, TP, None, None)  # EP: experts over model axis
+
+    # -- expert FFN (batched over E) -------------------------------------
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, cast(params["wg"]))
+    ) * jnp.einsum("ecd,edf->ecf", buf, cast(params["wu"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, cast(params["wd"]))
+    out_buf = maybe_shard(out_buf, TP, None, None)
+
+    # -- combine ----------------------------------------------------------
+    gathered = out_buf.at[flat_e, pos].get(
+        mode="fill", fill_value=0
+    )  # (T*k, d); dropped -> 0
+    gathered = maybe_shard(gathered, BATCH, None)
+    if cfg.moe_bf16_wire:
+        # keep the (T*k, d) combine wire in bf16; f32 only in the
+        # per-token top-k accumulation (same routing, half the traffic)
+        out = jnp.einsum(
+            "tkd,tk->td", gathered.reshape(T, k, d),
+            top_p.astype(gathered.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        weighted = gathered.astype(jnp.float32) * flat_p[:, None]
+        out = weighted.reshape(T, k, d).sum(1)
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(params["shared"], xf).astype(jnp.float32)
+    out = out.astype(x.dtype).reshape(B, S, d)
+    out = maybe_shard(out, BATCH, None, None)
+    return out, aux
+
+
+def moe_apply_rowwise(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise (per-batch-row) dispatch — the shardable formulation.
+
+    The flat dispatch computes global capacity positions, so GSPMD
+    cannot shard the (E, C, d) buffer's capacity dim: every DP group
+    redundantly runs the *global* expert batch (16× flops on the
+    production mesh), and forcing the sharding turns the scatter into
+    a collective storm (§Perf deepseek iterations 3–4, both refuted).
+
+    Routing each batch row independently makes every scatter/gather
+    index row-local, so the expert buffer (B, E, C_row, d) shards
+    cleanly as (BATCH, TP/EP, —, —): expert flops divide over the DP
+    axes AND experts, with no cross-row collectives beyond the einsum's
+    own. Capacity is per-row (C_row = S·k/E · factor), a slightly
+    stricter balance assumption than global capacity — same top-k
+    routing, same aux loss.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    C = capacity(cfg, S)
+
+    # -- routing (f32, all rows at once) --------------------------------
+    logits = x.reshape(B * S, d).astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (B*S, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+
+    P_i = probs.mean(0)
+    f_i = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (B * S * k)
+    aux = cfg.router_aux_loss_coef * E * jnp.sum(f_i * P_i)
+
+    # -- per-row position-in-expert (indices stay < S*k: row-local) -----
+    flat_e = top_e.reshape(B, S * k)
+    flat_p = top_p.reshape(B, S * k).astype(x.dtype)
+    tok_id = jnp.arange(S * k) // k  # (S*k,) same for every row
+
+    def row_pos(e_row):
+        sort_idx = jnp.argsort(e_row, stable=True)
+        sorted_e = e_row[sort_idx]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+        pos_sorted = jnp.arange(S * k) - starts[sorted_e]
+        return jnp.zeros((S * k,), jnp.int32).at[sort_idx].set(
+            pos_sorted.astype(jnp.int32))
+
+    pos = jax.vmap(row_pos)(flat_e)  # (B, S*k)
+
+    # -- dispatch: (B, E, C, d) sharded (batch, experts, -, -) -----------
+    xk = jnp.take_along_axis(
+        x, jnp.broadcast_to(tok_id[None, :, None], (B, S * k, 1)), axis=1
+    )  # (B, S*k, d)
+    buf = jnp.zeros((B, E, C, d), x.dtype)
+    buf = jax.vmap(lambda b, e, p, v: b.at[e, p].set(v, mode="drop"))(
+        buf, flat_e, pos, xk)
+    buf = maybe_shard(buf, BATCH, TP, None, None)
+
+    # -- expert FFN: flops shard over DP (b) and EP (e) ------------------
+    h = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", buf, cast(params["wg"]))
+    ) * jnp.einsum("becd,edf->becf", buf, cast(params["wu"]))
+    out_buf = jnp.einsum("becf,efd->becd", h, cast(params["wd"]))
+    out_buf = maybe_shard(out_buf, BATCH, TP, None, None)
+
+    # -- combine (row-local gather, bf16 wire, f32 top-k accumulation) --
+    gathered = jax.vmap(
+        lambda b, e, p: b.at[e, p].get(mode="fill", fill_value=0)
+    )(out_buf, flat_e, pos)  # (B, S*k, d)
+    gathered = maybe_shard(gathered, BATCH, None, None)
+    out = jnp.einsum(
+        "bskd,bsk->bsd", gathered.reshape(B, S, k, d),
+        flat_p.reshape(B, S, k), preferred_element_type=jnp.float32,
+    )
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(params["shared"], x.reshape(B * S, d)).reshape(
+            B, S, d).astype(jnp.float32)
+    out = out.astype(x.dtype)
+    out = maybe_shard(out, BATCH, None, None)
+    return out, aux
+
+
+def moe_ref(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Oracle: dense per-token loop over top-k experts (no capacity)."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.moe_top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    out = jnp.zeros_like(xf, jnp.float32)
+    for e in range(cfg.num_experts):
+        he = jax.nn.silu(xf @ cast(params["wg"][e])) * (xf @ cast(params["wu"][e]))
+        ye = (he @ cast(params["wd"][e])).astype(jnp.float32)
+        w = jnp.where(top_e == e, top_p, 0.0).sum(-1)
+        out = out + ye * w[:, None]
+    if cfg.num_shared_experts:
+        out = out + swiglu(params["shared"], xf).astype(jnp.float32)
+    return out.astype(x.dtype).reshape(B, S, d)

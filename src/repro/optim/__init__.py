@@ -1,0 +1,1 @@
+from .adamw import OptConfig, global_norm, init, schedule, update, zero1_specs

@@ -1,0 +1,132 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and ZeRO-1
+partition-spec helpers (optimizer state sharded over the data axis).
+
+Pure-pytree implementation (no optax offline). The update is written
+shard-local-friendly: every op is elementwise, so ZeRO-1 sharding of
+``mu``/``nu`` over the data axis needs no algorithm change — only the
+PartitionSpecs from :func:`zero1_specs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(1, cfg.warmup_steps)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.decay_steps - cfg.warmup_steps),
+        0.0,
+        1.0,
+    )
+    cos = cfg.peak_lr * (
+        cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: PyTree) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.zeros_like, zeros),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(
+    cfg: OptConfig,
+    grads: PyTree,
+    state: dict,
+    params: PyTree,
+) -> tuple[PyTree, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return (
+            p.astype(jnp.float32)
+            - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+        ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return (
+        new_params,
+        {"mu": mu, "nu": nu, "step": step},
+        {"lr": lr, "grad_norm": gnorm},
+    )
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 partition specs
+# ---------------------------------------------------------------------------
+
+
+def zero1_leaf_spec(param_spec, shape: tuple[int, ...], data_size: int,
+                    axis: str = "data"):
+    """Additionally shard an optimizer leaf over the data axis: pick the
+    first dim that is divisible by the data-axis size and not already
+    sharded. Falls back to the param's own spec."""
+    from jax.sharding import PartitionSpec as P
+
+    existing = tuple(param_spec) if param_spec is not None else (None,) * len(shape)
+    existing = existing + (None,) * (len(shape) - len(existing))
+    for i, dim in enumerate(shape):
+        taken = existing[i]
+        if taken is None and dim % data_size == 0 and dim >= data_size:
+            new = list(existing)
+            new[i] = axis
+            return P(*new)
+    return P(*existing)
+
+
+def zero1_specs(param_specs: PyTree, param_shapes: PyTree, data_size: int) -> dict:
+    """Specs for the optimizer state pytree given param specs/shapes."""
+    mu_specs = jax.tree.map(
+        lambda spec, shp: zero1_leaf_spec(spec, shp.shape, data_size),
+        param_specs,
+        param_shapes,
+    )
+    from jax.sharding import PartitionSpec as P
+
+    return {"mu": mu_specs, "nu": mu_specs, "step": P()}

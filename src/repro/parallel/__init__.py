@@ -1,0 +1,12 @@
+"""Distribution layer: mesh-axis hints, partition-spec rules
+(DP/TP/EP/ZeRO-1/SP), and the collectives backend seam
+("xla" vs "torrent" Chainwrite rings)."""
+
+from .collectives import ring_order_for_axis, torrent_grad_reduce
+from .hints import BATCH, SEQ, TP, maybe_shard, resolve_spec
+from .sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_pspecs,
+    param_pspecs,
+)

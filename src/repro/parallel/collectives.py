@@ -1,0 +1,114 @@
+"""Collectives backend seam: "xla" (fabric does replication — the
+network-layer-multicast analogue) vs "torrent" (Chainwrite: explicitly
+scheduled ppermute rings at the application layer).
+
+The flagship integration point is the data-parallel gradient reduction:
+``torrent_grad_reduce`` runs the whole grad computation under a
+*subset* ``shard_map`` (manual over the DP axes, auto over ``model``)
+so the DP reduction is OURS — a scheduled, bucketed, optionally
+int8-compressed chain all-reduce — while TP sharding inside the model
+stays GSPMD-managed. Options mirror the paper's knobs:
+
+* ``scheduler`` — chain order from core.scheduling over the DP ring;
+* ``hierarchical`` — reduce within a pod, then across pods (two short
+  chains instead of one long one: (16-1)+(2-1) hops vs 31);
+* ``compress`` — int8 error-feedback wire format (4× fewer bytes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import chainwrite as cw
+from repro.core.scheduling import SCHEDULERS
+from repro.core.topology import MeshTopology
+from repro.runtime.compression import compressed_chain_all_reduce
+
+PyTree = Any
+
+
+def ring_order_for_axis(axis_size: int, scheduler: str = "tsp") -> tuple[int, ...]:
+    """Chain order for a DP ring: schedule the axis's devices as a 1-D
+    NoC (linear neighbours), which the TSP/greedy scheduler traverses
+    with 1 hop per destination — the ICI-torus-matched snake order."""
+    if axis_size <= 2 or scheduler == "naive":
+        return tuple(range(axis_size))
+    topo = MeshTopology(axis_size, 1)
+    order = SCHEDULERS[scheduler](topo, list(range(1, axis_size)), source=0)
+    return (0, *order)
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def torrent_grad_reduce(
+    grad_fn: Callable[..., tuple[PyTree, PyTree]],
+    mesh,
+    batch_specs: PyTree,
+    *,
+    scheduler: str = "tsp",
+    hierarchical: bool = True,
+    compress: bool = False,
+) -> Callable[..., tuple[PyTree, PyTree]]:
+    """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` (grads LOCAL
+    to the batch shard) so grads come back chain-all-reduced over the DP
+    axes. Model-axis sharding stays automatic (subset shard_map)."""
+    dp = _dp_axes(mesh)
+
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def reduce_one(g):
+        flat = g.reshape(-1)
+
+        def ar(x, axis):
+            size = 1
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                size *= mesh.shape[a]
+            order = ring_order_for_axis(size, scheduler)
+            if compress:
+                return compressed_chain_all_reduce(x, axis, order)
+            return cw.chain_all_reduce(x, axis, order)
+
+        if hierarchical and len(dp) == 2:
+            flat = ar(flat, dp[1])  # within pod ("data")
+            flat = ar(flat, dp[0])  # across pods
+        else:
+            flat = ar(flat, dp if len(dp) > 1 else dp[0])
+        # shards hold grads of their LOCAL mean loss; the chain sums them,
+        # so divide by the DP group size to recover the global-mean grad
+        # (drop-in parity with the "xla" backend).
+        return (flat / dp_size).reshape(g.shape)
+
+    def wrapped(params, batch):
+        def inner(params, batch):
+            grads, metrics = grad_fn(params, batch)
+            grads = jax.tree.map(reduce_one, grads)
+            # metrics are per-shard means -> average over the DP group
+            dp_size = 1
+            for a in dp:
+                dp_size *= mesh.shape[a]
+            metrics = jax.tree.map(
+                lambda m: jax.lax.psum(m, dp) / dp_size, metrics
+            )
+            return grads, metrics
+
+        in_specs = (jax.tree.map(lambda _: P(), params), batch_specs)
+        out_specs = (jax.tree.map(lambda _: P(), params), P())
+        return jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=set(dp),
+            check_vma=False,
+        )(params, batch)
+
+    return wrapped

@@ -1,0 +1,157 @@
+"""Parameter / batch / cache PartitionSpecs (DP + TP/EP + ZeRO-1 + SP).
+
+Rules are name-based over the param pytree paths (built from
+``jax.eval_shape`` — no allocation) with divisibility checks against the
+TP axis size: a dim that doesn't divide is left replicated rather than
+relying on GSPMD padding for weights (activat­ion reshapes may still pad;
+that is fine and shows up in the roofline, e.g. starcoder2's 24 heads on
+a 16-way model axis).
+
+Scheme (Megatron-style):
+* embeddings / lm_head: vocab-sharded over ``model``;
+* attention: column-parallel QKV (head dim), row-parallel output proj;
+* MLA: compress proj replicated (small), recovery projections
+  column-parallel — the compressed KV is the multicast operand (paper
+  P3/D3);
+* dense FFN: column-parallel gate/up, row-parallel down;
+* MoE: experts sharded over ``model`` (EP);
+* mamba2: d_inner (head) dim column-parallel, B/C/dt projections
+  replicated (small);
+* optimizer state: params' spec + extra ``data`` sharding (ZeRO-1);
+* decode caches: batch over ``(pod, data)``, heads over ``model``; the
+  ``long_500k`` cells instead shard KV slots over ``data`` (SP).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.configs.shapes import Shape
+
+PyTree = Any
+
+BATCH_AXES = ("pod", "data")
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _param_spec(path: tuple[str, ...], shape: tuple[int, ...], cfg: ModelConfig,
+                tp: int) -> P:
+    """Spec for one (unstacked) param leaf."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+
+    def col(dim_idx: int) -> P:  # shard output dim over model
+        if _div(shape[dim_idx], tp):
+            spec = [None] * len(shape)
+            spec[dim_idx] = "model"
+            return P(*spec)
+        return P(*([None] * len(shape)))
+
+    if name == "table":  # embed / lm_head: vocab-sharded
+        return P("model", None) if _div(shape[0], tp) else P(None, None)
+    if name == "pos_emb":
+        return P(*([None] * len(shape)))
+    if name in ("wq", "wk", "wv", "gate", "up", "fc1", "in_z", "in_x", "w_uk", "w_uv"):
+        return col(1)
+    if name in ("bq", "bk", "bv", "b1"):
+        return col(0)
+    if name in ("wo", "down", "fc2", "out_proj"):
+        return col(0)  # row-parallel: shard input (first) dim
+    if name in ("wg", "wu", "wd"):  # MoE experts: EP over model
+        return P("model", None, None) if _div(shape[0], tp) else P(None, None, None)
+    if name in ("conv_x_w",):
+        return col(1)
+    if name in ("conv_x_b",):
+        return col(0)
+    if parent == "norm" and len(shape) == 1:  # mamba gated-norm scale (d_inner)
+        return col(0)
+    # router, w_dkv, in_BC, in_dt, conv_BC_*, dt_bias, A_log, D,
+    # norms, biases: replicated
+    return P(*([None] * len(shape)))
+
+
+def param_pspecs(params_shape: PyTree, cfg: ModelConfig, tp: int = 16) -> PyTree:
+    """Pytree of PartitionSpecs matching ``jax.eval_shape(model_init)``.
+
+    Leaves under ``groups`` are stacked with a leading ``repeat`` dim —
+    their spec gets a ``None`` prefix.
+    """
+
+    def one(path, leaf):
+        keys = tuple(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        stacked = "groups" in keys
+        shape = leaf.shape
+        if stacked:
+            spec = _param_spec(keys, shape[1:], cfg, tp)
+            return P(None, *spec)
+        return _param_spec(keys, shape, cfg, tp)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, shape: Shape) -> dict:
+    B = P(BATCH_AXES)
+    out: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            out["embeds"] = P(BATCH_AXES, None, None)
+            out["positions"] = P(None, BATCH_AXES, None)
+        else:
+            out["tokens"] = P(BATCH_AXES, None)
+        if cfg.is_encdec:
+            out["enc_frames"] = P(BATCH_AXES, None, None)
+        if shape.kind == "train":
+            out["labels"] = P(BATCH_AXES, None)
+        return out
+    raise ValueError(shape.kind)
+
+
+def _cache_leaf_spec(path: tuple[str, ...], shape: tuple[int, ...],
+                     cfg: ModelConfig, shape_cfg: Shape, tp: int) -> P:
+    """Decode-cache leaf specs. Leaf shapes are stacked: (reps, B, ...)."""
+    name = path[-1]
+    long_ctx = shape_cfg.global_batch == 1  # long_500k: SP over slots
+    batch = None if long_ctx else BATCH_AXES
+    if name in ("k", "v"):  # (reps, B, slots, Hkv, Dh)
+        heads = "model" if _div(shape[3], tp) else None
+        slots = "data" if long_ctx and _div(shape[2], 16) else None
+        return P(None, batch, slots, heads, None)
+    if name in ("ckv", "krope"):  # (reps, B, slots, r)
+        slots = "data" if long_ctx and _div(shape[2], 16) else None
+        return P(None, batch, slots, None)
+    if name == "conv":  # (reps, B, W-1, conv_dim)
+        return P(None, batch, None, "model" if _div(shape[3], tp) else None)
+    if name == "ssm":  # (reps, B, H, N, Pdim)
+        return P(None, batch, "model" if _div(shape[2], tp) else None, None, None)
+    if name == "enc":  # (B, T, d) encoder output (unstacked)
+        return P(batch, None, None)
+    return P(*([None] * len(shape)))
+
+
+def cache_pspecs(cache_shape: PyTree, cfg: ModelConfig, shape_cfg: Shape,
+                 tp: int = 16) -> PyTree:
+    def one(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return _cache_leaf_spec(keys, leaf.shape, cfg, shape_cfg, tp)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def opt_pspecs(param_specs: PyTree, params_shape: PyTree, data_size: int) -> dict:
+    from repro.optim.adamw import zero1_specs
+
+    return zero1_specs(param_specs, params_shape, data_size)

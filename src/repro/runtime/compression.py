@@ -1,0 +1,123 @@
+"""Gradient compression: int8 quantization with error feedback, and a
+compressed Torrent ring all-reduce.
+
+``quantize``/``dequantize`` implement symmetric per-tensor int8 with a
+f32 scale. :class:`ErrorFeedback` keeps the quantization residual and
+adds it back before the next step's compression (Seide et al. / EF-SGD),
+which restores convergence despite the lossy wire format.
+
+``compressed_chain_all_reduce`` runs the Torrent ring reduce-scatter
+with int8 payloads: each hop dequantizes, accumulates in f32, and
+re-quantizes for the next hop — wire bytes drop 4× vs f32 at the cost
+of per-hop rounding (bounded by the per-hop scale). The final
+all-gather phase also ships int8.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.chainwrite import chain_edges, _axis_size, _axis_index, _scan
+
+PyTree = Any
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedback:
+    """Stateless helpers over an explicit residual pytree."""
+
+    @staticmethod
+    def init(params: PyTree) -> PyTree:
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    @staticmethod
+    def compress(grads: PyTree, residual: PyTree):
+        """Returns (pytree of (q, scale) tuples, new residual pytree)."""
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        r_leaves = treedef.flatten_up_to(residual)
+        qs, res = [], []
+        for g, r in zip(g_leaves, r_leaves):
+            g = g.astype(jnp.float32) + r
+            q, s = quantize(g)
+            qs.append((q, s))
+            res.append(g - dequantize(q, s))
+        return (
+            jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, res),
+        )
+
+    @staticmethod
+    def decompress(qtree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda pair: dequantize(*pair),
+            qtree,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+        )
+
+
+def compressed_chain_all_reduce(
+    x: jax.Array,
+    axis_name,
+    order=None,
+) -> jax.Array:
+    """Ring all-reduce with int8 wire format (call inside shard_map).
+
+    Mean-free sum semantics identical to chain_all_reduce up to int8
+    rounding; pair with :class:`ErrorFeedback` at the caller.
+    """
+    L = _axis_size(axis_name)
+    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
+    idx = _axis_index(axis_name)
+    order_arr = jnp.asarray(order)
+    pos = jnp.argmax(order_arr == idx)
+    edges = chain_edges(order, wrap=True)
+
+    lead = x.shape[0]
+    pad = (-lead) % L
+    xp = jnp.pad(x.astype(jnp.float32), [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    chunks = xp.reshape((L, xp.shape[0] // L) + x.shape[1:])
+
+    # ---- reduce-scatter with per-hop int8 requantization -------------
+    start_chunk = order_arr[(pos - 1) % L]
+    acc = lax.dynamic_index_in_dim(chunks, start_chunk, 0, keepdims=False)
+
+    def rs_step(acc, s):
+        q, scale = quantize(acc)
+        q = lax.ppermute(q, axis_name, edges)
+        scale = lax.ppermute(scale, axis_name, edges)
+        acc_in = dequantize(q, scale)
+        j = order_arr[(pos - s - 1) % L]
+        acc = acc_in + lax.dynamic_index_in_dim(chunks, j, 0, keepdims=False)
+        return acc, None
+
+    acc, _ = _scan(rs_step, acc, jnp.arange(1, L))
+
+    # ---- all-gather (int8 wire) ---------------------------------------
+    own_q, own_s = quantize(acc)
+    out = jnp.zeros((L,) + acc.shape, jnp.float32)
+    out = lax.dynamic_update_index_in_dim(out, dequantize(own_q, own_s), idx, 0)
+
+    def ag_step(carry, s):
+        q, scale, out = carry
+        q = lax.ppermute(q, axis_name, edges)
+        scale = lax.ppermute(scale, axis_name, edges)
+        src = order_arr[(pos - s) % L]
+        out = lax.dynamic_update_index_in_dim(out, dequantize(q, scale), src, 0)
+        return (q, scale, out), None
+
+    (_, _, out), _ = _scan(ag_step, (own_q, own_s, out), jnp.arange(1, L))
+    full = out.reshape((L * acc.shape[0],) + x.shape[1:])
+    return (full[:lead] if pad else full).astype(x.dtype)

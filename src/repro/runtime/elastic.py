@@ -1,0 +1,43 @@
+"""Elastic scaling: re-factorize the mesh when hosts join/leave and
+restore the (mesh-agnostic) checkpoint onto the new layout.
+
+Policy: keep the model (TP) axis fixed when the new device count allows
+(TP size is dictated by memory, not availability); absorb changes in
+the data axis. When devices < tp, fall back to the largest power-of-two
+TP that fits.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def choose_mesh_shape(num_devices: int, preferred_tp: int) -> tuple[int, int]:
+    """(data, model) factorization for the available devices."""
+    tp = min(preferred_tp, num_devices)
+    while num_devices % tp:
+        tp //= 2
+    tp = max(tp, 1)
+    return num_devices // tp, tp
+
+
+def make_elastic_mesh(num_devices: int, preferred_tp: int,
+                      devices=None) -> jax.sharding.Mesh:
+    data, model = choose_mesh_shape(num_devices, preferred_tp)
+    devs = (devices if devices is not None else jax.devices())[: data * model]
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devs).reshape(data, model), ("data", "model")
+    )
+
+
+def reshard_state(state, mesh: jax.sharding.Mesh, specs) -> object:
+    """device_put a (restored) state pytree onto a new mesh layout."""
+    shardings = jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec if spec is not None else P()),
+        specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+    return jax.tree.map(jax.device_put, state, shardings)

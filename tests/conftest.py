@@ -1,0 +1,63 @@
+"""Shared fixtures and the multi-device subprocess harness.
+
+The container has ONE real CPU device and the dry-run instructions forbid
+setting ``xla_force_host_platform_device_count`` globally — smoke tests
+must see 1 device. Collective tests therefore run in a *subprocess* with
+the flag set locally (``run_multidevice``).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+_PREAMBLE = """\
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+assert jax.device_count() == {n}, jax.device_count()
+"""
+
+
+def _run_multidevice(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run ``code`` in a fresh python with N virtual CPU devices.
+
+    The snippet must raise (or assert) on failure; stdout is returned
+    for extra checks.
+    """
+    src = _PREAMBLE.format(n=devices) + textwrap.dedent(code)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", src],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice snippet failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def run_multidevice():
+    return _run_multidevice
+
+
+@pytest.fixture()
+def tmp_ckpt_dir(tmp_path):
+    return str(tmp_path / "ckpts")

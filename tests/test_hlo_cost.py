@@ -1,0 +1,206 @@
+"""Trip-count-aware HLO cost model — unit tests on hand-built HLO text."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.launch import hlo_cost
+
+
+SIMPLE = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %dot.1)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %a)
+  %while.1 = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16] get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_flops():
+    cost = hlo_cost.analyze(SIMPLE)
+    # one dot: 2*8*16*16 = 4096 flops; body add: 1 flop -> x10 trips
+    assert cost.flops == 10 * (2 * 8 * 16 * 16 + 1)
+
+
+def test_parse_module_structure():
+    comps = hlo_cost.parse_module(SIMPLE)
+    assert set(comps) == {"body", "cond", "main"}
+    main = comps["main"]
+    assert [i.opcode for i in main.instrs] == [
+        "parameter", "constant", "tuple", "while", "get-tuple-element",
+    ]
+    w = main.by_name["while.1"]
+    assert w.shapes == [("s32", ()), ("f32", (8, 16))]
+
+
+FUSION = """\
+HloModule f
+
+%fused (p0: f32[128,256], p1: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256] parameter(0)
+  %p1 = f32[128,256] parameter(1)
+  %m = f32[128,256] multiply(%p0, %p1)
+  ROOT %a = f32[128,256] add(%m, %p1)
+}
+
+ENTRY %main (x: f32[128,256], y: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256] parameter(0)
+  %y = f32[128,256] parameter(1)
+  ROOT %fusion.1 = f32[128,256] fusion(%x, %y), kind=kLoop, calls=%fused
+}
+"""
+
+
+def test_fusion_boundary_bytes_and_inner_flops():
+    cost = hlo_cost.analyze(FUSION)
+    n = 128 * 256
+    assert cost.flops == 2 * n  # multiply + add
+    # bytes: 2 operands + 1 result at the fusion boundary, f32
+    assert cost.bytes == 3 * n * 4
+
+
+COLLECTIVES = """\
+HloModule c
+
+ENTRY %main (x: bf16[64,128]) -> bf16[64,128] {
+  %x = bf16[64,128] parameter(0)
+  %ar = bf16[64,128] all-reduce(%x), replica_groups=[4,16]<=[64], to_apply=%add
+  %ag = bf16[256,128] all-gather(%ar), replica_groups=[16,4]<=[64], dimensions={0}
+  %rs = bf16[64,128] reduce-scatter(%ag), replica_groups=[16,4]<=[64], dimensions={0}, to_apply=%add
+  %cp = bf16[64,128] collective-permute(%rs), source_target_pairs={{0,1},{1,2}}
+  ROOT %out = bf16[64,128] add(%cp, %x)
+}
+"""
+
+
+def test_collective_wire_bytes():
+    cost = hlo_cost.analyze(COLLECTIVES)
+    b = 64 * 128 * 2  # bf16 payload bytes
+    assert cost.coll["all-reduce"] == b
+    # all-gather result is group_size x operand: wire = result / 4
+    assert cost.coll["all-gather"] == b
+    # reduce-scatter result is operand / group_size: wire = result * 4
+    assert cost.coll["reduce-scatter"] == 4 * b
+    assert cost.coll["collective-permute"] == b
+    assert cost.coll_bytes == 7 * b
+
+
+def test_dot_batch_dims():
+    hlo = """\
+HloModule d
+
+ENTRY %main (a: f32[4,32,64], b: f32[4,64,16]) -> f32[4,32,16] {
+  %a = f32[4,32,64] parameter(0)
+  %b = f32[4,64,16] parameter(1)
+  ROOT %dot.9 = f32[4,32,16] dot(%a, %b), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    assert cost.flops == 2 * (4 * 32 * 16) * 64
+
+
+def test_nested_while():
+    hlo = """\
+HloModule n
+
+%inner_body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %x = f32[4] get-tuple-element(%p), index=1
+  %y = f32[4] add(%x, %x)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4]) tuple(%i, %y)
+}
+
+%inner_cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %c = pred[] constant(false)
+}
+
+%outer_body (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %w = (s32[], f32[4]) while(%p), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"5"}}
+}
+
+%outer_cond (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  ROOT %c = pred[] constant(false)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4]) tuple(%zero, %a)
+  %w = (s32[], f32[4]) while(%init), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %o = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    assert cost.flops == 3 * 5 * 4  # nested trip counts multiply
+
+
+def test_async_collective_counted_once():
+    hlo = """\
+HloModule a
+
+ENTRY %main (x: f32[32]) -> f32[32] {
+  %x = f32[32] parameter(0)
+  %s = (f32[32], f32[32]) all-gather-start(%x), replica_groups=[32,1]<=[32], dimensions={0}
+  ROOT %d = f32[32] all-gather-done(%s)
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    assert cost.coll["all-gather"] == 32 * 4  # counted at -start only
+
+
+def test_free_ops_cost_nothing():
+    hlo = """\
+HloModule z
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024] parameter(0)
+  %b = f32[1024] bitcast(%x)
+  %t = (f32[1024]) tuple(%b)
+  ROOT %g = f32[1024] get-tuple-element(%t), index=0
+}
+"""
+    cost = hlo_cost.analyze(hlo)
+    assert cost.flops == 0 and cost.bytes == 0
+
+
+def test_real_module_smoke():
+    """The parser handles a real compiled module (tiny model, 1 device)."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x, w):
+        for _ in range(3):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    xs = jnp.zeros((8, 64)), jnp.zeros((64, 64))
+    compiled = jax.jit(f).lower(*xs).compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    assert cost.flops >= 3 * 2 * 8 * 64 * 64  # at least the three matmuls
+    assert cost.bytes > 0

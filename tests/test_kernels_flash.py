@@ -1,0 +1,78 @@
+"""Pallas flash-attention kernel: sweep vs pure-jnp oracle (interpret mode)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _qkv(B, H, Hkv, S, D, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,D", [(128, 64), (256, 64), (256, 128), (512, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(S, D, causal):
+    q, k, v = _qkv(2, 4, 4, S, D)
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("H,Hkv", [(8, 2), (8, 8), (6, 1), (4, 2)])
+def test_flash_gqa_head_mapping(H, Hkv):
+    q, k, v = _qkv(1, H, Hkv, 256, 64, seed=1)
+    got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("window", [32, 128, 300])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(1, 2, 2, 512, 64, seed=2)
+    got = flash_attention(
+        q, k, v, causal=True, window=window, block_q=128, block_k=128
+    )
+    want = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(1, 2, 2, 256, 64, dtype=jnp.bfloat16, seed=3)
+    got = flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    want = attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+def test_flash_uneven_blocks():
+    """block_q != block_k and blocks smaller than S."""
+    q, k, v = _qkv(1, 2, 2, 512, 64, seed=4)
+    got = flash_attention(q, k, v, causal=True, block_q=256, block_k=128)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3)
+
+
+def test_flash_rejects_indivisible():
+    q, k, v = _qkv(1, 2, 2, 200, 64)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, v, block_q=128, block_k=128)
+
+
+def test_custom_scale():
+    q, k, v = _qkv(1, 2, 2, 128, 64, seed=5)
+    got = flash_attention(q, k, v, causal=False, scale=0.5, block_q=128, block_k=128)
+    want = attention_ref(q, k, v, causal=False, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3)

@@ -1,0 +1,389 @@
+"""Per-arch smoke tests (reduced configs): forward / train step / decode.
+
+One test per assigned architecture instantiates the reduced config of
+the same family and runs a forward + one train step on CPU, asserting
+output shapes and no NaNs (the instructions' smoke contract). Decode
+parity tests check prefill+decode against the full-sequence forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def _batch(cfg: ModelConfig, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S)
+        )
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.is_encdec:
+        batch["enc_frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
+    batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = C.get_smoke_config(arch)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    B, S = batch["labels"].shape
+
+    hidden, aux = T.forward_hidden(params, cfg, batch)
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert not bool(jnp.isnan(hidden).any())
+
+    opt_cfg = adamw.OptConfig(warmup_steps=2, decay_steps=10)
+    opt = adamw.init(params)
+
+    @jax.jit
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        params, opt, om = adamw.update(opt_cfg, grads, opt, params)
+        return params, opt, {**metrics, **om}
+
+    params2, opt2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    assert float(m["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_smoke_full_config_consistency(arch):
+    """Full config matches the assigned table (spot dims, no allocation)."""
+    cfg = C.get_config(arch)
+    smoke = C.get_smoke_config(arch)
+    assert cfg.family == smoke.family
+    assert cfg.num_layers >= smoke.num_layers
+    # params materialize abstractly
+    shapes = jax.eval_shape(lambda: T.model_init(jax.random.PRNGKey(0), cfg))
+    n = sum(x.size for x in jax.tree.leaves(shapes))
+    # every assigned arch is large (whisper-tiny ~70M; the rest >= 1B)
+    assert n > 5e7, n
+
+
+FULL_DIMS = {
+    "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+}
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_assigned_dims_exact(arch):
+    L, d, H, Hkv, ff, V = FULL_DIMS[arch]
+    cfg = C.get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.vocab_size == V
+    if arch == "mamba2-2.7b":
+        assert cfg.family == "ssm" and cfg.ssm_state == 128
+    else:
+        assert cfg.num_heads == H and cfg.num_kv_heads == Hkv
+    if ff:
+        assert cfg.d_ff == ff or cfg.moe_d_ff == ff
+    if arch.startswith("deepseek"):
+        assert cfg.num_experts == 64 and cfg.moe_top_k == 6
+        assert cfg.num_shared_experts == 2
+    if arch == "deepseek-v2-lite-16b":
+        assert cfg.attention == "mla" and cfg.kv_lora_rank == 512
+    if arch == "jamba-v0.1-52b":
+        assert cfg.attn_period == 8  # 1:7 attn:mamba interleave
+        assert cfg.num_experts == 16 and cfg.moe_top_k == 2
+    if arch == "h2o-danube-1.8b":
+        assert cfg.sliding_window
+    if arch == "qwen2-vl-7b":
+        assert cfg.pos_scheme == "mrope"
+    if arch == "whisper-tiny":
+        assert cfg.encoder_layers == 4
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_smoke_opt_variant_matches_baseline(arch):
+    """The §Perf 'opt' bundle (chunked attention, bf16 norms, row-wise
+    MoE, absorbed MLA) must stay numerically close to the faithful
+    baseline on every arch — guards flag interactions."""
+    from repro.launch.steps import VARIANTS
+
+    base = C.get_smoke_config(arch)
+    # high capacity so flat vs row-wise dispatch see no differential drops
+    base = dataclasses.replace(base, capacity_factor=16.0, attn_chunk=16)
+    opt = dataclasses.replace(base, **VARIANTS["opt"])
+    params = T.model_init(jax.random.PRNGKey(0), base)
+    batch = _batch(base, B=2, S=32)
+
+    h_base, _ = T.forward_hidden(params, base, batch)
+    h_opt, _ = T.forward_hidden(params, opt, batch)
+    assert not bool(jnp.isnan(h_opt).any())
+    a = np.asarray(h_base, np.float32)
+    b = np.asarray(h_opt, np.float32)
+    if base.num_experts:
+        # MoE routing is discontinuous: bf16-norm rounding flips top-k
+        # for near-tie tokens, changing those positions entirely. Bound
+        # the flip fraction instead of elementwise closeness.
+        close = np.isclose(a, b, atol=8e-2, rtol=8e-2)
+        assert close.mean() > 0.9, close.mean()
+    else:
+        np.testing.assert_allclose(a, b, atol=8e-2, rtol=8e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode parity: prefill + decode == full forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "arch", ["yi-6b", "h2o-danube-1.8b", "deepseek-v2-lite-16b", "mamba2-2.7b",
+             "jamba-v0.1-52b", "whisper-tiny"]
+)
+def test_prefill_decode_matches_forward(arch):
+    """Greedy tokens from (prefill S) + (decode 1) must match the
+    argmax of the full-forward logits at the same positions."""
+    cfg = C.get_smoke_config(arch)
+    # capacity drops depend on batch size, so prefill+decode == forward
+    # only holds when no token is dropped — lift the MoE capacity.
+    cfg = dataclasses.replace(cfg, attn_impl="reference", capacity_factor=16.0)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    B, S, extra = 2, 16, 4
+    max_seq = S + extra
+    batch = _batch(cfg, B, S, seed=1)
+    batch.pop("labels")
+
+    logits_p, cache = T.prefill(params, cfg, batch, max_seq)
+
+    # reference: full forward over S tokens -> last-position logits
+    hidden, _ = T.forward_hidden(params, cfg, batch)
+    from repro.models.layers import rmsnorm  # noqa: F401  (hidden is normed)
+
+    table = (params["embed"] if cfg.tie_embeddings else params["lm_head"])["table"]
+    ref_logits = jnp.einsum(
+        "bd,vd->bv", hidden[:, -1].astype(jnp.float32), table.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(ref_logits), atol=2e-2, rtol=2e-2
+    )
+
+    if cfg.family == "vlm":
+        return  # decode path needs token embeddings; vlm uses embeds
+
+    # decode `extra` steps greedily; compare against running the full
+    # sequence through the forward each time.
+    toks = batch["tokens"]
+    cur = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    for t in range(extra):
+        full = jnp.concatenate([toks, cur[:, None]], 1)
+        logits_d, cache = T.decode_step(params, cfg, cur, jnp.int32(S + t), cache)
+        fb = dict(batch)
+        fb["tokens"] = full
+        hidden_f, _ = T.forward_hidden(params, cfg, fb)
+        ref = jnp.einsum(
+            "bd,vd->bv", hidden_f[:, -1].astype(jnp.float32),
+            table.astype(jnp.float32),
+        )
+        # bf16 cache quantization drifts slightly over decode steps
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(ref), atol=8e-2, rtol=8e-2
+        )
+        toks = full
+        cur = jnp.argmax(logits_d, -1).astype(jnp.int32)
+
+
+def test_swa_ring_buffer_decode_matches_full():
+    """h2o-danube SWA cache is a ring buffer of `window` slots; beyond
+    the window the decode must still match full-sequence attention."""
+    cfg = C.get_smoke_config("h2o-danube-1.8b")
+    window = cfg.sliding_window
+    assert window is not None and window <= 16
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    B, S = 1, int(window)  # prefill exactly one window
+    extra = int(window)  # decode a full extra window (forces wrap)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)}
+    table = params["lm_head"]["table"]
+
+    _, cache = T.prefill(params, cfg, batch, max_seq=S + extra)
+    toks = batch["tokens"]
+    cur = toks[:, -1] * 0 + 7
+    for t in range(extra):
+        full = jnp.concatenate([toks, cur[:, None]], 1)
+        logits_d, cache = T.decode_step(params, cfg, cur, jnp.int32(S + t), cache)
+        hidden_f, _ = T.forward_hidden(params, cfg, {"tokens": full})
+        ref = jnp.einsum(
+            "bd,vd->bv", hidden_f[:, -1].astype(jnp.float32),
+            table.astype(jnp.float32),
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits_d), np.asarray(ref), atol=5e-2, rtol=5e-2
+        )
+        toks, cur = full, jnp.argmax(logits_d, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# mixer-level oracles
+# ---------------------------------------------------------------------------
+
+
+def test_moe_capacity_matches_dense_oracle():
+    from repro.models import moe as M
+
+    cfg = dataclasses.replace(
+        C.get_smoke_config("deepseek-moe-16b"),
+        capacity_factor=8.0,  # no drops -> must equal the dense oracle
+    )
+    key = jax.random.PRNGKey(0)
+    params = M.moe_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    got, aux = M.moe_apply(params, x, cfg)
+    want = M.moe_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-2, rtol=2e-2)
+    assert float(aux) >= 0
+
+
+def test_moe_rowwise_matches_dense_oracle():
+    """Row-wise (DP×EP-shardable) dispatch == dense oracle (§Perf it 3)."""
+    from repro.models import moe as M
+
+    cfg = dataclasses.replace(
+        C.get_smoke_config("deepseek-moe-16b"),
+        capacity_factor=8.0, moe_row_dispatch=True,
+    )
+    params = M.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 16, cfg.d_model), jnp.float32)
+    got, aux = M.moe_apply(params, x, cfg)
+    want = M.moe_ref(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-2, rtol=2e-2)
+    assert float(aux) >= 0
+
+
+def test_moe_rowwise_sharded_parity(run_multidevice):
+    """Row-wise dispatch is exact under a (data, model) mesh."""
+    run_multidevice("""
+    import dataclasses
+    from jax.sharding import NamedSharding
+    from repro import configs as C
+    from repro.models import moe as M
+
+    cfg = dataclasses.replace(C.get_smoke_config('deepseek-moe-16b'),
+                              capacity_factor=4.0, moe_row_dispatch=True)
+    params = M.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+    ref, _ = jax.jit(lambda p, x: M.moe_apply(p, x, cfg))(params, x)
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    xd = jax.device_put(x, NamedSharding(mesh, P('data', None, None)))
+    with jax.set_mesh(mesh):
+        got, _ = jax.jit(lambda p, x: M.moe_apply(p, x, cfg))(params, xd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+    print('rowwise sharded parity OK')
+    """)
+
+
+def test_moe_capacity_drops_with_tight_factor():
+    from repro.models import moe as M
+
+    cfg = dataclasses.replace(
+        C.get_smoke_config("deepseek-moe-16b"), capacity_factor=0.05
+    )
+    params = M.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    got, _ = M.moe_apply(params, x, cfg)
+    want = M.moe_ref(params, x, cfg)
+    # with heavy drops outputs differ from the oracle
+    assert not np.allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_mamba2_chunked_matches_naive_recurrence():
+    """Chunked SSD == token-by-token recurrence (the decode path)."""
+    from repro.models import mamba2 as M
+
+    cfg = C.get_smoke_config("mamba2-2.7b")
+    params = M.mamba2_init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, int(cfg.ssm_chunk * 2.5)  # exercise padding + multi-chunk
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32) * 0.3
+
+    full = M.mamba2_apply(params, x, cfg)
+
+    cache = M.mamba2_init_cache(cfg, B)
+    outs = []
+    for t in range(S):
+        y, cache = M.mamba2_decode(params, x[:, t : t + 1], cache, cfg)
+        outs.append(y)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(seq, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+def test_mamba2_prefill_state_handoff():
+    """prefill(x[:S]) state + decode == apply over the full sequence."""
+    from repro.models import mamba2 as M
+
+    cfg = C.get_smoke_config("mamba2-2.7b")
+    params = M.mamba2_init(jax.random.PRNGKey(0), cfg)
+    B, S = 1, int(cfg.ssm_chunk) + 3
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S + 1, cfg.d_model), jnp.float32) * 0.3
+
+    _, cache = M.mamba2_prefill(params, x[:, :S], cfg)
+    y_dec, _ = M.mamba2_decode(params, x[:, S : S + 1], cache, cfg)
+    y_full = M.mamba2_apply(params, x, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0], np.float32), np.asarray(y_full[:, S], np.float32),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+def test_layer_groups_cover_all_layers():
+    for arch in C.ARCHS:
+        cfg = C.get_config(arch)
+        groups = cfg.layer_groups()
+        total = sum(len(p) * r for p, r in groups)
+        assert total == cfg.num_layers, arch
+        # group expansion reproduces the per-layer specs exactly
+        flat = []
+        for pattern, reps in groups:
+            flat.extend(list(pattern) * reps)
+        assert flat == [cfg.layer_spec(i) for i in range(cfg.num_layers)], arch
+
+
+def test_jamba_interleave_pattern():
+    cfg = C.get_config("jamba-v0.1-52b")
+    specs = [cfg.layer_spec(i) for i in range(16)]
+    attn_layers = [i for i, s in enumerate(specs) if s.mixer == "gqa"]
+    assert attn_layers == [4, 12]  # 1 attention per 8 layers, offset 4
+    moe_layers = [i for i, s in enumerate(specs) if s.ffn == "moe"]
+    assert moe_layers == [1, 3, 5, 7, 9, 11, 13, 15]  # every other layer

@@ -1,0 +1,89 @@
+"""build_cell / input_specs / hints: the dry-run path on tiny meshes.
+
+The full 512-device dry-run runs via ``python -m repro.launch.dryrun``;
+here we verify the same machinery lowers + compiles for every arch on a
+1-device mesh with smoke configs (fast), plus spec plumbing units.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as C
+from repro.configs.shapes import SHAPES, Shape, applicable, input_specs
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import _sanitize, build_cell
+from repro.parallel.hints import maybe_shard, resolve_spec
+
+
+SMOKE_SHAPES = {
+    "train": Shape("train_smoke", "train", 32, 4),
+    "prefill": Shape("prefill_smoke", "prefill", 32, 2),
+    "decode": Shape("decode_smoke", "decode", 64, 4),
+}
+
+
+@pytest.fixture(scope="module")
+def host_mesh():
+    return make_host_mesh(model=1)
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_smoke_cell_lowers_and_compiles(arch, kind, host_mesh, monkeypatch):
+    shape = SMOKE_SHAPES[kind]
+    monkeypatch.setitem(C.SHAPES, shape.name, shape)
+    cell = build_cell(arch, shape.name, host_mesh, smoke=True)
+    compiled = cell.lower().compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_applicability_matrix():
+    runs = {(a, s) for a in C.ARCHS for s in SHAPES if applicable(a, s)[0]}
+    # long_500k only for sub-quadratic archs
+    assert ("mamba2-2.7b", "long_500k") in runs
+    assert ("jamba-v0.1-52b", "long_500k") in runs
+    assert ("h2o-danube-1.8b", "long_500k") in runs
+    assert ("llama3-8b", "long_500k") not in runs
+    assert ("whisper-tiny", "long_500k") not in runs
+    # everything else runs everywhere
+    assert ("llama3-8b", "train_4k") in runs
+    assert len(runs) == 10 * 4 - 7  # 7 long_500k skips
+
+
+def test_input_specs_shapes():
+    cfg = C.get_config("llama3-8b")
+    s = input_specs(cfg, SHAPES["train_4k"])
+    assert s["batch"]["tokens"].shape == (256, 4096)
+    assert s["batch"]["labels"].dtype == jnp.int32
+
+    s = input_specs(cfg, SHAPES["decode_32k"])
+    assert s["tokens"].shape == (128,)
+    cache_leaves = jax.tree.leaves(s["cache"])
+    assert any(l.shape[-3:-2] == (32768,) or 32768 in l.shape for l in cache_leaves)
+
+    vlm = C.get_config("qwen2-vl-7b")
+    s = input_specs(vlm, SHAPES["prefill_32k"])
+    assert s["batch"]["embeds"].shape == (32, 32768, vlm.d_model)
+    assert s["batch"]["positions"].shape == (3, 32, 32768)
+
+    wt = C.get_config("whisper-tiny")
+    s = input_specs(wt, SHAPES["train_4k"])
+    assert s["batch"]["enc_frames"].shape == (256, 1500, 384)
+
+
+def test_sanitize_drops_missing_axes():
+    mesh = make_host_mesh(model=1)  # axes: data, model
+    assert _sanitize(P(("pod", "data"), None), mesh) == P("data", None)
+    assert _sanitize(P("pod"), mesh) == P(None)
+    assert _sanitize(None, mesh) == P()
+    assert _sanitize(P(None, "model"), mesh) == P(None, "model")
+
+
+def test_maybe_shard_no_mesh_noop():
+    x = jnp.ones((4, 4))
+    assert maybe_shard(x, ("pod", "data"), None) is x
+    assert resolve_spec("model") is None

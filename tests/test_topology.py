@@ -1,0 +1,116 @@
+"""MeshTopology: XY routing, distances, multicast trees (unit + property)."""
+
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import MeshTopology
+
+
+def test_coord_node_id_roundtrip():
+    topo = MeshTopology(4, 5)
+    for n in topo.nodes():
+        assert topo.node_id(topo.coord(n)) == n
+    assert topo.coord(0) == (0, 0)
+    assert topo.coord(4) == (0, 1)  # row-major by rows of nx
+
+
+def test_bad_coords_raise():
+    topo = MeshTopology(4, 4)
+    with pytest.raises(ValueError):
+        topo.coord(16)
+    with pytest.raises(ValueError):
+        topo.node_id((4, 0))
+
+
+def test_xy_path_is_x_first():
+    topo = MeshTopology(4, 4)
+    path = topo.xy_path((0, 0), (2, 2))
+    # first moves change x, later moves change y
+    assert path[0] == ((0, 0), (1, 0))
+    assert path[1] == ((1, 0), (2, 0))
+    assert path[2] == ((2, 0), (2, 1))
+    assert path[3] == ((2, 1), (2, 2))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    nx=st.integers(2, 8),
+    ny=st.integers(2, 8),
+    data=st.data(),
+)
+def test_path_length_equals_manhattan(nx, ny, data):
+    topo = MeshTopology(nx, ny)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    path = topo.xy_path(a, b)
+    ca, cb = topo.coord(a), topo.coord(b)
+    manhattan = abs(ca[0] - cb[0]) + abs(ca[1] - cb[1])
+    assert len(path) == manhattan == topo.distance(a, b)
+    # path is connected and ends at b
+    if path:
+        assert path[0][0] == ca
+        assert path[-1][1] == cb
+        for (s0, d0), (s1, _) in zip(path, path[1:]):
+            assert d0 == s1
+        # every link is between adjacent nodes
+        for s, d in path:
+            assert abs(s[0] - d[0]) + abs(s[1] - d[1]) == 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(nx=st.integers(2, 8), ny=st.integers(2, 8), data=st.data())
+def test_torus_distance_leq_mesh(nx, ny, data):
+    mesh = MeshTopology(nx, ny, torus=False)
+    torus = MeshTopology(nx, ny, torus=True)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    assert torus.distance(a, b) <= mesh.distance(a, b)
+    # torus axis distance is at most half the ring
+    ca, cb = mesh.coord(a), mesh.coord(b)
+    assert torus.distance(a, b) <= nx // 2 + ny // 2 + 1
+
+
+def test_torus_wraps():
+    topo = MeshTopology(4, 4, torus=True)
+    assert topo.distance((0, 0), (3, 0)) == 1
+    path = topo.xy_path((0, 0), (3, 0))
+    assert path == [((0, 0), (3, 0))]
+
+
+def test_multicast_tree_shares_prefix():
+    topo = MeshTopology(4, 4)
+    # two dests in the same row beyond each other: shared prefix
+    links = topo.multicast_tree_links(0, [topo.node_id((2, 0)), topo.node_id((3, 0))])
+    assert len(links) == 3  # 0->1->2->3, not 2+3
+    # diverging dests: union
+    links = topo.multicast_tree_links(0, [topo.node_id((0, 2)), topo.node_id((2, 0))])
+    assert len(links) == 4
+
+
+@settings(max_examples=60, deadline=None)
+@given(data=st.data())
+def test_multicast_tree_bounds(data):
+    topo = MeshTopology(8, 8)
+    dsts = data.draw(
+        st.lists(st.integers(1, 63), min_size=1, max_size=12, unique=True)
+    )
+    tree = topo.multicast_tree_links(0, dsts)
+    per_path = [len(topo.xy_path(0, d)) for d in dsts]
+    assert max(per_path) <= len(tree) <= sum(per_path)
+
+
+def test_snake_order_unit_hops():
+    topo = MeshTopology(5, 4)
+    order = topo.snake_order()
+    assert sorted(order) == list(range(20))
+    for a, b in zip(order, order[1:]):
+        assert topo.distance(a, b) == 1
+
+
+def test_path_nodes_inclusive():
+    topo = MeshTopology(4, 4)
+    nodes = topo.path_nodes(0, topo.node_id((2, 1)))
+    assert nodes[0] == (0, 0) and nodes[-1] == (2, 1)
+    assert len(nodes) == topo.distance(0, topo.node_id((2, 1))) + 1
