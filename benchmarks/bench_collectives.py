@@ -7,6 +7,11 @@ is the scheduled ppermute chain. On CPU the wall-clock ratio is not
 meaningful for TPU — the *collective wire bytes* (trip-count-aware HLO
 parse) are the portable metric and must match the ring-algorithm
 prediction 2·(L-1)/L · payload per device.
+
+The ``num_chains`` knob is surfaced here too: multi-chain all-reduce
+(K=2/K=4 partitioned sub-rings, the hierarchical generalization) must
+match the rotation-schedule byte prediction (S+K-2 payloads/device),
+and multi-chain broadcast (K=2) is timed against the single chain.
 """
 
 from __future__ import annotations
@@ -46,8 +51,19 @@ def chain_ar(x):
 def xla_ar(x):
     return jax.lax.psum(x[0], "x")[None]
 
+def multi2_ar(x):
+    return cw.multi_chain_all_reduce(x[0], "x", [(0,1,2,3), (4,5,6,7)])[None]
+
+def multi4_ar(x):
+    return cw.multi_chain_all_reduce(x[0], "x", [(0,1), (2,3), (4,5), (6,7)])[None]
+
 results = {}
-for name, fn in [("chain_all_reduce", chain_ar), ("xla_all_reduce", xla_ar)]:
+for name, fn in [
+    ("chain_all_reduce", chain_ar),
+    ("multi_chain_all_reduce_k2", multi2_ar),
+    ("multi_chain_all_reduce_k4", multi4_ar),
+    ("xla_all_reduce", xla_ar),
+]:
     sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     jitted = jax.jit(sm)
     us = time_fn(jitted, x)
@@ -60,6 +76,29 @@ payload = N * 4
 ring_pred = 2 * (L - 1) / L * payload
 chain_bytes = results["chain_all_reduce"][1]
 assert 0.9 * ring_pred <= chain_bytes <= 1.35 * ring_pred, (chain_bytes, ring_pred)
+# Multi-chain trades wire bytes for chain length: K=2 over 8 devices is
+# (S-1)+(K-1) = 4 full-payload sends/device (rotation schedule).
+k2_pred = (L // 2 - 1 + 1) * payload
+k2_bytes = results["multi_chain_all_reduce_k2"][1]
+assert 0.9 * k2_pred <= k2_bytes <= 1.35 * k2_pred, (k2_bytes, k2_pred)
+
+# P2MP broadcast: single chain vs 2 partitioned chains (wire bytes drop
+# because the longest chain halves: 7 sequential hops -> 2x3+1 concurrent).
+def chain_bc(x):
+    return cw.chain_broadcast(x[0], "x", tuple(range(8)), num_frames=4)[None]
+
+def multi_bc(x):
+    return cw.multi_chain_broadcast(
+        x[0], "x", 0, [(1, 2, 3), (4, 5, 6, 7)], num_frames=4)[None]
+
+for name, fn in [("chain_broadcast", chain_bc), ("multi_chain_broadcast_k2", multi_bc)]:
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    jitted = jax.jit(sm)
+    us = time_fn(jitted, x)
+    cost = hlo_cost.analyze(jitted.lower(x).compile().as_text())
+    results[name] = (us, cost.coll_bytes)
+    np.testing.assert_allclose(np.asarray(jitted(x)), np.ones((L, N), np.float32))
+
 for name, (us, cb) in results.items():
     print(f"{name},{us:.1f},{cb:.0f}")
 """

@@ -7,6 +7,12 @@ Validation targets (paper §IV-C):
   * greedy ≈ multicast;
   * TSP ≤ multicast at scale; both → ~1 hop/dst at N_dst = 63;
   * unicast converges to the mesh's average Manhattan distance.
+
+Beyond the paper — multi-chain Chainwrite completion latency: the same
+destination sets scheduled as K partitioned concurrent chains
+(``partition_schedule`` + ``multi_chain_latency``). Validation: for
+every ≥16-destination set, K≥2 completion latency is *strictly below*
+the single-chain schedule, and auto-K is never worse than any fixed K.
 """
 
 from __future__ import annotations
@@ -18,13 +24,22 @@ from repro.core.scheduling import (
     SCHEDULERS,
     chain_total_hops,
     multicast_total_hops,
+    partition_schedule,
     unicast_total_hops,
+)
+from repro.core.simulator import (
+    chainwrite_latency,
+    choose_num_chains,
+    multi_chain_latency,
 )
 from repro.core.topology import MeshTopology
 
 TOPO = MeshTopology(8, 8)
 GROUPS = (4, 8, 16, 24, 32, 40, 48, 63)
 REPEATS = 128
+MC_GROUPS = (16, 24, 32, 48)  # multi-chain latency sweep (>= 16 dsts)
+MC_REPEATS = 24
+MC_SIZE = 64 * 1024  # Fig. 7's 64 KB working payload
 
 
 def sweep(repeats: int = REPEATS) -> dict[int, dict[str, float]]:
@@ -41,6 +56,38 @@ def sweep(repeats: int = REPEATS) -> dict[int, dict[str, float]]:
                 order = SCHEDULERS[s](TOPO, dsts, 0)
                 acc[s] += chain_total_hops(TOPO, order, 0) / n
         out[n] = {k: v / repeats for k, v in acc.items()}
+    return out
+
+
+def multichain_sweep(
+    repeats: int = MC_REPEATS,
+) -> dict[int, dict[str, float]]:
+    """Completion latency (CC) of K-chain vs single-chain schedules."""
+    rng = random.Random(7)
+    out: dict[int, dict[str, float]] = {}
+    for n in MC_GROUPS:
+        acc = {"k1": 0.0, "k2": 0.0, "k3": 0.0, "auto": 0.0, "auto_k": 0.0}
+        k2_always_below = True
+        for _ in range(repeats):
+            dsts = rng.sample(range(1, 64), n)
+            single = SCHEDULERS["tsp"](TOPO, dsts, 0)
+            lat1 = chainwrite_latency(TOPO, 0, single, MC_SIZE)
+            lat_k = {}
+            for k in (2, 3):
+                chains = partition_schedule(TOPO, dsts, 0, num_chains=k)
+                lat_k[k] = multi_chain_latency(TOPO, 0, chains, MC_SIZE)
+            auto_k, auto_chains = choose_num_chains(TOPO, 0, dsts, MC_SIZE)
+            lat_auto = multi_chain_latency(TOPO, 0, auto_chains, MC_SIZE)
+            if lat_k[2] >= lat1:
+                k2_always_below = False
+            assert lat_auto <= lat1  # K=1 is an auto-K candidate
+            acc["k1"] += lat1
+            acc["k2"] += lat_k[2]
+            acc["k3"] += lat_k[3]
+            acc["auto"] += lat_auto
+            acc["auto_k"] += auto_k
+        out[n] = {key: v / repeats for key, v in acc.items()}
+        out[n]["k2_always_below_k1"] = float(k2_always_below)
     return out
 
 
@@ -64,6 +111,20 @@ def main() -> list[tuple[str, float, str]]:
         ))
     rows.append(("fig6.tsp_beats_multicast@48", us,
                  str(table[48]["tsp"] <= table[48]["multicast"])))
+
+    t1 = time.perf_counter()
+    mc = multichain_sweep()
+    mc_us = (time.perf_counter() - t1) * 1e6 / (len(MC_GROUPS) * MC_REPEATS)
+    for n, r in mc.items():
+        # K>=2 must beat the single chain on EVERY >=16-dst set.
+        assert r["k2_always_below_k1"] == 1.0, (n, r)
+        rows.append((
+            f"fig6.multichain_latency_cc@n{n}", mc_us,
+            "k1={k1:.0f} k2={k2:.0f} k3={k3:.0f} auto={auto:.0f} "
+            "(avg auto K={auto_k:.1f}, speedup k2 {sp:.2f}x)".format(
+                sp=r["k1"] / r["k2"], **r
+            ),
+        ))
     return rows
 
 

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# The single CI entry point — humans and automation invoke the same
+# command (ROADMAP.md "Tier-1 verify"). Runs the full offline test
+# suite; add BENCH=1 to also run the benchmark harness's assertions.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+
+if [[ "${BENCH:-0}" == "1" ]]; then
+    python -m benchmarks.run
+fi

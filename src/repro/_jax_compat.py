@@ -1,0 +1,192 @@
+"""Backfill newer-jax API names onto older jax installs (>= 0.4.37).
+
+The repo is written against the current jax surface:
+
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., axis_names=...,
+  check_vma=...)``
+* ``jax.set_mesh(mesh)`` as a context manager
+* ``jax.sharding.AxisType`` / ``Mesh.axis_types``
+* ``jax.sharding.get_abstract_mesh()``
+* ``jax.make_mesh(..., axis_types=...)``
+
+Older jax (e.g. the 0.4.x line baked into this container) spells these
+``jax.experimental.shard_map.shard_map(..., auto=..., check_rep=...)``,
+has no axis types, and resolves bare ``PartitionSpec`` sharding
+constraints through the legacy ``with mesh:`` resource-env context.
+:func:`install` bridges the gap by installing thin adapters onto the
+``jax`` modules; it is a no-op wherever the real name already exists,
+so the same tree runs unmodified on current jax.
+
+Called once from ``repro/__init__.py`` — importing any ``repro``
+module guarantees the shims are in place.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+import threading
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+class _TLS(threading.local):
+    def __init__(self):
+        self.mesh = None  # innermost jax.set_mesh() mesh
+        self.manual_axes: tuple[frozenset, ...] = ()
+
+
+_tls = _TLS()
+
+
+class _CompatAbstractMesh:
+    """Just enough of AbstractMesh for ``parallel.hints``: axis names
+    plus per-axis types (Manual inside a compat shard_map region)."""
+
+    def __init__(self, mesh, manual: frozenset):
+        self._mesh = mesh
+        self._manual = manual
+
+    @property
+    def empty(self) -> bool:
+        return self._mesh is None or not self._mesh.axis_names
+
+    @property
+    def axis_names(self):
+        return self._mesh.axis_names if self._mesh is not None else ()
+
+    @property
+    def axis_types(self):
+        at = jax.sharding.AxisType
+        return tuple(
+            at.Manual if name in self._manual else at.Auto
+            for name in self.axis_names
+        )
+
+    @property
+    def shape(self):
+        return self._mesh.shape if self._mesh is not None else {}
+
+
+def _get_abstract_mesh():
+    manual = frozenset().union(*_tls.manual_axes) if _tls.manual_axes else frozenset()
+    return _CompatAbstractMesh(_tls.mesh, manual)
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    """Compat ``jax.set_mesh``: legacy resource-env mesh context (so bare
+    ``PartitionSpec`` sharding constraints resolve) + visibility to
+    :func:`_get_abstract_mesh`."""
+    prev = _tls.mesh
+    _tls.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _tls.mesh = prev
+
+
+def _make_shard_map(legacy_shard_map):
+    def shard_map(
+        f=None,
+        *,
+        mesh,
+        in_specs,
+        out_specs,
+        axis_names=None,
+        check_vma=None,
+        check_rep=None,
+    ):
+        if f is None:  # decorator form: jax.shard_map(mesh=...)(f)
+            return functools.partial(
+                shard_map,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                axis_names=axis_names,
+                check_vma=check_vma,
+                check_rep=check_rep,
+            )
+        all_axes = frozenset(mesh.axis_names)
+        manual = all_axes if axis_names is None else frozenset(axis_names)
+        auto = all_axes - manual
+        check = check_vma if check_vma is not None else check_rep
+        if check is None:
+            check = not auto  # partial-manual + check_rep is unsupported
+
+        @functools.wraps(f)
+        def traced(*args, **kwargs):
+            _tls.manual_axes = _tls.manual_axes + (manual,)
+            try:
+                return f(*args, **kwargs)
+            finally:
+                _tls.manual_axes = _tls.manual_axes[:-1]
+
+        return legacy_shard_map(
+            traced,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=bool(check),
+            auto=auto,
+        )
+
+    return shard_map
+
+
+def _wrap_make_mesh(orig):
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types  # old jax: every axis behaves as Auto
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    return make_mesh
+
+
+def install() -> None:
+    """Idempotently install every missing shim."""
+    sh = jax.sharding
+
+    if not hasattr(sh, "AxisType"):
+        # NB: 0.4.x Mesh instances carry an unrelated dict-valued
+        # ``axis_types``; repo code only reads per-axis types off
+        # ``get_abstract_mesh()``, which is shimmed below.
+        sh.AxisType = _AxisType
+
+    if not hasattr(sh, "get_abstract_mesh"):
+        sh.get_abstract_mesh = _get_abstract_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as legacy
+
+        jax.shard_map = _make_shard_map(legacy)
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+
+    if not hasattr(jax.lax, "axis_size"):
+        from jax import core as _core
+
+        def _axis_size(axis_name):
+            if isinstance(axis_name, (tuple, list)):
+                size = 1
+                for name in axis_name:
+                    size *= _axis_size(name)
+                return size
+            frame = _core.axis_frame(axis_name)
+            # 0.4.x returns the bare size; keep .size compat just in case.
+            return getattr(frame, "size", frame)
+
+        jax.lax.axis_size = _axis_size

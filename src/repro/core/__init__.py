@@ -16,9 +16,17 @@ from .chainwrite import (
     chain_broadcast,
     chain_edges,
     chain_reduce_scatter,
+    multi_chain_all_reduce,
+    multi_chain_broadcast,
     xla_broadcast,
 )
-from .chaintask import AffinePattern, ChainConfig, ChainTask, Phase
+from .chaintask import (
+    AffinePattern,
+    ChainConfig,
+    ChainTask,
+    MultiChainTask,
+    Phase,
+)
 from .scheduling import (
     SCHEDULERS,
     brute_force_schedule,
@@ -26,6 +34,9 @@ from .scheduling import (
     greedy_schedule,
     multicast_total_hops,
     naive_schedule,
+    partition_balance_slack,
+    partition_schedule,
+    partition_total_hops,
     tsp_schedule,
     unicast_total_hops,
 )
@@ -33,8 +44,10 @@ from .simulator import (
     DEFAULT_PARAMS,
     SimParams,
     chainwrite_latency,
+    choose_num_chains,
     config_overhead_per_destination,
     eta_p2mp,
+    multi_chain_latency,
     multicast_latency,
     p2mp_efficiency_point,
     p2p_latency,
@@ -62,12 +75,20 @@ __all__ = [
     "chainwrite_latency",
     "config_overhead_per_destination",
     "eta_p2mp",
+    "choose_num_chains",
     "greedy_schedule",
+    "multi_chain_all_reduce",
+    "multi_chain_broadcast",
+    "multi_chain_latency",
+    "MultiChainTask",
     "multicast_latency",
     "multicast_total_hops",
     "naive_schedule",
     "p2mp_efficiency_point",
     "p2p_latency",
+    "partition_balance_slack",
+    "partition_schedule",
+    "partition_total_hops",
     "tsp_schedule",
     "unicast_latency",
     "unicast_total_hops",

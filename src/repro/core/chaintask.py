@@ -12,6 +12,11 @@ multicast, elastic re-layout). This module is that application layer:
   CFG_DISPATCH → GRANT_BACKPROP → DATA → FINISH_BACKPROP, with a
   per-phase cycle ledger from :mod:`.simulator` so runtime decisions
   (chain vs unicast, scheduler choice) can be made from predicted cost.
+* :class:`MultiChainTask` — the multi-chain extension: partitions the
+  destination set into K link-disjoint-preferring sub-chains
+  (``scheduling.partition_schedule``) and drives one :class:`ChainTask`
+  per sub-chain, with a merged per-phase ledger whose ``total`` is the
+  concurrent critical path (``simulator.multi_chain_latency``).
 
 The DATA phase executes a real copy through a pluggable ``transport``
 (by default an in-process store-and-forward through per-node buffers —
@@ -28,7 +33,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from . import simulator
-from .scheduling import SCHEDULERS
+from .scheduling import SCHEDULERS, partition_schedule
 from .topology import MeshTopology
 
 
@@ -84,6 +89,7 @@ class ChainTask:
         payload: np.ndarray,
         *,
         scheduler: str = "greedy",
+        order: Sequence[int] | None = None,
         pattern: AffinePattern | None = None,
         sim_params: simulator.SimParams = simulator.DEFAULT_PARAMS,
     ) -> None:
@@ -94,9 +100,14 @@ class ChainTask:
         self.topo = topo
         self.source = source
         self.payload = np.ascontiguousarray(payload)
-        self.order: list[int] = SCHEDULERS[scheduler](
-            topo, list(destinations), source
-        )
+        if order is not None:
+            # Caller supplies a pre-computed traversal (e.g. one
+            # sub-chain of a MultiChainTask partition).
+            if sorted(order) != sorted(destinations):
+                raise ValueError("order must permute the destinations")
+            self.order = [int(d) for d in order]
+        else:
+            self.order = SCHEDULERS[scheduler](topo, list(destinations), source)
         self.scheduler = scheduler
         self.sim_params = sim_params
         self.pattern = pattern or AffinePattern(
@@ -183,6 +194,118 @@ class ChainTask:
     def unicast_cycles(self) -> int:
         return simulator.unicast_latency(
             self.topo, self.source, self.order, self.payload.nbytes, self.sim_params
+        )
+
+    def speedup_vs_unicast(self) -> float:
+        return self.unicast_cycles() / max(1, self.predicted_cycles())
+
+
+class MultiChainTask:
+    """K concurrent Chainwrite sub-chains from one initiator.
+
+    The destination set is split by ``scheduling.partition_schedule``
+    (``num_chains=None`` -> K chosen by the calibrated cycle model via
+    ``simulator.choose_num_chains``); one :class:`ChainTask` drives each
+    sub-chain through its four phases. The merged ``cycle_ledger``
+    models the shared cfg-inject port: per-phase entries are the
+    critical (max-over-chains) values with cfg serialization applied,
+    and ``total`` is ``simulator.multi_chain_latency`` — the concurrent
+    critical path, which is at most the sum of the per-phase maxima and
+    exactly the single-chain ledger when K=1.
+    """
+
+    def __init__(
+        self,
+        topo: MeshTopology,
+        source: int,
+        destinations: Sequence[int],
+        payload: np.ndarray,
+        *,
+        num_chains: int | None = None,
+        scheduler: str = "tsp",
+        pattern: AffinePattern | None = None,
+        sim_params: simulator.SimParams = simulator.DEFAULT_PARAMS,
+    ) -> None:
+        if len(set(destinations)) != len(destinations):
+            raise ValueError("duplicate destinations")
+        if source in destinations:
+            raise ValueError("source cannot be a destination")
+        self.topo = topo
+        self.source = source
+        self.payload = np.ascontiguousarray(payload)
+        self.sim_params = sim_params
+        if num_chains is None:
+            self.num_chains, self.chains = simulator.choose_num_chains(
+                topo, source, list(destinations), self.payload.nbytes,
+                scheduler=scheduler, p=sim_params,
+            )
+        else:
+            self.chains = partition_schedule(
+                topo, list(destinations), source,
+                num_chains=num_chains, scheduler=scheduler,
+            )
+            self.num_chains = len(self.chains)
+        self.tasks = [
+            ChainTask(
+                topo, source, list(chain), self.payload,
+                order=chain, pattern=pattern, sim_params=sim_params,
+            )
+            for chain in self.chains
+        ]
+        self.phase = Phase.IDLE
+        self.node_buffers: dict[int, np.ndarray] = {}
+        self.cycle_ledger: dict[str, int] = {}
+
+    def configs(self) -> list[ChainConfig]:
+        """All chains' cfg frames in cfg-inject (serialization) order."""
+        return [cfg for task in self.tasks for cfg in task.configs()]
+
+    def run(self, transport: Transport | None = None) -> dict[int, np.ndarray]:
+        """Drive every sub-chain; returns the merged destination buffers."""
+        self.phase = Phase.CFG_DISPATCH
+        for task in self.tasks:
+            self.node_buffers.update(task.run(transport))
+        self.phase = Phase.DONE
+
+        # Merged ledger: cfg reflects the shared-port serialization
+        # (detail from the simulator); the concurrent phases take the
+        # max over chains; total is the true critical path.
+        detail = simulator.multi_chain_latency(
+            self.topo, self.source, self.chains, self.payload.nbytes,
+            self.sim_params, detail=True,
+        )
+        phases = detail["per_phase"] or [(0, 0, 0, 0)]  # empty dest set
+        self.cycle_ledger = {
+            "cfg": max(ph[0] for ph in phases),
+            "grant": max(ph[1] for ph in phases),
+            "data": max(ph[2] for ph in phases),
+            "finish": max(ph[3] for ph in phases),
+            "total": detail["total"],
+        }
+        return self.node_buffers
+
+    # -- cost predictions (runtime policy) ------------------------------
+    def predicted_cycles(self) -> int:
+        return simulator.multi_chain_latency(
+            self.topo, self.source, self.chains, self.payload.nbytes,
+            self.sim_params,
+        )
+
+    def single_chain_cycles(self, scheduler: str = "tsp") -> int:
+        order = SCHEDULERS[scheduler](
+            self.topo, [d for c in self.chains for d in c], self.source
+        )
+        return simulator.chainwrite_latency(
+            self.topo, self.source, order, self.payload.nbytes, self.sim_params
+        )
+
+    def speedup_vs_single_chain(self) -> float:
+        return self.single_chain_cycles() / max(1, self.predicted_cycles())
+
+    def unicast_cycles(self) -> int:
+        return simulator.unicast_latency(
+            self.topo, self.source, [d for c in self.chains for d in c],
+            self.payload.nbytes, self.sim_params,
         )
 
     def speedup_vs_unicast(self) -> float:

@@ -12,10 +12,24 @@ of ppermutes inside ``shard_map``:
   that stream through the chain (store-and-forward), so chain latency
   is (F + L - 2) frame-times rather than F·L — exactly the paper's
   §III-C stream duplicator behaviour.
+* :func:`multi_chain_broadcast` — the multi-chain extension: K
+  link-disjoint sub-chains (from ``scheduling.partition_schedule``)
+  stream the same payload concurrently from one head. All chains live
+  in one SPMD program; intra-chain hops across different chains fuse
+  into a single ``ppermute`` per step (their sources/targets are
+  disjoint), while the head's K same-step fan-out sends are emitted as
+  K tiny ppermutes (XLA requires unique sources per permute). Supports
+  the same per-chain frame pipelining as :func:`chain_broadcast`.
 * :func:`chain_all_gather` / :func:`chain_reduce_scatter` /
   :func:`chain_all_reduce` — ring collectives over an explicitly
   *scheduled* ring order (from ``core.scheduling``), replacing XLA's
   built-in all-gather/all-reduce ("network-layer multicast" analogue).
+* :func:`multi_chain_all_reduce` — all-reduce over K disjoint
+  equal-size sub-rings: rotation-reduce within every ring concurrently
+  (fused edges), then rotation across rings; the generalization whose
+  K=2 case is hierarchical (within-pod then cross-pod) all-reduce.
+  Latency-optimal for short payloads (max(S,K)-length chains instead
+  of one L-ring); bandwidth-heavier than reduce-scatter+all-gather.
 * :func:`chain_all_to_all` — MoE dispatch as a rotating chain.
 
 All functions must be called inside ``shard_map`` with a manual axis.
@@ -163,6 +177,123 @@ def chain_broadcast(
     return out.reshape(x.shape)
 
 
+def _validate_multi_chains(
+    head: int, chains: Sequence[Sequence[int]]
+) -> list[tuple[int, ...]]:
+    clean = [tuple(int(d) for d in c) for c in chains if len(c)]
+    if not clean:
+        raise ValueError("empty chain set")
+    seen: set[int] = set()
+    for c in clean:
+        for d in c:
+            if d == head:
+                raise ValueError("head cannot appear inside a chain")
+            if d in seen:
+                raise ValueError(f"destination {d} appears in two chains")
+            seen.add(d)
+    return clean
+
+
+def multi_chain_broadcast(
+    x: jax.Array,
+    axis_name: Axis,
+    head: int,
+    chains: Sequence[Sequence[int]],
+    *,
+    num_frames: int = 1,
+) -> jax.Array:
+    """Multicast ``x`` from device ``head`` down K disjoint sub-chains
+    concurrently (multi-chain Chainwrite; chains typically come from
+    ``scheduling.partition_schedule``).
+
+    ``chains`` are destination orders (head excluded, matching the
+    scheduler convention); they must be pairwise disjoint. Devices on
+    the axis in no chain return zeros, chain members (and the head)
+    return the head's payload. ``num_frames > 1`` pipelines frames down
+    every chain simultaneously; completion takes
+    ``num_frames + max_chain_len - 1`` frame-hop slots instead of
+    ``num_frames * max_chain_len``.
+
+    K=1 computes exactly ``chain_broadcast(x, axis, (head, *chains[0]))``.
+    """
+    chains = _validate_multi_chains(int(head), chains)
+    head = int(head)
+    if len(chains) == 1:
+        return chain_broadcast(
+            x, axis_name, (head,) + chains[0], num_frames=num_frames
+        )
+
+    idx = _axis_index(axis_name)
+    is_head = idx == head
+    x = jnp.where(is_head, x, jnp.zeros_like(x))
+    full = [(head,) + c for c in chains]  # per-chain node traversal
+    max_len = max(len(f) for f in full)
+
+    # Static per-device chain position: pos 0 = head, p >= 1 = p-th
+    # member of its (unique) chain, L (out of range) = non-member.
+    L_axis = _axis_size(axis_name)
+    pos_np = [max_len] * L_axis
+    pos_np[head] = 0
+    for f in full:
+        for p, d in enumerate(f[1:], start=1):
+            pos_np[d] = p
+    pos = jnp.asarray(pos_np)[idx]
+    member = pos < max_len
+
+    def fanout(buf: jax.Array, edges: list[tuple[int, int]]) -> jax.Array:
+        """One hop of every chain. All intra-chain edges (plus the
+        first head edge) have unique sources/targets -> one fused
+        ppermute; the head's remaining same-step sends need their own
+        ppermutes (unique-source rule)."""
+        head_edges = [e for e in edges if e[0] == head]
+        fused = [e for e in edges if e[0] != head] + head_edges[:1]
+        new = _ppermute(buf, axis_name, fused) if fused else jnp.zeros_like(buf)
+        for e in head_edges[1:]:
+            r = _ppermute(buf, axis_name, [e])
+            new = jnp.where(idx == e[1], r, new)
+        return new
+
+    if num_frames <= 1:
+        out = x
+        buf = x
+        for step in range(max_len - 1):
+            edges = [
+                (f[step], f[step + 1]) for f in full if step + 1 < len(f)
+            ]
+            buf = fanout(buf, edges)
+            receivers = jnp.asarray([e[1] for e in edges])
+            out = jnp.where((idx == receivers).any(), buf, out)
+        return out
+
+    if x.shape[0] % num_frames != 0:
+        raise ValueError(
+            f"leading dim {x.shape[0]} not divisible by num_frames={num_frames}"
+        )
+    frames = x.reshape((num_frames, x.shape[0] // num_frames) + x.shape[1:])
+    all_edges = [e for f in full for e in zip(f, f[1:])]
+    T = num_frames + max_len - 2  # scan steps (longest chain's fill)
+
+    def step(carry, t):
+        buf, out = carry
+        t_clamped = jnp.minimum(t, num_frames - 1)
+        inject = lax.dynamic_index_in_dim(frames, t_clamped, axis=0, keepdims=False)
+        buf = jnp.where(is_head & (t < num_frames), inject, buf)
+        buf = fanout(buf, all_edges)
+        # After hop t, the member at chain position p holds frame t-(p-1).
+        fidx = t - (pos - 1)
+        valid = member & (pos > 0) & (fidx >= 0) & (fidx < num_frames)
+        fidx_c = jnp.clip(fidx, 0, num_frames - 1)
+        current = lax.dynamic_index_in_dim(out, fidx_c, axis=0, keepdims=False)
+        new = jnp.where(valid, buf, current)
+        out = lax.dynamic_update_index_in_dim(out, new, fidx_c, axis=0)
+        return (buf, out), None
+
+    buf0 = jnp.zeros_like(frames[0])
+    out0 = jnp.where(is_head, frames, jnp.zeros_like(frames))
+    (_, out), _ = _scan(step, (buf0, out0), jnp.arange(T))
+    return out.reshape(x.shape)
+
+
 # ---------------------------------------------------------------------------
 # Ring collectives over a scheduled order
 # ---------------------------------------------------------------------------
@@ -261,6 +392,67 @@ def chain_all_reduce(
     own = chain_reduce_scatter(chunks, axis_name, order)
     full = chain_all_gather(own, axis_name, order, tiled=True)
     return full[:lead] if pad else full
+
+
+def multi_chain_all_reduce(
+    x: jax.Array,
+    axis_name: Axis,
+    orders: Sequence[Sequence[int]],
+) -> jax.Array:
+    """All-reduce over K disjoint equal-size sub-rings of the axis.
+
+    Stage 1 rotation-reduces within every sub-ring concurrently (the K
+    rings' edges are disjoint, so each of the S-1 steps is ONE fused
+    ppermute); stage 2 rotation-reduces across rings (device at local
+    position r of ring c exchanges with position r of ring c+1 — again
+    one fused ppermute per step, K-1 steps). Hierarchical (within-pod
+    then cross-pod) all-reduce is exactly the K=#pods special case of
+    this schedule on the flattened DP axis.
+
+    Chain lengths drop from L-1 to max(S-1, K-1) — the latency win the
+    multi-chain simulator model predicts — at (S+K-2) full-payload
+    sends per device instead of reduce-scatter+all-gather's 2(L-1)/L;
+    prefer :func:`chain_all_reduce` when bandwidth-bound.
+
+    ``orders``: K disjoint rings of equal size covering the whole axis
+    (e.g. contiguous slices of ``ring_order_for_axis``). K=1 delegates
+    to :func:`chain_all_reduce`.
+    """
+    L = _axis_size(axis_name)
+    orders = [tuple(int(o) for o in c) for c in orders if len(c)]
+    if not orders:
+        raise ValueError("empty ring set")
+    if len(orders) == 1:
+        return chain_all_reduce(x, axis_name, orders[0])
+    K = len(orders)
+    S = len(orders[0])
+    if any(len(c) != S for c in orders):
+        raise ValueError("sub-rings must have equal sizes")
+    flat = [d for c in orders for d in c]
+    if sorted(flat) != list(range(L)):
+        raise ValueError("sub-rings must partition the whole axis")
+
+    # Stage 1 — within-ring rotation all-reduce (fused across rings).
+    intra = [e for c in orders for e in chain_edges(c, wrap=True)]
+    acc = x
+    buf = x
+    for _ in range(S - 1):
+        buf = _ppermute(buf, axis_name, intra)
+        acc = acc + buf
+
+    # Stage 2 — across-ring rotation: local position r of ring c ->
+    # local position r of ring (c+1) % K.
+    cross = [
+        (orders[c][r], orders[(c + 1) % K][r])
+        for c in range(K)
+        for r in range(S)
+    ]
+    buf = acc
+    out = acc
+    for _ in range(K - 1):
+        buf = _ppermute(buf, axis_name, cross)
+        out = out + buf
+    return out
 
 
 def chain_all_to_all(

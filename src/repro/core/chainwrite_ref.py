@@ -25,6 +25,20 @@ def broadcast_ref(
     return out
 
 
+def multi_broadcast_ref(
+    xs: np.ndarray, head: int, chains: Sequence[Sequence[int]]
+) -> np.ndarray:
+    """Oracle for ``multi_chain_broadcast``: the head and every member
+    of any sub-chain end with the head's payload; everyone else ends
+    with zeros. Chain structure/frames affect latency, not values."""
+    out = np.zeros_like(xs)
+    out[head] = xs[head]
+    for chain in chains:
+        for d in chain:
+            out[d] = xs[head]
+    return out
+
+
 def all_gather_ref(xs: np.ndarray, tiled: bool = False) -> np.ndarray:
     """Every device ends with the full stack (device-id indexed) —
     independent of ring order."""

@@ -17,6 +17,36 @@ between consecutive chain members. Two schedulers from the paper:
 
 Both return the destination visit order (the source C0 is the implicit
 chain head and is not part of the returned list), matching Alg. 1.
+
+Beyond the paper: :func:`partition_schedule` splits one destination set
+into K link-disjoint-preferring sub-chains that stream **concurrently**
+from the initiator (multi-chain Chainwrite — the distributed-DMA
+analogue of partition-based NoC multicast). A single logical chain pays
+latency linear in its length; K balanced sub-chains cut the data/grant/
+finish critical path to the longest sub-chain while the cfg packets of
+all chains still serialize through the initiator's one cfg-inject port
+(modelled in :func:`repro.core.simulator.multi_chain_latency`).
+
+Partition heuristic (documented invariants relied on by tests):
+
+1. **Seeding** — K seeds via farthest-point sampling over the
+   destination set (first seed = destination closest to the source, as
+   in Alg. 1), spreading chains into different mesh regions so their
+   XY paths tend to be link-disjoint.
+2. **Balanced growth** — remaining destinations are absorbed one at a
+   time by the (chain, destination) pair that (a) prefers an XY path
+   overlapping no link used by *any* chain so far and (b) minimizes the
+   resulting chain's total hops — LPT-style balancing, so per-chain hop
+   totals stay within one mesh diameter of each other before ordering.
+3. **Re-ordering** — each sub-chain is finally re-ordered by the
+   requested scheduler (exact TSP for <= 13 members) and the better of
+   (grown order, re-scheduled order) is kept, so a sub-chain never
+   costs more hops than the growth order produced.
+
+Balance bound: every chain's hop total is at most
+``chain_total_hops(single_schedule)/K + 2*(nx + ny)`` — the slack is
+one diameter from LPT imbalance plus one diameter for the extra
+source->seed entry edge.
 """
 
 from __future__ import annotations
@@ -292,3 +322,157 @@ def brute_force_schedule(
         if best_cost is None or c < best_cost:
             best, best_cost = list(perm), c
     return best or []
+
+
+# ---------------------------------------------------------------------------
+# Multi-chain partitioning (beyond the paper — see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def partition_balance_slack(topo: MeshTopology) -> int:
+    """Additive hop slack of the partition balance bound (two mesh
+    diameters — see module docstring)."""
+    return 2 * (topo.nx + topo.ny)
+
+
+def _farthest_point_seeds(
+    topo: MeshTopology, dests: list[int], source: int, k: int
+) -> list[int]:
+    """K spread-out seeds; the first is Alg. 1's closest-to-source."""
+    first = min(dests, key=lambda d: (topo.distance(source, d), d))
+    seeds = [first]
+    while len(seeds) < k:
+        nxt = max(
+            (d for d in dests if d not in seeds),
+            key=lambda d: (min(topo.distance(d, s) for s in seeds), -d),
+        )
+        seeds.append(nxt)
+    return seeds
+
+
+def hop_proxy_cost(
+    topo: MeshTopology, source: int, per_member_hops: float = 2.4
+) -> Callable[[list[list[int]]], float]:
+    """Hop-level stand-in for the simulator's multi-chain latency.
+
+    ``per_member_hops`` mirrors the calibrated 82 CC/destination
+    overhead expressed in units of the ~34 CC a 1-hop link traversal
+    adds to the critical path of a 64 B-granular stream — close enough
+    to rank K choices without importing the cycle model (which would be
+    a circular import; :mod:`.simulator` builds the calibrated version
+    on top via ``choose_num_chains``).
+    """
+
+    def cost(chains: list[list[int]]) -> float:
+        total_members = sum(len(c) for c in chains)
+        worst = max(
+            chain_total_hops(topo, c, source) + per_member_hops * len(c)
+            for c in chains
+        )
+        # cfg packets for every member serialize through one port.
+        return worst + 0.12 * per_member_hops * total_members
+
+    return cost
+
+
+def partition_schedule(
+    topo: MeshTopology,
+    destinations: Sequence[int],
+    source: int = 0,
+    *,
+    num_chains: int | None = None,
+    scheduler: str = "tsp",
+    max_chains: int = 4,
+    cost_fn: Callable[[list[list[int]]], float] | None = None,
+) -> list[list[int]]:
+    """Split ``destinations`` into K concurrent Chainwrite sub-chains.
+
+    ``num_chains`` fixes K; ``num_chains=None`` auto-selects K in
+    ``1..max_chains`` by minimizing ``cost_fn(chains)`` (ties -> fewer
+    chains). The default ``cost_fn`` is :func:`hop_proxy_cost`; pass
+    the calibrated cycle model through
+    :func:`repro.core.simulator.choose_num_chains` instead when the
+    topology/size point matters. K=1 returns
+    ``[SCHEDULERS[scheduler](...)]`` exactly.
+
+    Returns a list of K destination orders (source excluded, as in the
+    single-chain schedulers). Every destination appears in exactly one
+    sub-chain.
+    """
+    dests = list(dict.fromkeys(destinations))
+    if not dests:
+        return []
+    if num_chains is not None:
+        return _partition_fixed_k(topo, dests, source, int(num_chains), scheduler)
+    if cost_fn is None:
+        cost_fn = hop_proxy_cost(topo, source)
+    best: list[list[int]] | None = None
+    best_cost: float | None = None
+    for k in range(1, min(max_chains, len(dests)) + 1):
+        chains = _partition_fixed_k(topo, dests, source, k, scheduler)
+        c = cost_fn(chains)
+        if best_cost is None or c < best_cost:
+            best, best_cost = chains, c
+    assert best is not None
+    return best
+
+
+def _partition_fixed_k(
+    topo: MeshTopology,
+    dests: list[int],
+    source: int,
+    k: int,
+    scheduler: str,
+) -> list[list[int]]:
+    k = max(1, min(k, len(dests)))
+    if k == 1:
+        return [SCHEDULERS[scheduler](topo, dests, source)]
+
+    seeds = _farthest_point_seeds(topo, dests, source, k)
+    chains: list[list[int]] = [[s] for s in seeds]
+    hops = [topo.distance(source, s) for s in seeds]
+    used: set[Link] = set()
+    for s in seeds:
+        used.update(topo.xy_path(source, s))
+
+    remaining = [d for d in dests if d not in seeds]
+    while remaining:
+        # Pick the globally best (chain, destination) extension:
+        # link-disjoint first (paper Alg. 1's preference), then the
+        # smallest resulting chain length (LPT balancing).
+        best_key: tuple | None = None
+        best_ci = -1
+        best_d = -1
+        best_path: list[Link] = []
+        for ci, chain in enumerate(chains):
+            tail = chain[-1]
+            for d in remaining:
+                path = topo.xy_path(tail, d)
+                overlap = bool(set(path) & used)
+                key = (overlap, hops[ci] + len(path), len(path), ci, d)
+                if best_key is None or key < best_key:
+                    best_key, best_ci, best_d, best_path = key, ci, d, path
+        chains[best_ci].append(best_d)
+        hops[best_ci] += len(best_path)
+        used.update(best_path)
+        remaining.remove(best_d)
+
+    # Re-order each sub-chain; keep the better of grown vs re-scheduled.
+    out: list[list[int]] = []
+    for chain in chains:
+        rescheduled = SCHEDULERS[scheduler](topo, chain, source)
+        if chain_total_hops(topo, rescheduled, source) <= chain_total_hops(
+            topo, chain, source
+        ):
+            out.append(rescheduled)
+        else:
+            out.append(chain)
+    return out
+
+
+def partition_total_hops(
+    topo: MeshTopology, chains: Sequence[Sequence[int]], source: int = 0
+) -> int:
+    """Sum of per-chain hop totals (wire-energy metric; the latency
+    metric is the simulator's ``multi_chain_latency``)."""
+    return sum(chain_total_hops(topo, c, source) for c in chains)

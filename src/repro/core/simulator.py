@@ -13,6 +13,12 @@ same three P2MP mechanisms on the same NoC (2-D mesh, XY routing,
 * ``chainwrite_latency`` — Torrent: four-phase orchestration
   (cfg dispatch ∥, grant ⇠, pipelined frame store-and-forward data ⇢,
   finish ⇠).
+* ``multi_chain_latency`` — K concurrent Chainwrite chains from one
+  initiator (``scheduling.partition_schedule``): per-chain four-phase
+  latency with all chains' cfg packets serialized through the single
+  cfg-inject port; completion = max over chains. Reduces exactly to
+  ``chainwrite_latency`` at K=1. ``choose_num_chains`` picks K by
+  argmin of this model.
 
 Calibration: the model's per-destination marginal overhead for a
 1-hop-spaced chain is **82 cycles**, matching the paper's measured
@@ -25,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from .scheduling import SCHEDULERS, chain_total_hops
+from .scheduling import SCHEDULERS, chain_total_hops, partition_schedule
 from .topology import MeshTopology
 
 
@@ -147,6 +153,98 @@ def chainwrite_latency(
     # Phase 4 — finish: tail -> head again.
     finish = chain_hops * p.router_cc + n * p.finish_fwd_cc
     return cfg + grant + data + finish
+
+
+def multi_chain_latency(
+    topo: MeshTopology,
+    src: int,
+    chains: Sequence[Sequence[int]],
+    size_bytes: int,
+    p: SimParams = DEFAULT_PARAMS,
+    *,
+    detail: bool = False,
+) -> int | dict[str, object]:
+    """K concurrent four-phase Chainwrites sharing one cfg-inject port.
+
+    Contention model (the only coupling between chains): the initiator
+    has a single cfg-inject port, so the cfg packets of **all** chains
+    serialize through it in chain order — chain ``c`` can only become
+    ready once the cfgs of chains ``0..c`` have been injected. Data,
+    grant and finish phases run concurrently per chain (the partitioner
+    prefers link-disjoint XY paths, and the paper's XDMA dispatches
+    independent engines per chain), so completion is the max over
+    chains of their four-phase latency with the staggered cfg start.
+
+    ``multi_chain_latency(topo, src, [order], size)`` reduces *exactly*
+    to ``chainwrite_latency(topo, src, order, size)`` — pinned by the
+    tier-1 regression tests together with the 82 CC/destination Fig. 7
+    slope.
+
+    With ``detail=True`` returns ``{"total", "per_chain",
+    "per_phase"}`` where ``per_phase`` holds each chain's
+    ``(cfg, grant, data, finish)`` split.
+    """
+    chains = [list(c) for c in chains if len(c)]
+    if not chains:
+        return {"total": 0, "per_chain": [], "per_phase": []} if detail else 0
+
+    per_chain: list[int] = []
+    per_phase: list[tuple[int, int, int, int]] = []
+    injected = 0  # cfg packets already serialized through the port
+    for order in chains:
+        n = len(order)
+        injected += n
+        chain_hops = chain_total_hops(topo, order, src)
+        far = max(topo.distance(src, d) for d in order)
+        cfg = (
+            p.dma_setup_cc
+            + injected * p.cfg_inject_cc
+            + far * p.router_cc
+            + p.cfg_proc_cc
+        )
+        grant = chain_hops * p.router_cc + n * p.grant_fwd_cc
+        data = (
+            chain_hops * p.router_cc
+            + n * p.sf_fill_cc
+            + _ceil_div(size_bytes, p.link_bw)
+        )
+        finish = chain_hops * p.router_cc + n * p.finish_fwd_cc
+        per_phase.append((cfg, grant, data, finish))
+        per_chain.append(cfg + grant + data + finish)
+
+    total = max(per_chain)
+    if detail:
+        return {"total": total, "per_chain": per_chain, "per_phase": per_phase}
+    return total
+
+
+def choose_num_chains(
+    topo: MeshTopology,
+    src: int,
+    dsts: Sequence[int],
+    size_bytes: int,
+    *,
+    max_chains: int = 4,
+    scheduler: str = "tsp",
+    p: SimParams = DEFAULT_PARAMS,
+) -> tuple[int, list[list[int]]]:
+    """Pick K (1..max_chains) minimizing the calibrated multi-chain
+    latency; ties go to fewer chains. Returns ``(k, chains)``.
+
+    Because K=1 is always a candidate and ``partition_schedule`` with
+    ``num_chains=1`` reproduces the single-chain schedule exactly, the
+    returned partition's latency never exceeds the K=1 schedule's.
+    """
+    dsts = list(dict.fromkeys(dsts))
+    if not dsts:
+        return 1, []
+    chains = partition_schedule(
+        topo, dsts, src,
+        scheduler=scheduler,
+        max_chains=max_chains,
+        cost_fn=lambda cs: multi_chain_latency(topo, src, cs, size_bytes, p),
+    )
+    return len(chains), chains
 
 
 # ---------------------------------------------------------------------------

@@ -63,7 +63,9 @@ def _sanitize(spec: P | None, mesh) -> P:
             out.append(None)
         elif isinstance(el, tuple):
             kept = tuple(a for a in el if a in names)
-            out.append(kept if kept else None)
+            # canonicalize: a 1-tuple equals its bare name on current
+            # jax but not on the 0.4.x line — emit the bare name.
+            out.append(kept[0] if len(kept) == 1 else (kept if kept else None))
         else:
             out.append(el if el in names else None)
     return P(*out)

@@ -12,7 +12,15 @@ stays GSPMD-managed. Options mirror the paper's knobs:
 * ``scheduler`` — chain order from core.scheduling over the DP ring;
 * ``hierarchical`` — reduce within a pod, then across pods (two short
   chains instead of one long one: (16-1)+(2-1) hops vs 31);
+* ``num_chains`` — multi-chain Chainwrite: the flat DP ring is split
+  into K disjoint equal sub-rings that reduce concurrently, then
+  exchange across rings (``core.chainwrite.multi_chain_all_reduce``).
+  ``hierarchical`` over a (pod, data) mesh is exactly the
+  ``num_chains = #pods`` special case of this schedule on the
+  flattened DP axis — K=2 for the production two-pod system;
 * ``compress`` — int8 error-feedback wire format (4× fewer bytes).
+  ``compress`` keeps the single-ring schedule (the int8 wire format is
+  defined per ring hop), so ``num_chains`` is ignored when set.
 """
 
 from __future__ import annotations
@@ -43,6 +51,22 @@ def ring_order_for_axis(axis_size: int, scheduler: str = "tsp") -> tuple[int, ..
     return (0, *order)
 
 
+def sub_ring_orders(
+    axis_size: int, num_chains: int, scheduler: str = "tsp"
+) -> list[tuple[int, ...]]:
+    """Split the scheduled DP ring into ``num_chains`` contiguous
+    sub-rings for ``multi_chain_all_reduce``. Contiguous slices of the
+    snake order keep every intra-ring hop at 1 physical link on the
+    ICI torus (the multi-chain analogue of ``ring_order_for_axis``)."""
+    if axis_size % num_chains:
+        raise ValueError(
+            f"num_chains={num_chains} must divide the DP group size {axis_size}"
+        )
+    ring = ring_order_for_axis(axis_size, scheduler)
+    size = axis_size // num_chains
+    return [tuple(ring[i * size : (i + 1) * size]) for i in range(num_chains)]
+
+
 def _dp_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
@@ -54,11 +78,17 @@ def torrent_grad_reduce(
     *,
     scheduler: str = "tsp",
     hierarchical: bool = True,
+    num_chains: int = 1,
     compress: bool = False,
 ) -> Callable[..., tuple[PyTree, PyTree]]:
     """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` (grads LOCAL
     to the batch shard) so grads come back chain-all-reduced over the DP
-    axes. Model-axis sharding stays automatic (subset shard_map)."""
+    axes. Model-axis sharding stays automatic (subset shard_map).
+
+    ``num_chains > 1`` switches each DP reduction to the multi-chain
+    schedule (K concurrent sub-rings; see module docstring). It must
+    divide the group size being reduced; ``compress`` overrides it back
+    to the single ring."""
     dp = _dp_axes(mesh)
 
     dp_size = 1
@@ -75,6 +105,10 @@ def torrent_grad_reduce(
             order = ring_order_for_axis(size, scheduler)
             if compress:
                 return compressed_chain_all_reduce(x, axis, order)
+            if num_chains > 1 and size > num_chains:
+                return cw.multi_chain_all_reduce(
+                    x, axis, sub_ring_orders(size, num_chains, scheduler)
+                )
             return cw.chain_all_reduce(x, axis, order)
 
         if hierarchical and len(dp) == 2:

@@ -1,0 +1,195 @@
+"""Offline-safe stand-in for the ``hypothesis`` property-testing API.
+
+The container this suite must run in does not ship ``hypothesis`` and
+installing packages is off-limits, yet three tier-1 modules use
+``@given``-style property tests. This shim re-exports the real library
+when it is importable and otherwise provides a tiny, deterministic
+subset of the same API:
+
+* ``@given(**kwargs)``      — runs the test ``max_examples`` times with
+  inputs drawn from the supplied strategies;
+* ``@settings(max_examples=, deadline=)`` — honoured for
+  ``max_examples``; ``deadline`` is accepted and ignored;
+* ``strategies``: ``integers``, ``booleans``, ``floats``,
+  ``sampled_from``, ``lists``, ``tuples``, ``just``, ``data`` — the
+  subset this repo's tests use.
+
+Sampling is seeded from the test function's qualified name plus the
+example index, so failures reproduce exactly across runs and machines
+(no shrinking — the first failing example is reported as-is).
+
+Usage in tests (drop-in for the hypothesis import)::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 50
+
+    class _Strategy:
+        """A strategy is just a seeded sampler: ``draw(rng) -> value``."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        # combinators used via st.integers(...).map(...) style, if ever
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred, _max_tries: int = 1000):
+            def draw(rng):
+                for _ in range(_max_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate never satisfied")
+
+            return _Strategy(draw)
+
+    class _DataObject:
+        """The object ``st.data()`` hands to the test body."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy, label: str | None = None):
+            del label
+            return strategy.draw(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(
+            min_value: float = 0.0,
+            max_value: float = 1.0,
+            allow_nan: bool = False,
+            allow_infinity: bool = False,
+        ) -> _Strategy:
+            del allow_nan, allow_infinity
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            pool = list(seq)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def just(value) -> _Strategy:
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def tuples(*strategies: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+        @staticmethod
+        def lists(
+            elements: _Strategy,
+            *,
+            min_size: int = 0,
+            max_size: int = 10,
+            unique: bool = False,
+        ) -> _Strategy:
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                if not unique:
+                    return [elements.draw(rng) for _ in range(n)]
+                seen: list = []
+                tries = 0
+                while len(seen) < n and tries < 1000 * max(1, n):
+                    v = elements.draw(rng)
+                    tries += 1
+                    if v not in seen:
+                        seen.append(v)
+                if len(seen) < min_size:
+                    raise ValueError("could not draw enough unique elements")
+                return seen
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _DataStrategy()
+
+    strategies = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        """Decorator recording ``max_examples`` for a later ``@given``."""
+        del deadline
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        """Deterministic replacement for ``hypothesis.given``.
+
+        Runs the wrapped test once per example with kwargs drawn from
+        the strategies; the RNG seed mixes the test's qualname and the
+        example index so runs are reproducible everywhere.
+        """
+
+        def deco(fn):
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # Read lazily: @settings stacked ABOVE @given (the usual
+                # order) sets the attribute on `wrapper` after this deco
+                # ran; wraps() already copied it from fn for the other
+                # stacking order.
+                max_examples = getattr(
+                    wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES
+                )
+                for i in range(max_examples):
+                    rng = random.Random((base_seed << 20) ^ i)
+                    drawn = {
+                        name: strat.draw(rng)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # report the failing example
+                        shown = {
+                            k: v
+                            for k, v in drawn.items()
+                            if not isinstance(v, _DataObject)
+                        }
+                        raise AssertionError(
+                            f"property failed on example {i}: {shown!r}"
+                        ) from e
+
+            # pytest must not mistake the strategy params for fixtures:
+            # present a bare (*args, **kwargs) signature.
+            wrapper.__dict__.pop("__wrapped__", None)
+            wrapper.hypothesis_compat = True
+            return wrapper
+
+        return deco

@@ -1,0 +1,79 @@
+"""The offline hypothesis shim itself: determinism and settings.
+
+Guarded so the file also passes when real hypothesis is installed
+(where example counts and draw sequences are its own business).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+import _hypothesis_compat as hc
+from _hypothesis_compat import given, settings, strategies as st
+
+_calls_a: list[int] = []
+
+
+@settings(max_examples=7, deadline=None)
+@given(x=st.integers(0, 10**6))
+def test_settings_above_given_collects(x):
+    _calls_a.append(x)
+    assert 0 <= x <= 10**6
+
+
+def test_settings_max_examples_honored():
+    """@settings stacked ABOVE @given (the repo's order) must cap the
+    example count — regression for the shim reading it too early."""
+    if hc.HAVE_HYPOTHESIS:
+        pytest.skip("real hypothesis manages its own example budget")
+    assert len(_calls_a) == 7, len(_calls_a)
+
+
+def test_draws_are_deterministic():
+    if hc.HAVE_HYPOTHESIS:
+        pytest.skip("real hypothesis manages its own RNG")
+    seen: list[list[int]] = []
+
+    def collect():
+        drawn: list[int] = []
+
+        @settings(max_examples=5, deadline=None)
+        @given(x=st.integers(0, 1000))
+        def inner(x):
+            drawn.append(x)
+
+        inner.__qualname__ = "stable_name_for_seed"
+        inner()
+        return drawn
+
+    seen.append(collect())
+    seen.append(collect())
+    assert seen[0] == seen[1]
+
+
+def test_failing_example_is_reported():
+    if hc.HAVE_HYPOTHESIS:
+        pytest.skip("shim-specific error format")
+
+    @settings(max_examples=10, deadline=None)
+    @given(x=st.integers(0, 5))
+    def always_fails(x):
+        assert x < 0
+
+    with pytest.raises(AssertionError, match="property failed on example"):
+        always_fails()
+
+
+def test_unique_lists_and_sampled_from():
+    if hc.HAVE_HYPOTHESIS:
+        pytest.skip("shim-specific API subset")
+    import random
+
+    rng = random.Random(0)
+    strat = st.lists(st.integers(1, 9), min_size=4, max_size=9, unique=True)
+    for _ in range(20):
+        vals = strat.draw(rng)
+        assert len(vals) == len(set(vals))
+        assert 4 <= len(vals) <= 9
+    pool = ["a", "b", "c"]
+    assert all(st.sampled_from(pool).draw(rng) in pool for _ in range(10))

@@ -1,0 +1,202 @@
+"""Multi-chain Chainwrite: simulator regressions + MultiChainTask.
+
+Pins the calibrated Fig. 7 behaviour (82 CC/destination slope) for the
+single-chain model, asserts the K-chain model reduces exactly to it at
+K=1, and exercises the host-side MultiChainTask orchestration.
+"""
+
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.chaintask import ChainTask, MultiChainTask, Phase
+from repro.core.scheduling import SCHEDULERS, partition_schedule, tsp_schedule
+from repro.core.simulator import (
+    DEFAULT_PARAMS,
+    chainwrite_latency,
+    choose_num_chains,
+    config_overhead_per_destination,
+    multi_chain_latency,
+)
+from repro.core.topology import MeshTopology
+
+TOPO = MeshTopology(4, 5)  # the paper's 20-cluster SoC
+BIG = MeshTopology(8, 8)
+SIZE = 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# simulator regressions
+# ---------------------------------------------------------------------------
+
+
+def test_fig7_slope_is_pinned_at_82cc():
+    """Calibration regression: the K=1 model's Fig. 7 slope stays 82."""
+    res = config_overhead_per_destination(TOPO, src=0, max_dsts=8)
+    assert res["slope_cc_per_dst"] == pytest.approx(82.0, abs=3.0)
+
+
+def test_multi_chain_k1_reduces_exactly():
+    """multi_chain_latency([order]) == chainwrite_latency(order), CC-exact."""
+    rng = random.Random(0)
+    for topo in (TOPO, BIG):
+        for n in (1, 3, 7, 12):
+            for size in (1024, SIZE, 1 << 20):
+                dests = rng.sample(range(1, topo.num_nodes), n)
+                order = tsp_schedule(topo, dests, 0)
+                assert multi_chain_latency(topo, 0, [order], size) == (
+                    chainwrite_latency(topo, 0, order, size)
+                )
+
+
+def test_multi_chain_k1_slope_also_82cc():
+    """The K=1 path through the multi-chain model keeps the Fig. 7
+    slope: same adjacent-row experiment, same 82 CC/destination."""
+    lats = []
+    for n in range(1, 9):
+        dsts = list(range(1, 1 + n))
+        order = SCHEDULERS["greedy"](TOPO, dsts, 0)
+        lats.append(multi_chain_latency(TOPO, 0, [order], SIZE))
+    ns = list(range(1, 9))
+    mean_n = sum(ns) / len(ns)
+    mean_l = sum(lats) / len(lats)
+    slope = sum((n - mean_n) * (l - mean_l) for n, l in zip(ns, lats)) / sum(
+        (n - mean_n) ** 2 for n in ns
+    )
+    assert slope == pytest.approx(82.0, abs=3.0)
+
+
+def test_cfg_port_serialization_staggers_chains():
+    """Later chains pay for earlier chains' cfg injection: with two
+    identical chains, chain 1's cfg completes cfg_inject_cc * len
+    later than chain 0's."""
+    p = DEFAULT_PARAMS
+    chains = [[1, 2], [5, 6]]
+    detail = multi_chain_latency(BIG, 0, chains, SIZE, detail=True)
+    cfg0, cfg1 = detail["per_phase"][0][0], detail["per_phase"][1][0]
+    far0 = max(BIG.distance(0, d) for d in chains[0])
+    far1 = max(BIG.distance(0, d) for d in chains[1])
+    assert cfg1 - cfg0 == 2 * p.cfg_inject_cc + (far1 - far0) * p.router_cc
+
+
+def test_detail_totals_consistent():
+    chains = partition_schedule(BIG, list(range(1, 17)), 0, num_chains=3)
+    detail = multi_chain_latency(BIG, 0, chains, SIZE, detail=True)
+    assert detail["total"] == max(detail["per_chain"])
+    for per_chain, phases in zip(detail["per_chain"], detail["per_phase"]):
+        assert per_chain == sum(phases)
+
+
+def test_choose_num_chains_never_worse_than_k1():
+    rng = random.Random(1)
+    for n in (2, 6, 12, 20):
+        dests = rng.sample(range(1, 64), n)
+        lat1 = chainwrite_latency(BIG, 0, tsp_schedule(BIG, dests, 0), SIZE)
+        k, chains = choose_num_chains(BIG, 0, dests, SIZE)
+        assert multi_chain_latency(BIG, 0, chains, SIZE) <= lat1
+        assert 1 <= k <= 4
+
+
+def test_empty_chains_are_zero_latency():
+    assert multi_chain_latency(BIG, 0, [], SIZE) == 0
+    assert multi_chain_latency(BIG, 0, [[]], SIZE) == 0
+
+
+# ---------------------------------------------------------------------------
+# MultiChainTask orchestration
+# ---------------------------------------------------------------------------
+
+
+def test_multichain_task_delivers_payload_everywhere():
+    payload = np.arange(2048, dtype=np.float32)
+    dests = [3, 7, 12, 14, 9, 18]
+    task = MultiChainTask(TOPO, 0, dests, payload, num_chains=2)
+    assert task.phase is Phase.IDLE
+    bufs = task.run()
+    assert task.phase is Phase.DONE
+    assert set(bufs) == set(dests)
+    for d in dests:
+        np.testing.assert_array_equal(bufs[d], payload)
+    # partition covers the destinations exactly
+    assert sorted(d for c in task.chains for d in c) == sorted(dests)
+    assert task.num_chains == 2
+
+
+def test_multichain_ledger_is_critical_path():
+    payload = np.zeros(SIZE, np.uint8)
+    task = MultiChainTask(BIG, 0, list(range(1, 17)), payload, num_chains=3)
+    task.run()
+    lg = task.cycle_ledger
+    assert lg["total"] == task.predicted_cycles()
+    # concurrent phases: the critical path is at most the sum of the
+    # per-phase maxima and at least every individual phase maximum.
+    assert lg["total"] <= lg["cfg"] + lg["grant"] + lg["data"] + lg["finish"]
+    assert lg["total"] >= max(lg["cfg"], lg["grant"], lg["data"], lg["finish"])
+
+
+def test_multichain_k1_ledger_matches_chaintask():
+    payload = np.zeros(SIZE, np.uint8)
+    dests = [1, 2, 3, 7]
+    multi = MultiChainTask(TOPO, 0, dests, payload, num_chains=1, scheduler="greedy")
+    single = ChainTask(TOPO, 0, dests, payload, scheduler="greedy")
+    multi.run()
+    single.run()
+    assert multi.cycle_ledger == single.cycle_ledger
+
+
+def test_multichain_task_auto_k():
+    payload = np.zeros(SIZE, np.uint8)
+    task = MultiChainTask(BIG, 0, list(range(1, 25)), payload)
+    assert task.num_chains >= 2  # 24 spread destinations want chains
+    task.run()
+    assert task.speedup_vs_single_chain() > 1.0
+    assert task.speedup_vs_unicast() > task.speedup_vs_single_chain()
+
+
+def test_multichain_configs_serialize_all_chains():
+    task = MultiChainTask(TOPO, 0, [3, 7, 12, 14], np.zeros(64), num_chains=2)
+    cfgs = task.configs()
+    # one cfg per chain member plus one initiator cfg per chain
+    assert len(cfgs) == 4 + len(task.chains)
+    heads = [c for c in cfgs if c.prev_node is None]
+    assert all(h.node == 0 for h in heads)
+    assert len(heads) == len(task.chains)
+
+
+def test_multichain_transport_sees_disjoint_chains():
+    hops: list[tuple[int, int]] = []
+    task = MultiChainTask(TOPO, 0, [3, 7, 12, 14], np.zeros(16), num_chains=2)
+    task.run(transport=lambda s, d, data: hops.append((s, d)))
+    # every chain contributes len(chain) hops, all starting at source 0
+    assert len(hops) == 4
+    starts = [h for h in hops if h[0] == 0]
+    assert len(starts) == len(task.chains)
+
+
+def test_multichain_task_empty_destinations():
+    """Degenerate but legal: no destinations -> no chains, zero ledger."""
+    task = MultiChainTask(TOPO, 0, [], np.zeros(16))
+    assert task.chains == []
+    bufs = task.run()
+    assert bufs == {}
+    assert task.cycle_ledger["total"] == 0
+    assert task.phase is Phase.DONE
+
+
+def test_multichain_validation_errors():
+    with pytest.raises(ValueError):
+        MultiChainTask(TOPO, 0, [1, 1], np.zeros(4))
+    with pytest.raises(ValueError):
+        MultiChainTask(TOPO, 0, [0, 1], np.zeros(4))
+    with pytest.raises(ValueError):  # explicit order must match dests
+        ChainTask(TOPO, 0, [1, 2], np.zeros(4), order=[1, 3])
+
+
+def test_chaintask_explicit_order_is_respected():
+    task = ChainTask(TOPO, 0, [5, 2, 9], np.zeros(8), order=[9, 5, 2])
+    assert task.order == [9, 5, 2]
+    cfgs = task.configs()
+    assert [c.node for c in cfgs] == [0, 9, 5, 2]

@@ -1,0 +1,185 @@
+"""Property tests for the multi-chain partitioner (scheduling layer).
+
+Invariants (documented in ``repro.core.scheduling``):
+
+* exact cover — every destination lands in exactly one sub-chain;
+* balance — each chain's hop total <= H(K=1)/K + 2*(nx+ny);
+* latency — the simulator's K-chain completion never exceeds the K=1
+  schedule for the same destination set (auto-K includes K=1 as a
+  candidate, and fixed K>=2 must win outright on large sets).
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.scheduling import (
+    SCHEDULERS,
+    chain_total_hops,
+    hop_proxy_cost,
+    partition_balance_slack,
+    partition_schedule,
+    partition_total_hops,
+    tsp_schedule,
+)
+from repro.core.simulator import (
+    chainwrite_latency,
+    choose_num_chains,
+    multi_chain_latency,
+)
+from repro.core.topology import MeshTopology
+
+TOPO = MeshTopology(8, 8)
+SIZE = 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# exact cover
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    data=st.data(),
+    k=st.integers(1, 4),
+)
+def test_every_destination_in_exactly_one_chain(data, k):
+    dests = data.draw(
+        st.lists(st.integers(1, 63), min_size=2, max_size=20, unique=True)
+    )
+    chains = partition_schedule(TOPO, dests, 0, num_chains=k)
+    flat = [d for c in chains for d in c]
+    assert sorted(flat) == sorted(dests)
+    assert len(flat) == len(set(flat))  # no destination twice
+    assert 1 <= len(chains) <= min(k, len(dests))
+    assert all(c for c in chains)  # no empty chain
+
+
+def test_auto_k_also_exact_cover():
+    rng = random.Random(11)
+    for n in (3, 8, 16, 24):
+        dests = rng.sample(range(1, 64), n)
+        chains = partition_schedule(TOPO, dests, 0)
+        assert sorted(d for c in chains for d in c) == sorted(dests)
+
+
+def test_degenerate_inputs():
+    assert partition_schedule(TOPO, [], 0) == []
+    assert partition_schedule(TOPO, [5], 0, num_chains=3) == [[5]]
+    # K > N clamps to N chains of one destination each
+    chains = partition_schedule(TOPO, [3, 9], 0, num_chains=4)
+    assert sorted(d for c in chains for d in c) == [3, 9]
+
+
+def test_k1_reproduces_single_schedule():
+    rng = random.Random(5)
+    for n in (2, 5, 9, 13):
+        dests = rng.sample(range(1, 64), n)
+        assert partition_schedule(TOPO, dests, 0, num_chains=1) == [
+            tsp_schedule(TOPO, dests, 0)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# balance bound
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), k=st.integers(2, 4))
+def test_per_chain_hops_within_balance_bound(data, k):
+    dests = data.draw(
+        st.lists(st.integers(1, 63), min_size=6, max_size=24, unique=True)
+    )
+    single = tsp_schedule(TOPO, dests, 0)
+    h1 = chain_total_hops(TOPO, single, 0)
+    chains = partition_schedule(TOPO, dests, 0, num_chains=k)
+    bound = h1 / len(chains) + partition_balance_slack(TOPO)
+    for c in chains:
+        assert chain_total_hops(TOPO, c, 0) <= bound, (c, bound)
+
+
+# ---------------------------------------------------------------------------
+# latency: K chains never lose to the single chain
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_auto_k_latency_never_exceeds_single_chain(data):
+    dests = data.draw(
+        st.lists(st.integers(1, 63), min_size=2, max_size=20, unique=True)
+    )
+    lat1 = chainwrite_latency(TOPO, 0, tsp_schedule(TOPO, dests, 0), SIZE)
+    _, chains = choose_num_chains(TOPO, 0, dests, SIZE)
+    assert multi_chain_latency(TOPO, 0, chains, SIZE) <= lat1
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data(), k=st.integers(2, 3))
+def test_fixed_k_beats_single_chain_on_large_sets(data, k):
+    """The acceptance-criterion property: K>=2 strictly below K=1 for
+    >= 16 destinations on the 8x8 mesh."""
+    dests = data.draw(
+        st.lists(st.integers(1, 63), min_size=16, max_size=32, unique=True)
+    )
+    lat1 = chainwrite_latency(TOPO, 0, tsp_schedule(TOPO, dests, 0), SIZE)
+    chains = partition_schedule(TOPO, dests, 0, num_chains=k)
+    assert multi_chain_latency(TOPO, 0, chains, SIZE) < lat1
+
+
+def test_partition_prefers_link_disjoint_growth():
+    """Chains grown from spread seeds should overlap (and so serialize
+    on) far fewer links than a naive round-robin split."""
+    rng = random.Random(3)
+    better = 0
+    trials = 12
+    for _ in range(trials):
+        dests = rng.sample(range(1, 64), 16)
+        chains = partition_schedule(TOPO, dests, 0, num_chains=2)
+        naive = [sorted(dests)[0::2], sorted(dests)[1::2]]
+
+        def shared_links(split):
+            linksets = []
+            for c in split:
+                links: set = set(TOPO.xy_path(0, c[0]))
+                for a, b in zip(c, c[1:]):
+                    links.update(TOPO.xy_path(a, b))
+                linksets.append(links)
+            return len(linksets[0] & linksets[1])
+
+        if shared_links(chains) <= shared_links(naive):
+            better += 1
+    assert better >= trials - 2, better
+
+
+def test_hop_proxy_cost_ranks_like_the_simulator():
+    """The scheduling-layer proxy and the cycle model agree on the K
+    ranking often enough to drive auto-K (spot check, not exact)."""
+    rng = random.Random(9)
+    agree = 0
+    trials = 10
+    for _ in range(trials):
+        dests = rng.sample(range(1, 64), 20)
+        proxy = hop_proxy_cost(TOPO, 0)
+        by_proxy = min(
+            range(1, 5),
+            key=lambda k: proxy(
+                partition_schedule(TOPO, dests, 0, num_chains=k)
+            ),
+        )
+        by_sim, _ = choose_num_chains(TOPO, 0, dests, SIZE)
+        if abs(by_proxy - by_sim) <= 1:
+            agree += 1
+    assert agree >= trials - 2, agree
+
+
+def test_partition_total_hops_metric():
+    dests = [9, 18, 27, 36, 45, 54, 63]
+    chains = partition_schedule(TOPO, dests, 0, num_chains=2)
+    assert partition_total_hops(TOPO, chains, 0) == sum(
+        chain_total_hops(TOPO, c, 0) for c in chains
+    )
