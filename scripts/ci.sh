@@ -1,14 +1,20 @@
 #!/usr/bin/env bash
 # The single CI entry point — humans and automation invoke the same
 # command (ROADMAP.md "Tier-1 verify"). Runs the full offline test
-# suite; add BENCH=1 to also run the benchmark harness's assertions.
+# suite; add BENCH=1 to also run the benchmark harness's assertions;
+# QUICK=1 skips the @pytest.mark.slow tests (exact-TSP and multidevice
+# oracle suites) for a fast inner loop — the default run keeps them.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+if [[ "${QUICK:-0}" == "1" ]]; then
+    python -m pytest -x -q -m "not slow" "$@"
+else
+    python -m pytest -x -q "$@"
+fi
 
 if [[ "${BENCH:-0}" == "1" ]]; then
     python -m benchmarks.run

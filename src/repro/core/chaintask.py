@@ -16,7 +16,15 @@ multicast, elastic re-layout). This module is that application layer:
   destination set into K link-disjoint-preferring sub-chains
   (``scheduling.partition_schedule``) and drives one :class:`ChainTask`
   per sub-chain, with a merged per-phase ledger whose ``total`` is the
-  concurrent critical path (``simulator.multi_chain_latency``).
+  concurrent critical path (``simulator.multi_chain_latency``), plus a
+  per-sub-chain ledger list (``per_chain_ledgers``). A failure
+  injected via :meth:`MultiChainTask.inject_failure` drives the
+  recovery path: the failed member's sub-chain is re-formed
+  (``scheduling.reform_chain``), the survivors still receive the
+  payload, and the recovery cycles
+  (``simulator.chain_recovery_latency``) are charged *only* to the
+  affected sub-chain's ledger — every other sub-chain's ledger is
+  CC-identical to the failure-free run.
 
 The DATA phase executes a real copy through a pluggable ``transport``
 (by default an in-process store-and-forward through per-node buffers —
@@ -170,7 +178,7 @@ class ChainTask:
         self.cycle_ledger["data"] = (
             hops * p.router_cc
             + n * p.sf_fill_cc
-            + simulator._ceil_div(gathered.nbytes, p.link_bw)
+            + simulator._ceil_div(gathered.nbytes, simulator._effective_bw(p, 1))
         )
 
         # Phase 4 — finish backward propagation (tail -> head).
@@ -222,6 +230,7 @@ class MultiChainTask:
         payload: np.ndarray,
         *,
         num_chains: int | None = None,
+        chains: Sequence[Sequence[int]] | None = None,
         scheduler: str = "tsp",
         pattern: AffinePattern | None = None,
         sim_params: simulator.SimParams = simulator.DEFAULT_PARAMS,
@@ -234,7 +243,16 @@ class MultiChainTask:
         self.source = source
         self.payload = np.ascontiguousarray(payload)
         self.sim_params = sim_params
-        if num_chains is None:
+        if chains is not None:
+            # Caller supplies the partition (e.g. a MultiChainPlan's
+            # possibly re-formed schedule); must cover the destinations.
+            chains = [[int(d) for d in c] for c in chains if len(c)]
+            flat = [d for c in chains for d in c]
+            if sorted(flat) != sorted(int(d) for d in destinations):
+                raise ValueError("chains must partition the destinations")
+            self.chains = chains
+            self.num_chains = len(chains)
+        elif num_chains is None:
             self.num_chains, self.chains = simulator.choose_num_chains(
                 topo, source, list(destinations), self.payload.nbytes,
                 scheduler=scheduler, p=sim_params,
@@ -245,6 +263,8 @@ class MultiChainTask:
                 num_chains=num_chains, scheduler=scheduler,
             )
             self.num_chains = len(self.chains)
+        self.scheduler = scheduler
+        self.pattern = pattern
         self.tasks = [
             ChainTask(
                 topo, source, list(chain), self.payload,
@@ -253,35 +273,103 @@ class MultiChainTask:
             for chain in self.chains
         ]
         self.phase = Phase.IDLE
+        self.failed_node: int | None = None
+        self.reformed_chains: list[list[int]] | None = None
         self.node_buffers: dict[int, np.ndarray] = {}
         self.cycle_ledger: dict[str, int] = {}
+        self.per_chain_ledgers: list[dict[str, int]] = []
 
     def configs(self) -> list[ChainConfig]:
         """All chains' cfg frames in cfg-inject (serialization) order."""
         return [cfg for task in self.tasks for cfg in task.configs()]
 
+    # -- failure injection (fault-tolerance hook) ----------------------
+    def inject_failure(self, node: int) -> None:
+        """Mark chain member ``node`` as dead before :meth:`run`.
+
+        The run then takes the recovery path: ``node``'s sub-chain is
+        re-formed around it (``scheduling.reform_chain``), the payload
+        still reaches every survivor, and the recovery cycles are
+        charged only to that sub-chain's ledger.
+        """
+        if self.phase is not Phase.IDLE:
+            raise RuntimeError("failure must be injected before run()")
+        node = int(node)
+        if not any(node in chain for chain in self.chains):
+            raise ValueError(f"node {node} is not a chain member")
+        self.failed_node = node
+
     def run(self, transport: Transport | None = None) -> dict[int, np.ndarray]:
-        """Drive every sub-chain; returns the merged destination buffers."""
+        """Drive every sub-chain; returns the merged destination buffers.
+
+        With an injected failure the failed member's sub-chain is
+        re-formed and re-driven so every *surviving* destination still
+        receives the payload; the failed node gets no buffer.
+        """
         self.phase = Phase.CFG_DISPATCH
-        for task in self.tasks:
-            self.node_buffers.update(task.run(transport))
+        recovery: dict[str, object] | None = None
+        if self.failed_node is None:
+            detail = simulator.multi_chain_latency(
+                self.topo, self.source, self.chains, self.payload.nbytes,
+                self.sim_params, detail=True,
+            )
+            per_phase = detail["per_phase"]
+            total = detail["total"]
+            for task in self.tasks:
+                self.node_buffers.update(task.run(transport))
+        else:
+            rec_detail = simulator.chain_recovery_latency(
+                self.topo, self.source, self.chains, self.failed_node,
+                self.payload.nbytes, self.sim_params,
+                scheduler=self.scheduler, detail=True,
+            )
+            recovery = rec_detail["recovery"]
+            per_phase = rec_detail["per_phase"]  # failure-free split
+            total = rec_detail["total"]  # already includes recovery
+            ci = recovery["chain"]
+            for i, task in enumerate(self.tasks):
+                if i != ci:
+                    self.node_buffers.update(task.run(transport))
+            reformed = list(recovery["reformed"])
+            self.reformed_chains = [
+                reformed if i == ci else list(c)
+                for i, c in enumerate(self.chains)
+            ]
+            if reformed:
+                degraded = ChainTask(
+                    self.topo, self.source, reformed, self.payload,
+                    order=reformed, pattern=self.pattern,
+                    sim_params=self.sim_params,
+                )
+                self.node_buffers.update(degraded.run(transport))
         self.phase = Phase.DONE
 
-        # Merged ledger: cfg reflects the shared-port serialization
-        # (detail from the simulator); the concurrent phases take the
-        # max over chains; total is the true critical path.
-        detail = simulator.multi_chain_latency(
-            self.topo, self.source, self.chains, self.payload.nbytes,
-            self.sim_params, detail=True,
-        )
-        phases = detail["per_phase"] or [(0, 0, 0, 0)]  # empty dest set
+        # Per-sub-chain ledgers: cfg includes the shared-port stagger;
+        # recovery cycles land only on the failed member's chain.
+        self.per_chain_ledgers = [
+            {
+                "cfg": c, "grant": g, "data": d, "finish": f,
+                "recovery": 0, "total": c + g + d + f,
+            }
+            for (c, g, d, f) in per_phase
+        ]
+        if recovery is not None:
+            lg = self.per_chain_ledgers[recovery["chain"]]
+            lg["recovery"] = recovery["recovery_cc"]
+            lg["total"] += recovery["recovery_cc"]
+
+        # Merged ledger: the concurrent phases take the max over
+        # chains; total is the true critical path.
+        phases = per_phase or [(0, 0, 0, 0)]  # empty dest set
         self.cycle_ledger = {
             "cfg": max(ph[0] for ph in phases),
             "grant": max(ph[1] for ph in phases),
             "data": max(ph[2] for ph in phases),
             "finish": max(ph[3] for ph in phases),
-            "total": detail["total"],
+            "total": total,
         }
+        if recovery is not None:
+            self.cycle_ledger["recovery"] = recovery["recovery_cc"]
         return self.node_buffers
 
     # -- cost predictions (runtime policy) ------------------------------

@@ -294,6 +294,63 @@ def multi_chain_broadcast(
     return out.reshape(x.shape)
 
 
+def degraded_chains(
+    chains: Sequence[Sequence[int]], failed: int
+) -> list[tuple[int, ...]]:
+    """Splice ``failed`` out of its sub-chain (endpoint-only re-forming
+    at the SPMD layer: no topology knowledge, relative order kept).
+
+    Host-side callers that hold a :class:`~repro.core.topology.
+    MeshTopology` should prefer ``scheduling.reform_chain`` per chain —
+    it re-orders the orphaned suffix — and pass the result straight to
+    :func:`multi_chain_broadcast`; this helper is the schedule-free
+    fallback. Chains emptied by the splice are dropped.
+    """
+    failed = int(failed)
+    found = False
+    out: list[tuple[int, ...]] = []
+    for c in chains:
+        members = [int(d) for d in c]
+        kept = tuple(d for d in members if d != failed)
+        found = found or len(kept) != len(members)
+        if kept:
+            out.append(kept)
+    if not found:
+        raise ValueError(f"failed node {failed} is in no chain")
+    return out
+
+
+def degraded_multi_chain_broadcast(
+    x: jax.Array,
+    axis_name: Axis,
+    head: int,
+    chains: Sequence[Sequence[int]],
+    failed: int,
+    *,
+    num_frames: int = 1,
+) -> jax.Array:
+    """:func:`multi_chain_broadcast` with chain member ``failed``
+    dropped — the degraded collective a re-formed Chainwrite runs after
+    a node failure.
+
+    Every *surviving* chain member (and the head) still receives the
+    head's payload; the failed device — like any non-member — returns
+    zeros, so the paper's "nothing outside the chain is touched"
+    property extends to dead nodes. K=1 with the failure in the middle
+    of the single chain degrades to the spliced shorter chain.
+    """
+    head = int(head)
+    if int(failed) == head:
+        raise ValueError("the initiator (head) cannot be dropped")
+    remaining = degraded_chains(chains, failed)
+    if not remaining:  # every destination failed: head keeps its payload
+        idx = _axis_index(axis_name)
+        return jnp.where(idx == head, x, jnp.zeros_like(x))
+    return multi_chain_broadcast(
+        x, axis_name, head, remaining, num_frames=num_frames
+    )
+
+
 # ---------------------------------------------------------------------------
 # Ring collectives over a scheduled order
 # ---------------------------------------------------------------------------

@@ -39,6 +39,21 @@ def multi_broadcast_ref(
     return out
 
 
+def degraded_multi_broadcast_ref(
+    xs: np.ndarray, head: int, chains: Sequence[Sequence[int]], failed: int
+) -> np.ndarray:
+    """Oracle for ``degraded_multi_chain_broadcast``: the head and every
+    *surviving* chain member end with the head's payload; the failed
+    node — like any non-member — ends with zeros."""
+    out = np.zeros_like(xs)
+    out[head] = xs[head]
+    for chain in chains:
+        for d in chain:
+            if d != failed:
+                out[d] = xs[head]
+    return out
+
+
 def all_gather_ref(xs: np.ndarray, tiled: bool = False) -> np.ndarray:
     """Every device ends with the full stack (device-id indexed) —
     independent of ring order."""

@@ -476,3 +476,53 @@ def partition_total_hops(
     """Sum of per-chain hop totals (wire-energy metric; the latency
     metric is the simulator's ``multi_chain_latency``)."""
     return sum(chain_total_hops(topo, c, source) for c in chains)
+
+
+# ---------------------------------------------------------------------------
+# Chain re-forming (fault tolerance — endpoint-only recovery)
+# ---------------------------------------------------------------------------
+
+
+def reform_chain(
+    topo: MeshTopology,
+    order: Sequence[int],
+    failed: int,
+    source: int = 0,
+    *,
+    scheduler: str = "tsp",
+) -> list[int]:
+    """Splice ``failed`` out of one sub-chain and re-order the orphaned
+    suffix — the endpoint-side half of Chainwrite fault recovery.
+
+    Store-and-forward means every member *upstream* of the failure has
+    already banked the payload, so the prefix is kept verbatim and only
+    the downstream (orphaned) suffix is re-planned: it is re-scheduled
+    by the requested scheduler (exact TSP for <= 13 members) starting
+    from the surviving chain tail (the last prefix member, or the
+    source when the failure hit the chain head). The better of the
+    spliced original order and the re-scheduled suffix is kept, so
+    re-forming never costs more hops than the naive splice.
+
+    All scoring goes through :meth:`MeshTopology.distance`, so
+    wrap-around links are exploited when ``topo.torus`` — the recovery
+    path on a torus is never longer than on the equivalent mesh.
+
+    Like XDMA's distributed-DMA re-configuration, this is purely an
+    endpoint operation: the result is just a new cfg schedule for the
+    survivors; nothing in the NoC changes.
+    """
+    order = [int(d) for d in order]
+    failed = int(failed)
+    if failed not in order:
+        raise ValueError(f"failed node {failed} is not a chain member")
+    i = order.index(failed)
+    prefix, suffix = order[:i], order[i + 1 :]
+    if not suffix:
+        return prefix
+    tail = prefix[-1] if prefix else source
+    rescheduled = SCHEDULERS[scheduler](topo, suffix, tail)
+    if chain_total_hops(topo, rescheduled, tail) <= chain_total_hops(
+        topo, suffix, tail
+    ):
+        return prefix + rescheduled
+    return prefix + suffix

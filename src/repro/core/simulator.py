@@ -19,6 +19,14 @@ same three P2MP mechanisms on the same NoC (2-D mesh, XY routing,
   cfg-inject port; completion = max over chains. Reduces exactly to
   ``chainwrite_latency`` at K=1. ``choose_num_chains`` picks K by
   argmin of this model.
+* ``chain_recovery_latency`` — failure/recovery extension: one chain
+  member dies, the initiator times out (``fail_timeout_cc``), re-forms
+  the orphaned suffix (``scheduling.reform_chain``) and re-dispatches
+  its cfgs through the same single cfg-inject port; the data is
+  re-sent from the last surviving upstream member (store-and-forward
+  banked the payload there). Isolation invariant: chains without a
+  failed member complete at *exactly* their ``multi_chain_latency``
+  per-chain time.
 
 Calibration: the model's per-destination marginal overhead for a
 1-hop-spaced chain is **82 cycles**, matching the paper's measured
@@ -31,7 +39,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from .scheduling import SCHEDULERS, chain_total_hops, partition_schedule
+from .scheduling import (
+    SCHEDULERS,
+    chain_total_hops,
+    partition_schedule,
+    reform_chain,
+)
 from .topology import MeshTopology
 
 
@@ -59,6 +72,13 @@ class SimParams:
     mcast_setup_base_cc: int = 40
     mcast_setup_per_dst_cc: int = 6
     mcast_setup_quad_cc: float = 4.7  # grows faster than Torrent's linear
+    # Failure recovery: cycles the initiator waits for a missing finish
+    # before declaring a chain member dead and re-forming around it.
+    fail_timeout_cc: int = 512
+    # Initiator memory-read bandwidth shared by K concurrent data
+    # streams (bytes/cycle). None = no contention (each stream reads at
+    # full link_bw), which keeps every pinned latency unchanged.
+    src_read_bw: int | None = None
 
 
 DEFAULT_PARAMS = SimParams()
@@ -117,6 +137,64 @@ def multicast_latency(
     return setup + far * p.router_cc + _ceil_div(size_bytes, p.link_bw)
 
 
+def _effective_bw(p: SimParams, streams: int) -> int:
+    """Per-stream source-read bandwidth with ``streams`` concurrent
+    data streams sharing the initiator's memory port
+    (``src_read_bw=None`` = no contention -> full link_bw)."""
+    if p.src_read_bw is None or streams <= 1:
+        return p.link_bw if p.src_read_bw is None else min(
+            p.link_bw, p.src_read_bw
+        )
+    return max(1, min(p.link_bw, p.src_read_bw // streams))
+
+
+def _chain_phases(
+    topo: MeshTopology,
+    src: int,
+    head: int,
+    order: Sequence[int],
+    size_bytes: int,
+    p: SimParams,
+    *,
+    injected: int,
+    streams: int = 1,
+) -> tuple[int, int, int, int]:
+    """Four-phase (cfg, grant, data, finish) split of one chain.
+
+    ``src`` is the cfg initiator (owner of the single cfg-inject port:
+    ``injected`` counts every cfg packet serialized through it up to
+    and including this chain's); ``head`` is where the data stream
+    enters the chain (= ``src`` normally, the last surviving upstream
+    member during recovery). ``streams`` is the number of concurrent
+    data streams sharing ``src_read_bw``.
+
+    * cfg — initiator serializes ``injected`` cfg packets; packets race
+      to members in parallel; the chain is ready when the farthest
+      member has decoded its cfg.
+    * grant / finish — tail -> head along the chain.
+    * data — one pipelined stream through the chain: per-hop
+      store-and-forward fill, then streaming at the effective
+      bandwidth.
+    """
+    n = len(order)
+    chain_hops = chain_total_hops(topo, order, head)
+    far = max(topo.distance(src, d) for d in order)
+    cfg = (
+        p.dma_setup_cc
+        + injected * p.cfg_inject_cc
+        + far * p.router_cc
+        + p.cfg_proc_cc
+    )
+    grant = chain_hops * p.router_cc + n * p.grant_fwd_cc
+    data = (
+        chain_hops * p.router_cc
+        + n * p.sf_fill_cc
+        + _ceil_div(size_bytes, _effective_bw(p, streams))
+    )
+    finish = chain_hops * p.router_cc + n * p.finish_fwd_cc
+    return cfg, grant, data, finish
+
+
 def chainwrite_latency(
     topo: MeshTopology,
     src: int,
@@ -131,28 +209,11 @@ def chainwrite_latency(
     """
     if not order:
         return 0
-    n = len(order)
-    chain_hops = chain_total_hops(topo, order, src)
-
-    # Phase 1 — cfg dispatch: initiator serializes one cfg packet per
-    # member (cfg_inject each); packets race to members in parallel;
-    # the chain is ready when the farthest member has decoded its cfg.
-    far = max(topo.distance(src, d) for d in order)
-    cfg = p.dma_setup_cc + n * p.cfg_inject_cc + far * p.router_cc + p.cfg_proc_cc
-
-    # Phase 2 — grant: tail -> head along the chain.
-    grant = chain_hops * p.router_cc + n * p.grant_fwd_cc
-
-    # Phase 3 — data: one pipelined stream through the chain. The tail
-    # sees the first byte after the pipeline fill (per-hop
-    # store-and-forward fill + wire), then streams at link_bw.
-    data = chain_hops * (p.router_cc + 0) + n * p.sf_fill_cc + _ceil_div(
-        size_bytes, p.link_bw
+    return sum(
+        _chain_phases(
+            topo, src, src, order, size_bytes, p, injected=len(order)
+        )
     )
-
-    # Phase 4 — finish: tail -> head again.
-    finish = chain_hops * p.router_cc + n * p.finish_fwd_cc
-    return cfg + grant + data + finish
 
 
 def multi_chain_latency(
@@ -192,29 +253,102 @@ def multi_chain_latency(
     per_phase: list[tuple[int, int, int, int]] = []
     injected = 0  # cfg packets already serialized through the port
     for order in chains:
-        n = len(order)
-        injected += n
-        chain_hops = chain_total_hops(topo, order, src)
-        far = max(topo.distance(src, d) for d in order)
-        cfg = (
-            p.dma_setup_cc
-            + injected * p.cfg_inject_cc
-            + far * p.router_cc
-            + p.cfg_proc_cc
+        injected += len(order)
+        phases = _chain_phases(
+            topo, src, src, order, size_bytes, p,
+            injected=injected, streams=len(chains),
         )
-        grant = chain_hops * p.router_cc + n * p.grant_fwd_cc
-        data = (
-            chain_hops * p.router_cc
-            + n * p.sf_fill_cc
-            + _ceil_div(size_bytes, p.link_bw)
-        )
-        finish = chain_hops * p.router_cc + n * p.finish_fwd_cc
-        per_phase.append((cfg, grant, data, finish))
-        per_chain.append(cfg + grant + data + finish)
+        per_phase.append(phases)
+        per_chain.append(sum(phases))
 
     total = max(per_chain)
     if detail:
         return {"total": total, "per_chain": per_chain, "per_phase": per_phase}
+    return total
+
+
+def chain_recovery_latency(
+    topo: MeshTopology,
+    src: int,
+    chains: Sequence[Sequence[int]],
+    failed: int,
+    size_bytes: int,
+    p: SimParams = DEFAULT_PARAMS,
+    *,
+    scheduler: str = "tsp",
+    detail: bool = False,
+) -> int | dict[str, object]:
+    """Multi-chain completion latency when chain member ``failed`` dies.
+
+    Composition (all endpoint-side — recovery is just a new cfg
+    dispatch, the NoC is untouched):
+
+    1. **Detection** — the failed chain runs its original four phases
+       but the finish never arrives; the initiator times out
+       ``fail_timeout_cc`` after the chain's expected completion.
+    2. **Re-cfg dispatch** — the orphaned suffix is re-formed
+       (``scheduling.reform_chain``: splice + TSP re-order from the
+       surviving tail, torus-aware) and its cfg packets are serialized
+       through the same single cfg-inject port (the staggered-cfg
+       machinery of :func:`multi_chain_latency`, now uncontended).
+    3. **Re-sent frames** — grant/data/finish for the re-formed suffix,
+       streamed from the last surviving upstream member (which banked
+       the payload during store-and-forward), or from the initiator
+       when the failure hit the chain head.
+
+    Isolation invariant (pinned by tests): every chain *without* the
+    failed member completes at exactly its ``multi_chain_latency``
+    per-chain time — a failure never perturbs other sub-chains.
+
+    With ``detail=True`` returns the ``multi_chain_latency`` detail
+    dict extended with a ``recovery`` entry: ``{"chain", "reformed",
+    "resent", "detect_cc", "cfg_cc", "grant_cc", "data_cc",
+    "finish_cc", "recovery_cc"}``.
+    """
+    chains = [list(c) for c in chains if len(c)]
+    failed = int(failed)
+    ci = next((i for i, c in enumerate(chains) if failed in c), None)
+    if ci is None:
+        raise ValueError(f"failed node {failed} is in no chain")
+
+    base = multi_chain_latency(topo, src, chains, size_bytes, p, detail=True)
+    assert isinstance(base, dict)
+    order = chains[ci]
+    i = order.index(failed)
+    prefix = order[:i]
+    reformed = reform_chain(topo, order, failed, src, scheduler=scheduler)
+    resent = reformed[len(prefix):]
+
+    if resent:
+        head = prefix[-1] if prefix else src
+        cfg, grant, data, finish = _chain_phases(
+            topo, src, head, resent, size_bytes, p,
+            injected=len(resent), streams=1,
+        )
+    else:  # tail failure: nothing downstream to re-send
+        cfg = grant = data = finish = 0
+    recovery_cc = p.fail_timeout_cc + cfg + grant + data + finish
+
+    per_chain = list(base["per_chain"])
+    per_chain[ci] += recovery_cc
+    total = max(per_chain)
+    if detail:
+        return {
+            "total": total,
+            "per_chain": per_chain,
+            "per_phase": list(base["per_phase"]),
+            "recovery": {
+                "chain": ci,
+                "reformed": reformed,
+                "resent": resent,
+                "detect_cc": p.fail_timeout_cc,
+                "cfg_cc": cfg,
+                "grant_cc": grant,
+                "data_cc": data,
+                "finish_cc": finish,
+                "recovery_cc": recovery_cc,
+            },
+        }
     return total
 
 

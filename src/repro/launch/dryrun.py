@@ -32,7 +32,7 @@ import traceback
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              collectives: str = "xla", remat: str = "dots",
-             variant: str = "baseline") -> dict:
+             variant: str = "baseline", num_chains: int = 1) -> dict:
     import jax
 
     from repro import configs as C
@@ -44,6 +44,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     rec: dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "collectives": collectives, "remat": remat, "variant": variant,
+        "num_chains": num_chains,
     }
     if not ok:
         rec.update(status="skipped", reason=reason)
@@ -52,7 +53,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     cell = build_cell(arch, shape_name, mesh, collectives=collectives,
-                      remat=remat, variant=variant)
+                      num_chains=num_chains, remat=remat, variant=variant)
+    rec["num_chains"] = cell.num_chains  # effective K (VARIANTS resolved)
     lowered = cell.lower()
     t1 = time.time()
     compiled = lowered.compile()
@@ -131,6 +133,10 @@ def main() -> None:
     p.add_argument("--remat", default="dots")
     p.add_argument("--variant", default="baseline",
                    help="optimization bundle from steps.VARIANTS")
+    p.add_argument("--num-chains", type=int, default=1,
+                   help="multi-chain Chainwrite sub-rings per DP "
+                        "reduction (with --collectives torrent); "
+                        "sweepable next to --collectives")
     p.add_argument("--out", default="experiments/dryrun")
     p.add_argument("--all", action="store_true")
     p.add_argument("--meshes", default="single,multi")
@@ -155,17 +161,14 @@ def main() -> None:
 
     out_dir = os.path.join(args.out, args.mesh)
     os.makedirs(out_dir, exist_ok=True)
-    suffix = "" if args.collectives == "xla" else f"__{args.collectives}"
-    if args.variant != "baseline":
-        suffix += f"__{args.variant}"
-    if args.remat != "dots":
-        suffix += f"__remat-{args.remat}"
-    path = os.path.join(out_dir, f"{args.arch}__{args.shape}{suffix}.json")
+    path = os.path.join(
+        out_dir, f"{args.arch}__{args.shape}{_cell_suffix(args)}.json"
+    )
     try:
         rec = run_cell(
             args.arch, args.shape, args.mesh, out_dir,
             collectives=args.collectives, remat=args.remat,
-            variant=args.variant,
+            variant=args.variant, num_chains=args.num_chains,
         )
     except Exception:
         rec = {
@@ -187,10 +190,23 @@ def main() -> None:
         print(f"{args.arch} × {args.shape} × {args.mesh}: {rec['status']} ({rec.get('reason','')})")
 
 
+def _cell_suffix(args) -> str:
+    """Output-file suffix encoding every non-default cell knob — shared
+    by the single-cell writer and the --all cache check so sweeps over
+    different knobs never collide on (or get skipped for) one path."""
+    suffix = "" if args.collectives == "xla" else f"__{args.collectives}"
+    if args.num_chains != 1:
+        suffix += f"__k{args.num_chains}"
+    if args.variant != "baseline":
+        suffix += f"__{args.variant}"
+    if args.remat != "dots":
+        suffix += f"__remat-{args.remat}"
+    return suffix
+
+
 def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
     out_dir = os.path.join(args.out, mesh_kind)
-    suffix = "" if args.collectives == "xla" else f"__{args.collectives}"
-    path = os.path.join(out_dir, f"{arch}__{shape}{suffix}.json")
+    path = os.path.join(out_dir, f"{arch}__{shape}{_cell_suffix(args)}.json")
     if os.path.exists(path):
         with open(path) as f:
             if json.load(f).get("status") in ("ok", "skipped"):
@@ -200,6 +216,7 @@ def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
         sys.executable, "-m", "repro.launch.dryrun",
         "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
         "--collectives", args.collectives, "--remat", args.remat,
+        "--num-chains", str(args.num_chains), "--variant", args.variant,
         "--out", args.out,
     ]
     print("::", " ".join(cmd[3:]), flush=True)

@@ -40,6 +40,7 @@ class Cell:
     in_shardings: tuple
     out_shardings: Any
     donate_argnums: tuple[int, ...] = ()
+    num_chains: int = 1  # effective K after VARIANTS resolution
 
     def lower(self):
         jitted = jax.jit(
@@ -85,6 +86,7 @@ def make_train_step(
     *,
     remat: str = "dots",
     collectives: str = "xla",
+    num_chains: int = 1,
     mesh=None,
     batch_specs=None,
     loss_chunks: int = 8,
@@ -96,6 +98,12 @@ def make_train_step(
     split along dim 0 and scanned, dividing the activation working set
     by M at unchanged math (equal microbatches ⇒ mean-of-means == global
     mean) — the HBM-fit lever for the large training cells (§Perf).
+
+    ``num_chains`` (with ``collectives="torrent"``) selects the
+    multi-chain Chainwrite gradient reduction: K concurrent sub-rings
+    per DP reduction (``parallel.collectives.torrent_grad_reduce``).
+    Sweepable next to ``collectives=`` from the dry-run CLI
+    (``--num-chains``) and via ``VARIANTS`` bundles.
     """
 
     def grad_fn_local(params, batch):
@@ -108,7 +116,7 @@ def make_train_step(
     def grad_fn(params, batch):
         if collectives == "torrent":
             return torrent_grad_reduce(
-                grad_fn_local, mesh, batch_specs
+                grad_fn_local, mesh, batch_specs, num_chains=num_chains
             )(params, batch)
         return grad_fn_local(params, batch)
 
@@ -161,8 +169,14 @@ def make_serve_step(cfg: ModelConfig):
 
 # Named optimization bundles for the §Perf hillclimb. "baseline" is the
 # paper-faithful configuration; each variant is one recorded change.
+# Entries are ModelConfig field overrides, except the step-builder knob
+# "num_chains" (popped by build_cell and routed to make_train_step) so
+# the multi-chain Chainwrite reduction sweeps next to ``collectives=``.
 VARIANTS: dict[str, dict] = {
     "baseline": {},
+    # multi-chain Chainwrite DP reduction (K=2 concurrent sub-rings);
+    # only meaningful with collectives="torrent".
+    "k2": {"num_chains": 2},
     # chunked online-softmax attention (flash twin) — kills the S²
     # score materialization that dominates every memory term.
     "chunked": {"attn_impl": "chunked"},
@@ -187,13 +201,23 @@ def build_cell(
     mesh: jax.sharding.Mesh,
     *,
     collectives: str = "xla",
+    num_chains: int = 1,
     remat: str = "dots",
     smoke: bool = False,
     variant: str = "baseline",
 ) -> Cell:
     cfg = C.get_smoke_config(arch) if smoke else C.get_config(arch)
-    if VARIANTS.get(variant):
-        cfg = dataclasses.replace(cfg, **VARIANTS[variant])
+    overrides = dict(VARIANTS.get(variant) or {})
+    variant_k = overrides.pop("num_chains", None)
+    if variant_k is not None:
+        if num_chains not in (1, variant_k):
+            raise ValueError(
+                f"variant {variant!r} sets num_chains={variant_k} but "
+                f"num_chains={num_chains} was passed explicitly"
+            )
+        num_chains = variant_k
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
     shape = C.SHAPES[shape_name]
     tp = mesh.shape.get("model", 1)
     dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
@@ -215,7 +239,7 @@ def build_cell(
         )
         step = make_train_step(
             cfg, opt_cfg, remat=remat, collectives=collectives,
-            mesh=mesh, batch_specs=bspecs_clean,
+            num_chains=num_chains, mesh=mesh, batch_specs=bspecs_clean,
         )
         return Cell(
             cfg=cfg, shape=shape, mesh=mesh, step_fn=step,
@@ -227,6 +251,7 @@ def build_cell(
                 _named(mesh, pspecs), _named(mesh, ospecs), None
             ),
             donate_argnums=(0, 1),
+            num_chains=num_chains,
         )
 
     if shape.kind == "prefill":

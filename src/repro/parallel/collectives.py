@@ -33,11 +33,91 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import chainwrite as cw
-from repro.core.scheduling import SCHEDULERS
+from repro.core.scheduling import SCHEDULERS, partition_schedule, reform_chain
 from repro.core.topology import MeshTopology
 from repro.runtime.compression import compressed_chain_all_reduce
 
 PyTree = Any
+
+
+class MultiChainPlan:
+    """Host-side multi-chain broadcast plan with endpoint-only
+    re-forming — the integration seam between the Torrent fault model
+    and ``runtime.failure.resilient_loop``.
+
+    The destination set is partitioned into K link-disjoint-preferring
+    sub-chains (``core.scheduling.partition_schedule``). On a node
+    failure, :meth:`reform` splices the dead member out of its
+    sub-chain and re-orders the orphaned suffix
+    (``core.scheduling.reform_chain`` — torus-aware), so the next
+    :meth:`broadcast` is the degraded collective over the survivors:
+    recovery is just a new chain schedule (the XDMA property — no NoC
+    change), and a training step retries instead of restarting the
+    whole collective from a checkpoint. Pass ``plan.reform`` as
+    ``resilient_loop(reform_fn=...)``.
+    """
+
+    def __init__(
+        self,
+        topo: MeshTopology,
+        head: int,
+        destinations,
+        *,
+        num_chains: int | None = None,
+        scheduler: str = "tsp",
+        max_chains: int = 4,
+    ) -> None:
+        self.topo = topo
+        self.head = int(head)
+        self.scheduler = scheduler
+        self.chains: list[list[int]] = [
+            list(c)
+            for c in partition_schedule(
+                topo, list(destinations), self.head,
+                num_chains=num_chains, scheduler=scheduler,
+                max_chains=max_chains,
+            )
+        ]
+        self.failed: list[int] = []
+
+    @property
+    def survivors(self) -> list[int]:
+        return [d for c in self.chains for d in c]
+
+    def reform(self, node: int) -> bool:
+        """Re-form around dead member ``node``; True when handled.
+
+        Only the sub-chain containing ``node`` changes (its orphaned
+        suffix is re-scheduled from the surviving tail); every other
+        sub-chain keeps its schedule verbatim. Unknown nodes (already
+        failed, the head, or never a member) return False so the
+        caller can fall back to checkpoint restart.
+        """
+        node = int(node)
+        for i, chain in enumerate(self.chains):
+            if node in chain:
+                new = reform_chain(
+                    self.topo, chain, node, self.head,
+                    scheduler=self.scheduler,
+                )
+                if new:
+                    self.chains[i] = new
+                else:
+                    del self.chains[i]
+                self.failed.append(node)
+                return True
+        return False
+
+    def broadcast(self, x, axis_name, *, num_frames: int = 1):
+        """The (possibly degraded) multi-chain broadcast over the
+        current survivor schedule. Must run inside ``shard_map``."""
+        if not self.chains:
+            # every destination failed: only the head keeps its payload
+            idx = cw._axis_index(axis_name)
+            return jnp.where(idx == self.head, x, jnp.zeros_like(x))
+        return cw.multi_chain_broadcast(
+            x, axis_name, self.head, self.chains, num_frames=num_frames
+        )
 
 
 def ring_order_for_axis(axis_size: int, scheduler: str = "tsp") -> tuple[int, ...]:

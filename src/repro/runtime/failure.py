@@ -5,6 +5,16 @@ checkpointing, (b) crash recovery — any exception classified as a
 *node failure* rolls the loop back to the latest complete checkpoint
 and replays (the data pipeline is counter-based, so replay is exact),
 (c) a bounded restart budget. :class:`FaultInjector` drives the tests.
+
+Chain re-forming (Torrent fault tolerance): a
+:class:`SimulatedNodeFailure` that names the dead ``node`` can be
+handled *without* rolling back — pass ``reform_fn`` (e.g.
+``parallel.collectives.MultiChainPlan.reform``) and the loop re-forms
+the Chainwrite schedule around the dead member and retries the same
+step with the live state. Recovery is purely an endpoint-side re-cfg
+(no NoC change), so only the failed member's sub-chain pays; the
+checkpoint rollback path remains the fallback for anonymous failures
+or when re-forming declines.
 """
 
 from __future__ import annotations
@@ -17,19 +27,32 @@ log = logging.getLogger("repro.runtime")
 
 
 class SimulatedNodeFailure(RuntimeError):
-    pass
+    """A node died mid-step. ``node`` (when known) identifies the dead
+    chain member so the runtime can re-form around it instead of
+    restarting from a checkpoint."""
+
+    def __init__(self, message: str = "", node: int | None = None):
+        super().__init__(message)
+        self.node = node
 
 
 class FaultInjector:
-    """Raises SimulatedNodeFailure at the scheduled steps (once each)."""
+    """Raises SimulatedNodeFailure at the scheduled steps (once each).
 
-    def __init__(self, fail_at: tuple[int, ...] = ()):
+    ``node`` attributes the injected failures to a specific chain
+    member so the re-forming path can be driven in tests.
+    """
+
+    def __init__(self, fail_at: tuple[int, ...] = (), node: int | None = None):
         self.pending = set(fail_at)
+        self.node = node
 
     def maybe_fail(self, step: int):
         if step in self.pending:
             self.pending.discard(step)
-            raise SimulatedNodeFailure(f"injected failure at step {step}")
+            raise SimulatedNodeFailure(
+                f"injected failure at step {step}", node=self.node
+            )
 
 
 @dataclasses.dataclass
@@ -37,6 +60,7 @@ class LoopResult:
     final_step: int
     restarts: int
     metrics_history: list[dict]
+    reforms: int = 0
 
 
 def resilient_loop(
@@ -50,16 +74,25 @@ def resilient_loop(
     start_step: int = 0,
     restore_fn: Callable[[int, Any], Any] | None = None,
     on_step: Callable[[int, dict], None] | None = None,
+    reform_fn: Callable[[int], bool] | None = None,
 ) -> tuple[Any, LoopResult]:
     """Run ``step_fn`` for ``num_steps`` with checkpoint/restart.
 
     ``restore_fn(step, like_state) -> state`` defaults to
     ``ckpt.restore``; override for elastic restores.
+
+    ``reform_fn(node) -> bool`` handles failures that name a dead chain
+    member: return True to signal the Chainwrite schedule was re-formed
+    around ``node`` — the loop then retries the *same* step with the
+    live state (no rollback, no replay). Returning False (or an
+    anonymous failure) falls back to the checkpoint-restart path.
+    Re-forms and restarts share the ``max_restarts`` budget.
     """
     if restore_fn is None:
         restore_fn = lambda s, like: ckpt.restore(s, like)
 
     restarts = 0
+    reforms = 0
     history: list[dict] = []
     step = start_step
     ckpt.save(step, state, blocking=True)  # step-0 baseline
@@ -74,8 +107,18 @@ def resilient_loop(
             if step % ckpt_every == 0:
                 ckpt.save(step, state)
         except SimulatedNodeFailure as e:
+            node = getattr(e, "node", None)
+            if reform_fn is not None and node is not None and reform_fn(node):
+                reforms += 1
+                if restarts + reforms > max_restarts:
+                    raise RuntimeError("restart budget exhausted") from e
+                log.warning(
+                    "node %d failed at step %d -> chain re-formed, retrying",
+                    node, step,
+                )
+                continue  # state is intact: retry the same step
             restarts += 1
-            if restarts > max_restarts:
+            if restarts + reforms > max_restarts:
                 raise RuntimeError("restart budget exhausted") from e
             ckpt.wait()  # let in-flight saves land
             latest = ckpt.latest_step()
@@ -83,4 +126,4 @@ def resilient_loop(
             state = restore_fn(latest, state)
             step = latest
     ckpt.save(step, state, blocking=True)
-    return state, LoopResult(step, restarts, history)
+    return state, LoopResult(step, restarts, history, reforms)

@@ -8,6 +8,9 @@ from __future__ import annotations
 
 import pytest
 
+# Multidevice oracle tests (subprocess per test): skipped under QUICK=1.
+pytestmark = pytest.mark.slow
+
 
 def test_chain_broadcast_subset_and_frames(run_multidevice):
     run_multidevice("""

@@ -1,0 +1,445 @@
+"""Fault-tolerant multi-chain Chainwrite: re-forming, recovery latency,
+failure isolation, and the resilient-loop integration.
+
+Pins the ISSUE-2 acceptance matrix:
+
+* ``reform_chain`` splices the failed member and re-orders only the
+  orphaned suffix (torus-aware: wrap-around links are scored).
+* ``chain_recovery_latency`` isolation invariant — sub-chains without
+  the failed member complete at *exactly* their failure-free latency.
+* The calibrated Fig. 7 slope (82 CC/destination) and the CC-exact
+  K=1 reduction survive the simulator refactor, with and without the
+  new ``src_read_bw`` knob.
+* ``MultiChainTask.inject_failure`` charges recovery cycles only to
+  the affected sub-chain's ledger and still delivers to survivors.
+* ``resilient_loop(reform_fn=...)`` + ``MultiChainPlan`` survive a
+  ``SimulatedNodeFailure`` by re-forming instead of restarting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import chainwrite_ref as ref
+from repro.core.chaintask import MultiChainTask, Phase
+from repro.core.scheduling import (
+    chain_total_hops,
+    partition_schedule,
+    reform_chain,
+    tsp_schedule,
+)
+from repro.core.simulator import (
+    DEFAULT_PARAMS,
+    SimParams,
+    chain_recovery_latency,
+    chainwrite_latency,
+    config_overhead_per_destination,
+    multi_chain_latency,
+)
+from repro.core.topology import MeshTopology
+from repro.parallel.collectives import MultiChainPlan
+from repro.runtime.failure import (
+    FaultInjector,
+    SimulatedNodeFailure,
+    resilient_loop,
+)
+
+TOPO = MeshTopology(4, 5)  # the paper's 20-cluster SoC
+BIG = MeshTopology(8, 8)
+SIZE = 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# reform_chain (scheduling layer)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_reform_chain_covers_survivors_and_keeps_prefix(data):
+    dests = data.draw(
+        st.lists(st.integers(1, 63), min_size=2, max_size=12, unique=True)
+    )
+    order = tsp_schedule(BIG, dests, 0)
+    failed = data.draw(st.sampled_from(order))
+    i = order.index(failed)
+    new = reform_chain(BIG, order, failed, 0)
+    assert sorted(new) == sorted(d for d in order if d != failed)
+    assert new[:i] == order[:i]  # upstream members keep the payload
+
+
+def test_reform_chain_tail_failure_is_pure_splice():
+    order = [1, 2, 3, 4]
+    assert reform_chain(BIG, order, 4, 0) == [1, 2, 3]
+
+
+def test_reform_chain_never_worse_than_splice():
+    rng = random.Random(7)
+    for _ in range(20):
+        dests = rng.sample(range(1, 64), 10)
+        order = tsp_schedule(BIG, dests, 0)
+        failed = rng.choice(order)
+        i = order.index(failed)
+        new = reform_chain(BIG, order, failed, 0)
+        spliced = order[:i] + order[i + 1 :]
+        assert chain_total_hops(BIG, new, 0) <= chain_total_hops(
+            BIG, spliced, 0
+        )
+
+
+def test_reform_chain_non_member_raises():
+    with pytest.raises(ValueError):
+        reform_chain(BIG, [1, 2, 3], 9, 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_reform_chain_torus_scores_wraparound(data):
+    """Re-formed chains on a torus never cost more hops than on the
+    equivalent mesh (wrap-around links are exploited)."""
+    mesh = MeshTopology(6, 6, torus=False)
+    torus = MeshTopology(6, 6, torus=True)
+    dests = data.draw(
+        st.lists(st.integers(1, 35), min_size=3, max_size=10, unique=True)
+    )
+    order = tsp_schedule(mesh, dests, 0)
+    failed = data.draw(st.sampled_from(order))
+    on_mesh = reform_chain(mesh, order, failed, 0)
+    on_torus = reform_chain(torus, order, failed, 0)
+    assert sorted(on_torus) == sorted(on_mesh)
+    assert chain_total_hops(torus, on_torus, 0) <= chain_total_hops(
+        mesh, on_mesh, 0
+    )
+
+
+# ---------------------------------------------------------------------------
+# chain_recovery_latency (simulator layer)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data(), k=st.integers(2, 4))
+def test_recovery_isolates_unfailed_chains_cc_exact(data, k):
+    """Isolation invariant: every chain without the failed member
+    completes at exactly its multi_chain_latency per-chain time."""
+    dests = data.draw(
+        st.lists(st.integers(1, 63), min_size=6, max_size=20, unique=True)
+    )
+    chains = partition_schedule(BIG, dests, 0, num_chains=k)
+    failed = data.draw(st.sampled_from([d for c in chains for d in c]))
+    base = multi_chain_latency(BIG, 0, chains, SIZE, detail=True)
+    rec = chain_recovery_latency(BIG, 0, chains, failed, SIZE, detail=True)
+    ci = rec["recovery"]["chain"]
+    assert failed in chains[ci]
+    for i, (b, r) in enumerate(zip(base["per_chain"], rec["per_chain"])):
+        if i == ci:
+            assert r == b + rec["recovery"]["recovery_cc"]
+        else:
+            assert r == b  # CC-exact isolation
+    assert rec["per_phase"] == base["per_phase"]
+    assert rec["total"] == max(rec["per_chain"])
+    assert chain_recovery_latency(BIG, 0, chains, failed, SIZE) == rec["total"]
+
+
+def test_recovery_charges_at_least_the_timeout():
+    chains = partition_schedule(BIG, list(range(1, 13)), 0, num_chains=3)
+    failed = chains[0][0]
+    rec = chain_recovery_latency(BIG, 0, chains, failed, SIZE, detail=True)
+    r = rec["recovery"]
+    assert r["detect_cc"] == DEFAULT_PARAMS.fail_timeout_cc
+    assert r["recovery_cc"] >= DEFAULT_PARAMS.fail_timeout_cc
+    # a mid-chain failure re-sends a non-empty suffix: all four phases
+    assert r["resent"]
+    assert min(r["cfg_cc"], r["grant_cc"], r["data_cc"], r["finish_cc"]) > 0
+    # the re-formed order covers the chain minus the failed member
+    assert sorted(r["reformed"]) == sorted(
+        d for d in chains[0] if d != failed
+    )
+
+
+def test_recovery_tail_failure_costs_only_the_timeout():
+    chains = [[1, 2, 3], [9, 17]]
+    rec = chain_recovery_latency(BIG, 0, chains, 3, SIZE, detail=True)
+    assert rec["recovery"]["resent"] == []
+    assert rec["recovery"]["recovery_cc"] == DEFAULT_PARAMS.fail_timeout_cc
+
+
+def test_recovery_unknown_node_raises():
+    with pytest.raises(ValueError):
+        chain_recovery_latency(BIG, 0, [[1, 2]], 5, SIZE)
+
+
+# ---------------------------------------------------------------------------
+# regression: calibration survives the simulator refactor (satellite b)
+# ---------------------------------------------------------------------------
+
+
+def test_fig7_slope_survives_refactor():
+    res = config_overhead_per_destination(TOPO, src=0, max_dsts=8)
+    assert res["slope_cc_per_dst"] == pytest.approx(82.0, abs=3.0)
+
+
+def test_k1_reduction_survives_refactor_with_and_without_src_read_bw():
+    rng = random.Random(4)
+    contended = dataclasses.replace(DEFAULT_PARAMS, src_read_bw=48)
+    for n in (1, 4, 9):
+        dests = rng.sample(range(1, 64), n)
+        order = tsp_schedule(BIG, dests, 0)
+        for p in (DEFAULT_PARAMS, contended):
+            assert multi_chain_latency(BIG, 0, [order], SIZE, p) == (
+                chainwrite_latency(BIG, 0, order, SIZE, p)
+            )
+
+
+# ---------------------------------------------------------------------------
+# src_read_bw knob (satellite: data-port contention)
+# ---------------------------------------------------------------------------
+
+
+def test_src_read_bw_default_changes_nothing():
+    """src_read_bw=None (the default) keeps every pinned latency."""
+    explicit = SimParams(src_read_bw=None)
+    chains = partition_schedule(BIG, list(range(1, 17)), 0, num_chains=3)
+    assert multi_chain_latency(BIG, 0, chains, SIZE, explicit) == (
+        multi_chain_latency(BIG, 0, chains, SIZE, DEFAULT_PARAMS)
+    )
+    # generous bandwidth (>= K * link_bw) is also contention-free
+    generous = SimParams(src_read_bw=3 * DEFAULT_PARAMS.link_bw)
+    assert multi_chain_latency(BIG, 0, chains, SIZE, generous) == (
+        multi_chain_latency(BIG, 0, chains, SIZE, DEFAULT_PARAMS)
+    )
+
+
+def test_src_read_bw_contention_slows_only_the_data_phase():
+    chains = partition_schedule(BIG, list(range(1, 17)), 0, num_chains=3)
+    scarce = SimParams(src_read_bw=DEFAULT_PARAMS.link_bw)  # K shares 1 link
+    base = multi_chain_latency(BIG, 0, chains, SIZE, detail=True)
+    slow = multi_chain_latency(BIG, 0, chains, SIZE, scarce, detail=True)
+    for (bc, bg, bd, bf), (sc, sg, sd, sf) in zip(
+        base["per_phase"], slow["per_phase"]
+    ):
+        assert (sc, sg, sf) == (bc, bg, bf)  # cfg/grant/finish untouched
+        assert sd > bd  # data stream pays the shared read port
+    assert slow["total"] > base["total"]
+
+
+def test_src_read_bw_monotone_in_bandwidth():
+    chains = partition_schedule(BIG, list(range(1, 17)), 0, num_chains=2)
+    lats = [
+        multi_chain_latency(
+            BIG, 0, chains, SIZE, SimParams(src_read_bw=bw)
+        )
+        for bw in (16, 32, 64, 128)
+    ]
+    assert lats == sorted(lats, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# MultiChainTask failure injection (host orchestration layer)
+# ---------------------------------------------------------------------------
+
+
+def _oracle_rows(num_nodes, payload, head, chains, failed):
+    """Global-view degraded-broadcast oracle rows, keyed by node."""
+    xs = np.zeros((num_nodes,) + payload.shape, payload.dtype)
+    xs[head] = payload
+    return ref.degraded_multi_broadcast_ref(xs, head, chains, failed)
+
+
+def test_multichain_task_failure_delivers_to_survivors_exactly():
+    payload = np.arange(2048, dtype=np.float32)
+    dests = [3, 7, 12, 14, 9, 18]
+    for k in (1, 2, 3):
+        for failed in (12, 18):
+            task = MultiChainTask(TOPO, 0, dests, payload, num_chains=k)
+            task.inject_failure(failed)
+            bufs = task.run()
+            assert task.phase is Phase.DONE
+            assert set(bufs) == set(dests) - {failed}
+            expect = _oracle_rows(
+                TOPO.num_nodes, payload, 0, task.chains, failed
+            )
+            for d in bufs:
+                np.testing.assert_array_equal(bufs[d], expect[d])
+            np.testing.assert_array_equal(
+                expect[failed], np.zeros_like(payload)
+            )
+
+
+def test_multichain_task_failure_charges_only_affected_ledger():
+    payload = np.zeros(SIZE, np.uint8)
+    dests = list(range(1, 13))
+    failed = 7
+    clean = MultiChainTask(BIG, 0, dests, payload, num_chains=3)
+    faulty = MultiChainTask(BIG, 0, dests, payload, num_chains=3)
+    assert clean.chains == faulty.chains
+    faulty.inject_failure(failed)
+    clean.run()
+    faulty.run()
+    ci = next(i for i, c in enumerate(faulty.chains) if failed in c)
+    for i, (a, b) in enumerate(
+        zip(clean.per_chain_ledgers, faulty.per_chain_ledgers)
+    ):
+        if i == ci:
+            assert b["recovery"] > 0
+            assert b["total"] == a["total"] + b["recovery"]
+            for phase in ("cfg", "grant", "data", "finish"):
+                assert a[phase] == b[phase]
+        else:
+            assert a == b  # CC-exact: failure elsewhere is invisible
+    assert "recovery" not in clean.cycle_ledger
+    assert faulty.cycle_ledger["recovery"] == (
+        faulty.per_chain_ledgers[ci]["recovery"]
+    )
+    assert faulty.cycle_ledger["total"] == max(
+        lg["total"] for lg in faulty.per_chain_ledgers
+    )
+    # the reformed schedule drops exactly the failed member
+    assert faulty.reformed_chains is not None
+    assert sorted(d for c in faulty.reformed_chains for d in c) == sorted(
+        d for d in dests if d != failed
+    )
+    assert clean.reformed_chains is None
+
+
+def test_multichain_task_explicit_chains_and_validation():
+    payload = np.zeros(64, np.uint8)
+    chains = [[3, 7], [12, 14]]
+    task = MultiChainTask(TOPO, 0, [3, 7, 12, 14], payload, chains=chains)
+    assert task.chains == chains and task.num_chains == 2
+    with pytest.raises(ValueError):  # chains must partition destinations
+        MultiChainTask(TOPO, 0, [3, 7, 12], payload, chains=chains)
+    with pytest.raises(ValueError):  # failure must name a member
+        task.inject_failure(5)
+    task.run()
+    with pytest.raises(RuntimeError):  # and must precede run()
+        task.inject_failure(3)
+
+
+# ---------------------------------------------------------------------------
+# resilient_loop + MultiChainPlan (the acceptance-criterion test)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injection_end_to_end(tmp_ckpt_dir):
+    """A SimulatedNodeFailure mid-collective is survived by re-forming:
+    only the failed member's sub-chain is re-formed and charged
+    recovery cycles, every other sub-chain's per-phase ledger is
+    CC-identical to the failure-free run, the surviving destinations
+    receive oracle-exact payloads, and the loop never rolls back."""
+    payload = np.arange(512, dtype=np.float32)
+    dests = [3, 7, 12, 14, 9, 18]
+    failed = 12
+    plan = MultiChainPlan(TOPO, 0, dests, num_chains=3)
+    before = [list(c) for c in plan.chains]
+    fi = next(i for i, c in enumerate(before) if failed in c)
+    injector = FaultInjector(fail_at=(2,), node=failed)
+    ckpt = CheckpointManager(tmp_ckpt_dir, keep_last_k=2)
+    tasks = []
+
+    def step_fn(state, i):
+        task = MultiChainTask(
+            TOPO, 0, plan.survivors, payload,
+            chains=[list(c) for c in plan.chains],
+        )
+        try:
+            injector.maybe_fail(i)
+        except SimulatedNodeFailure as e:
+            # the member died mid-collective: finish degraded (recovery
+            # charged to its sub-chain), then let the loop re-form the
+            # plan and retry the step — no checkpoint rollback.
+            task.inject_failure(e.node)
+            task.run()
+            tasks.append(task)
+            raise
+        bufs = task.run()
+        tasks.append(task)
+        return {"count": state["count"] + 1}, {"delivered": len(bufs)}
+
+    state, res = resilient_loop(
+        state={"count": 0}, step_fn=step_fn, num_steps=4, ckpt=ckpt,
+        ckpt_every=100, max_restarts=3, reform_fn=plan.reform,
+    )
+    ckpt.close()
+
+    # survived by re-forming, not restarting
+    assert res.reforms == 1 and res.restarts == 0
+    assert res.final_step == 4 and state["count"] == 4
+    assert plan.failed == [failed]
+    # only the failed member's sub-chain was re-formed
+    assert len(plan.chains) == len(before)
+    for i, (old, new) in enumerate(zip(before, plan.chains)):
+        if i == fi:
+            assert sorted(new) == sorted(d for d in old if d != failed)
+        else:
+            assert new == old
+    # steps after the failure deliver to every survivor
+    assert res.metrics_history[-1]["delivered"] == len(dests) - 1
+
+    # the failing step's task: recovery charged only to the affected
+    # sub-chain, every other ledger CC-exact vs the failure-free step
+    faulty = tasks[2]  # steps 0,1 clean; index 2 = the failing attempt
+    clean = tasks[1]
+    assert faulty.failed_node == failed
+    for i, (a, b) in enumerate(
+        zip(clean.per_chain_ledgers, faulty.per_chain_ledgers)
+    ):
+        if i == fi:
+            assert b["recovery"] > 0
+        else:
+            assert a == b
+    # degraded broadcast: survivors match the chainwrite_ref oracle
+    expect = _oracle_rows(TOPO.num_nodes, payload, 0, before, failed)
+    assert set(faulty.node_buffers) == set(dests) - {failed}
+    for d, buf in faulty.node_buffers.items():
+        np.testing.assert_array_equal(buf, expect[d])
+
+
+def test_reform_fn_declining_falls_back_to_restart(tmp_ckpt_dir):
+    ckpt = CheckpointManager(tmp_ckpt_dir, keep_last_k=2)
+    injector = FaultInjector(fail_at=(1,), node=99)
+
+    def step_fn(state, i):
+        injector.maybe_fail(i)
+        return {"count": state["count"] + 1}, {}
+
+    state, res = resilient_loop(
+        state={"count": 0}, step_fn=step_fn, num_steps=3, ckpt=ckpt,
+        ckpt_every=100, max_restarts=2, reform_fn=lambda node: False,
+    )
+    ckpt.close()
+    assert res.restarts == 1 and res.reforms == 0
+
+
+def test_anonymous_failure_still_restarts(tmp_ckpt_dir):
+    """Failures without a node id keep the original rollback path even
+    when a reform_fn is installed."""
+    ckpt = CheckpointManager(tmp_ckpt_dir, keep_last_k=2)
+    injector = FaultInjector(fail_at=(1,))  # no node attribution
+
+    def step_fn(state, i):
+        injector.maybe_fail(i)
+        return {"count": state["count"] + 1}, {}
+
+    state, res = resilient_loop(
+        state={"count": 0}, step_fn=step_fn, num_steps=3, ckpt=ckpt,
+        ckpt_every=100, max_restarts=2,
+        reform_fn=lambda node: (_ for _ in ()).throw(AssertionError),
+    )
+    ckpt.close()
+    assert res.restarts == 1 and res.reforms == 0
+
+
+def test_plan_reform_unknown_node_returns_false():
+    plan = MultiChainPlan(TOPO, 0, [3, 7, 12], num_chains=2)
+    assert plan.reform(0) is False  # the head cannot be a member
+    assert plan.reform(11) is False  # never a member
+    assert plan.reform(7) is True
+    assert plan.reform(7) is False  # already failed
+    assert 7 not in plan.survivors

@@ -12,6 +12,9 @@ from __future__ import annotations
 
 import pytest
 
+# Multidevice oracle tests (subprocess per test): skipped under QUICK=1.
+pytestmark = pytest.mark.slow
+
 
 def test_multi_chain_broadcast_matches_oracle(run_multidevice):
     run_multidevice("""
@@ -117,6 +120,87 @@ def test_multi_chain_broadcast_validation(run_multidevice):
         x[0], 'x', 0, [(1, 2), (3,)], num_frames=3)[None])
     print("validation OK")
     """)
+
+
+def test_degraded_broadcast_matches_oracle(run_multidevice):
+    """Fault tolerance: the degraded broadcast (failed member dropped)
+    delivers oracle-exact payloads to every survivor for K in {1,2,3},
+    with and without frame pipelining."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    xs = jnp.arange(8 * 6 * 2, dtype=jnp.float32).reshape(8, 6, 2) + 1.0
+
+    cases = [
+        # K=1: head-of-chain, mid-chain and tail failures
+        (0, [(1, 2, 3, 4, 5)], 1),
+        (0, [(1, 2, 3, 4, 5)], 3),
+        (0, [(1, 2, 3, 4, 5)], 5),
+        # K=2
+        (0, [(1, 2, 3), (4, 5, 6, 7)], 2),
+        (2, [(3, 4), (1, 0)], 0),
+        # K=3, incl. a failure that wipes out a whole sub-chain
+        (0, [(1, 2), (4, 5), (6,)], 6),
+        (5, [(6, 7), (4, 3, 2), (1,)], 3),
+    ]
+    for head, chains, failed in cases:
+        for frames in (1, 2, 3):
+            def f(x, head=head, chains=chains, failed=failed, frames=frames):
+                return cw.degraded_multi_chain_broadcast(
+                    x[0], 'x', head, chains, failed, num_frames=frames)[None]
+            y = jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+            expect = ref.degraded_multi_broadcast_ref(
+                np.asarray(xs), head, chains, failed)
+            np.testing.assert_array_equal(
+                np.asarray(y), expect, err_msg=f"{head} {chains} {failed} {frames}")
+            assert not np.asarray(y)[failed].any()  # dead node untouched
+
+    # validation: dropping the head or a non-member must raise
+    def expect_value_error(fn):
+        try:
+            jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+        except ValueError:
+            return
+        raise SystemExit("expected ValueError")
+    expect_value_error(lambda x: cw.degraded_multi_chain_broadcast(
+        x[0], 'x', 0, [(1, 2)], 0)[None])
+    expect_value_error(lambda x: cw.degraded_multi_chain_broadcast(
+        x[0], 'x', 0, [(1, 2)], 5)[None])
+
+    # every destination failed: only the head keeps its payload
+    y = jax.jit(jax.shard_map(
+        lambda x: cw.degraded_multi_chain_broadcast(x[0], 'x', 3, [(6,)], 6)[None],
+        mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+    expect = ref.degraded_multi_broadcast_ref(np.asarray(xs), 3, [(6,)], 6)
+    np.testing.assert_array_equal(np.asarray(y), expect)
+    print("degraded broadcast OK")
+    """, timeout=900)
+
+
+def test_multichain_plan_reform_and_broadcast(run_multidevice):
+    """MultiChainPlan: the re-formed schedule's SPMD broadcast matches
+    the degraded oracle — recovery is endpoint-only (a new schedule)."""
+    run_multidevice("""
+    from repro.core import chainwrite_ref as ref
+    from repro.core.topology import MeshTopology
+    from repro.parallel.collectives import MultiChainPlan
+
+    topo = MeshTopology(4, 2)  # the 8 devices as a 4x2 mesh
+    plan = MultiChainPlan(topo, 0, [1, 2, 3, 4, 5, 6, 7], num_chains=2)
+    before = [list(c) for c in plan.chains]
+    assert plan.reform(5)
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    xs = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4) + 1.0
+    y = jax.jit(jax.shard_map(
+        lambda x: plan.broadcast(x[0], 'x', num_frames=2)[None],
+        mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+    expect = ref.degraded_multi_broadcast_ref(np.asarray(xs), 0, before, 5)
+    np.testing.assert_array_equal(np.asarray(y), expect)
+    print("plan reform broadcast OK")
+    """, timeout=900)
 
 
 def test_multi_chain_all_reduce_matches_oracle(run_multidevice):

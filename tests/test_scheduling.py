@@ -53,6 +53,7 @@ def test_greedy_starts_nearest_to_source():
     assert greedy_schedule(TOPO, dests, 0)[0] == 1
 
 
+@pytest.mark.slow
 def test_tsp_exact_matches_brute_force():
     rng = random.Random(1)
     for n in (2, 3, 5, 7):
@@ -62,6 +63,7 @@ def test_tsp_exact_matches_brute_force():
         assert chain_total_hops(TOPO, exact, 0) == chain_total_hops(TOPO, brute, 0)
 
 
+@pytest.mark.slow
 def test_tsp_heuristic_close_to_exact():
     """Force the 2-opt path (exact_threshold=0) and compare to Held-Karp."""
     rng = random.Random(2)

@@ -41,6 +41,26 @@ def test_smoke_cell_lowers_and_compiles(arch, kind, host_mesh, monkeypatch):
     assert compiled.cost_analysis() is not None
 
 
+def test_num_chains_variant_plumbs_to_train_step(host_mesh, monkeypatch):
+    """The 'k2' VARIANTS bundle (and the build_cell kwarg) route
+    num_chains to the torrent grad reduction without touching the model
+    config — sweepable next to collectives=."""
+    from repro.launch.steps import VARIANTS
+
+    shape = SMOKE_SHAPES["train"]
+    monkeypatch.setitem(C.SHAPES, shape.name, shape)
+    assert VARIANTS["k2"] == {"num_chains": 2}
+    cell = build_cell(
+        "llama3-8b", shape.name, host_mesh, smoke=True,
+        collectives="torrent", variant="k2",
+    )
+    # num_chains is a step-builder knob, not a ModelConfig field
+    assert VARIANTS["k2"] == {"num_chains": 2}  # not mutated by the pop
+    assert cell.cfg == C.get_smoke_config("llama3-8b")
+    compiled = cell.lower().compile()
+    assert compiled.cost_analysis() is not None
+
+
 def test_applicability_matrix():
     runs = {(a, s) for a in C.ARCHS for s in SHAPES if applicable(a, s)[0]}
     # long_500k only for sub-quadratic archs

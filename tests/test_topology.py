@@ -114,3 +114,70 @@ def test_path_nodes_inclusive():
     nodes = topo.path_nodes(0, topo.node_id((2, 1)))
     assert nodes[0] == (0, 0) and nodes[-1] == (2, 1)
     assert len(nodes) == topo.distance(0, topo.node_id((2, 1))) + 1
+
+
+# ---------------------------------------------------------------------------
+# torus routing properties (previously only exercised indirectly)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    nx=st.integers(2, 8),
+    ny=st.integers(2, 8),
+    torus=st.booleans(),
+    data=st.data(),
+)
+def test_distance_is_symmetric(nx, ny, torus, data):
+    topo = MeshTopology(nx, ny, torus=torus)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    assert topo.distance(a, b) == topo.distance(b, a)
+    assert topo.distance(a, a) == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(nx=st.integers(2, 8), ny=st.integers(2, 8), data=st.data())
+def test_torus_xy_path_length_equals_distance(nx, ny, data):
+    topo = MeshTopology(nx, ny, torus=True)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    path = topo.xy_path(a, b)
+    assert len(path) == topo.distance(a, b)
+    # connected, endpoints right, every link wraps to an adjacent node
+    if path:
+        assert path[0][0] == topo.coord(a)
+        assert path[-1][1] == topo.coord(b)
+        for (s0, d0), (s1, _) in zip(path, path[1:]):
+            assert d0 == s1
+        for s, d in path:
+            dx = min((s[0] - d[0]) % nx, (d[0] - s[0]) % nx)
+            dy = min((s[1] - d[1]) % ny, (d[1] - s[1]) % ny)
+            assert dx + dy == 1
+
+
+@settings(max_examples=200, deadline=None)
+@given(nx=st.integers(2, 8), ny=st.integers(2, 8), data=st.data())
+def test_torus_paths_never_exceed_mesh_paths(nx, ny, data):
+    mesh = MeshTopology(nx, ny, torus=False)
+    torus = MeshTopology(nx, ny, torus=True)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    assert len(torus.xy_path(a, b)) <= len(mesh.xy_path(a, b))
+
+
+@settings(max_examples=120, deadline=None)
+@given(
+    nx=st.integers(2, 8),
+    ny=st.integers(2, 8),
+    torus=st.booleans(),
+    data=st.data(),
+)
+def test_path_nodes_endpoints_match(nx, ny, torus, data):
+    topo = MeshTopology(nx, ny, torus=torus)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    nodes = topo.path_nodes(a, b)
+    assert nodes[0] == topo.coord(a)
+    assert nodes[-1] == topo.coord(b)
+    assert len(nodes) == topo.distance(a, b) + 1
