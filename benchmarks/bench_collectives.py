@@ -8,10 +8,14 @@ meaningful for TPU — the *collective wire bytes* (trip-count-aware HLO
 parse) are the portable metric and must match the ring-algorithm
 prediction 2·(L-1)/L · payload per device.
 
-The ``num_chains`` knob is surfaced here too: multi-chain all-reduce
-(K=2/K=4 partitioned sub-rings, the hierarchical generalization) must
-match the rotation-schedule byte prediction (S+K-2 payloads/device),
-and multi-chain broadcast (K=2) is timed against the single chain.
+The ``num_chains``/``algo`` knobs are surfaced here too: multi-chain
+all-reduce (K=2/K=4 partitioned sub-rings, the hierarchical
+generalization) is emitted for BOTH schedules and byte-pinned —
+``rotation`` must match the (S+K-2)-payload/device prediction and
+``rs_ag`` (fused per-ring reduce-scatter/all-gather + cross-ring shard
+rotation) must match (2·(S-1)+(K-1))/S·payload and land strictly below
+its rotation twin; multi-chain broadcast (K=2) is timed against the
+single chain.
 """
 
 from __future__ import annotations
@@ -51,17 +55,20 @@ def chain_ar(x):
 def xla_ar(x):
     return jax.lax.psum(x[0], "x")[None]
 
-def multi2_ar(x):
-    return cw.multi_chain_all_reduce(x[0], "x", [(0,1,2,3), (4,5,6,7)])[None]
+RINGS = {2: [(0,1,2,3), (4,5,6,7)], 4: [(0,1), (2,3), (4,5), (6,7)]}
 
-def multi4_ar(x):
-    return cw.multi_chain_all_reduce(x[0], "x", [(0,1), (2,3), (4,5), (6,7)])[None]
+def multi_ar(k, algo):
+    def fn(x):
+        return cw.multi_chain_all_reduce(x[0], "x", RINGS[k], algo=algo)[None]
+    return fn
 
 results = {}
 for name, fn in [
     ("chain_all_reduce", chain_ar),
-    ("multi_chain_all_reduce_k2", multi2_ar),
-    ("multi_chain_all_reduce_k4", multi4_ar),
+    ("multi_chain_all_reduce_k2_rotation", multi_ar(2, "rotation")),
+    ("multi_chain_all_reduce_k2_rs_ag", multi_ar(2, "rs_ag")),
+    ("multi_chain_all_reduce_k4_rotation", multi_ar(4, "rotation")),
+    ("multi_chain_all_reduce_k4_rs_ag", multi_ar(4, "rs_ag")),
     ("xla_all_reduce", xla_ar),
 ]:
     sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
@@ -76,11 +83,18 @@ payload = N * 4
 ring_pred = 2 * (L - 1) / L * payload
 chain_bytes = results["chain_all_reduce"][1]
 assert 0.9 * ring_pred <= chain_bytes <= 1.35 * ring_pred, (chain_bytes, ring_pred)
-# Multi-chain trades wire bytes for chain length: K=2 over 8 devices is
-# (S-1)+(K-1) = 4 full-payload sends/device (rotation schedule).
-k2_pred = (L // 2 - 1 + 1) * payload
-k2_bytes = results["multi_chain_all_reduce_k2"][1]
-assert 0.9 * k2_pred <= k2_bytes <= 1.35 * k2_pred, (k2_bytes, k2_pred)
+# Rotation trades wire bytes for chain length: (S-1)+(K-1) full-payload
+# sends/device. RS+AG keeps the short rings but moves 1/S shards:
+# (2*(S-1)+(K-1))/S payloads/device — strictly below its rotation twin.
+for K in (2, 4):
+    S = L // K
+    rot_pred = (S + K - 2) * payload
+    rot_bytes = results[f"multi_chain_all_reduce_k{K}_rotation"][1]
+    assert 0.9 * rot_pred <= rot_bytes <= 1.35 * rot_pred, (K, rot_bytes, rot_pred)
+    rsag_pred = (2 * (S - 1) + (K - 1)) / S * payload
+    rsag_bytes = results[f"multi_chain_all_reduce_k{K}_rs_ag"][1]
+    assert 0.9 * rsag_pred <= rsag_bytes <= 1.35 * rsag_pred, (K, rsag_bytes, rsag_pred)
+    assert rsag_bytes < rot_bytes, (K, rsag_bytes, rot_bytes)
 
 # P2MP broadcast: single chain vs 2 partitioned chains (wire bytes drop
 # because the longest chain halves: 7 sequential hops -> 2x3+1 concurrent).

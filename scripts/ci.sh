@@ -4,6 +4,9 @@
 # suite; add BENCH=1 to also run the benchmark harness's assertions;
 # QUICK=1 skips the @pytest.mark.slow tests (exact-TSP and multidevice
 # oracle suites) for a fast inner loop — the default run keeps them.
+# QUICK=1 BENCH=1 keeps the fast lane honest about wire bytes: it runs
+# the self-contained bench_collectives subprocess (the chain/multi-ring
+# all-reduce byte-prediction assertions) instead of the full harness.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -17,5 +20,9 @@ else
 fi
 
 if [[ "${BENCH:-0}" == "1" ]]; then
-    python -m benchmarks.run
+    if [[ "${QUICK:-0}" == "1" ]]; then
+        python -m benchmarks.bench_collectives
+    else
+        python -m benchmarks.run
+    fi
 fi

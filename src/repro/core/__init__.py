@@ -10,6 +10,7 @@
 """
 
 from .chainwrite import (
+    ALL_REDUCE_ALGOS,
     chain_all_gather,
     chain_all_reduce,
     chain_all_to_all,
@@ -18,6 +19,7 @@ from .chainwrite import (
     chain_reduce_scatter,
     multi_chain_all_reduce,
     multi_chain_broadcast,
+    validate_ring_partition,
     xla_broadcast,
 )
 from .chaintask import (
@@ -43,6 +45,8 @@ from .scheduling import (
 from .simulator import (
     DEFAULT_PARAMS,
     SimParams,
+    all_reduce_latency,
+    all_reduce_wire_bytes,
     chainwrite_latency,
     choose_num_chains,
     config_overhead_per_destination,
@@ -56,6 +60,7 @@ from .simulator import (
 from .topology import MeshTopology
 
 __all__ = [
+    "ALL_REDUCE_ALGOS",
     "AffinePattern",
     "ChainConfig",
     "ChainTask",
@@ -64,6 +69,8 @@ __all__ = [
     "Phase",
     "SCHEDULERS",
     "SimParams",
+    "all_reduce_latency",
+    "all_reduce_wire_bytes",
     "brute_force_schedule",
     "chain_all_gather",
     "chain_all_reduce",
@@ -92,5 +99,6 @@ __all__ = [
     "tsp_schedule",
     "unicast_latency",
     "unicast_total_hops",
+    "validate_ring_partition",
     "xla_broadcast",
 ]

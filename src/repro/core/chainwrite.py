@@ -25,11 +25,14 @@ of ppermutes inside ``shard_map``:
   *scheduled* ring order (from ``core.scheduling``), replacing XLA's
   built-in all-gather/all-reduce ("network-layer multicast" analogue).
 * :func:`multi_chain_all_reduce` — all-reduce over K disjoint
-  equal-size sub-rings: rotation-reduce within every ring concurrently
-  (fused edges), then rotation across rings; the generalization whose
-  K=2 case is hierarchical (within-pod then cross-pod) all-reduce.
-  Latency-optimal for short payloads (max(S,K)-length chains instead
-  of one L-ring); bandwidth-heavier than reduce-scatter+all-gather.
+  equal-size sub-rings; the generalization whose K=2 case is
+  hierarchical (within-pod then cross-pod) all-reduce. Two schedules:
+  ``algo="rs_ag"`` (default) runs a fused per-ring reduce-scatter,
+  rotates the 1/S-payload *shards* across rings, then a fused per-ring
+  all-gather — ≈ (2·(S-1)+(K-1))/S payloads of wire per device, the
+  bandwidth-optimal family; ``algo="rotation"`` keeps the short
+  (S+K-2)-step full-payload rotation schedule, latency-optimal for
+  tiny payloads where per-step overhead dominates.
 * :func:`chain_all_to_all` — MoE dispatch as a rotating chain.
 
 All functions must be called inside ``shard_map`` with a manual axis.
@@ -49,6 +52,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from .chainwrite_ref import ALL_REDUCE_ALGOS  # canonical algo names
 
 Axis = str | tuple[str, ...]
 
@@ -451,43 +456,85 @@ def chain_all_reduce(
     return full[:lead] if pad else full
 
 
+def validate_ring_partition(
+    axis_size: int, orders: Sequence[Sequence[int]]
+) -> list[tuple[int, ...]]:
+    """Clean + validate K disjoint equal-size sub-rings covering the
+    whole axis. Pure host-side helper (no axis context needed) shared
+    by :func:`multi_chain_all_reduce` and the property tests."""
+    clean = [tuple(int(o) for o in c) for c in orders if len(c)]
+    if not clean:
+        raise ValueError("empty ring set")
+    S = len(clean[0])
+    if any(len(c) != S for c in clean):
+        raise ValueError("sub-rings must have equal sizes")
+    flat = [d for c in clean for d in c]
+    if sorted(flat) != list(range(axis_size)):
+        raise ValueError("sub-rings must partition the whole axis")
+    return clean
+
+
+def _cross_ring_edges(orders: Sequence[tuple[int, ...]]) -> list[tuple[int, int]]:
+    """Rotation edges across rings: local position r of ring c -> local
+    position r of ring (c+1) % K — one fused ppermute per step."""
+    K, S = len(orders), len(orders[0])
+    return [
+        (orders[c][r], orders[(c + 1) % K][r])
+        for c in range(K)
+        for r in range(S)
+    ]
+
+
 def multi_chain_all_reduce(
     x: jax.Array,
     axis_name: Axis,
     orders: Sequence[Sequence[int]],
+    *,
+    algo: str = "rs_ag",
 ) -> jax.Array:
     """All-reduce over K disjoint equal-size sub-rings of the axis.
 
-    Stage 1 rotation-reduces within every sub-ring concurrently (the K
-    rings' edges are disjoint, so each of the S-1 steps is ONE fused
-    ppermute); stage 2 rotation-reduces across rings (device at local
-    position r of ring c exchanges with position r of ring c+1 — again
-    one fused ppermute per step, K-1 steps). Hierarchical (within-pod
-    then cross-pod) all-reduce is exactly the K=#pods special case of
-    this schedule on the flattened DP axis.
+    ``algo="rs_ag"`` (default — bandwidth-optimal family): stage 1 is a
+    fused per-ring reduce-scatter (S-1 steps; the K rings' edges are
+    disjoint, so every step is ONE ppermute carrying 1/S-payload
+    shards), stage 2 rotation-reduces the reduced *shards* across rings
+    (K-1 steps, still 1/S payload: position r of ring c exchanges with
+    position r of ring c+1), stage 3 is the fused per-ring all-gather
+    (S-1 steps). Wire bytes per device ≈ (2·(S-1)+(K-1))/S · payload —
+    at K=1 exactly ``chain_all_reduce``'s bandwidth-optimal
+    2·(L-1)/L — while the per-ring chain length stays S, keeping the
+    multi-chain latency win.
 
-    Chain lengths drop from L-1 to max(S-1, K-1) — the latency win the
-    multi-chain simulator model predicts — at (S+K-2) full-payload
-    sends per device instead of reduce-scatter+all-gather's 2(L-1)/L;
-    prefer :func:`chain_all_reduce` when bandwidth-bound.
+    ``algo="rotation"`` keeps PR 1's schedule: S-1 full-payload
+    rotations within rings then K-1 across — fewer steps (S+K-2 vs
+    2·(S-1)+(K-1)) but (S+K-2) full payloads of wire per device;
+    preferable only when per-step overhead dominates (tiny payloads).
+    ``core.simulator.all_reduce_latency`` models both and
+    ``choose_num_chains(collective="all_reduce")`` picks K/algo-aware.
+
+    Hierarchical (within-pod then cross-pod) all-reduce is exactly the
+    K=#pods special case of either schedule on the flattened DP axis.
 
     ``orders``: K disjoint rings of equal size covering the whole axis
     (e.g. contiguous slices of ``ring_order_for_axis``). K=1 delegates
-    to :func:`chain_all_reduce`.
+    to :func:`chain_all_reduce` (reduce-scatter + all-gather) for
+    either ``algo``.
     """
-    L = _axis_size(axis_name)
-    orders = [tuple(int(o) for o in c) for c in orders if len(c)]
-    if not orders:
-        raise ValueError("empty ring set")
+    if algo not in ALL_REDUCE_ALGOS:
+        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
+    orders = validate_ring_partition(_axis_size(axis_name), orders)
     if len(orders) == 1:
         return chain_all_reduce(x, axis_name, orders[0])
-    K = len(orders)
-    S = len(orders[0])
-    if any(len(c) != S for c in orders):
-        raise ValueError("sub-rings must have equal sizes")
-    flat = [d for c in orders for d in c]
-    if sorted(flat) != list(range(L)):
-        raise ValueError("sub-rings must partition the whole axis")
+    if algo == "rotation":
+        return _multi_ring_rotation(x, axis_name, orders)
+    return _multi_ring_rs_ag(x, axis_name, orders)
+
+
+def _multi_ring_rotation(
+    x: jax.Array, axis_name: Axis, orders: list[tuple[int, ...]]
+) -> jax.Array:
+    """PR 1 rotation schedule: full-payload rotations, S+K-2 steps."""
+    K, S = len(orders), len(orders[0])
 
     # Stage 1 — within-ring rotation all-reduce (fused across rings).
     intra = [e for c in orders for e in chain_edges(c, wrap=True)]
@@ -497,19 +544,73 @@ def multi_chain_all_reduce(
         buf = _ppermute(buf, axis_name, intra)
         acc = acc + buf
 
-    # Stage 2 — across-ring rotation: local position r of ring c ->
-    # local position r of ring (c+1) % K.
-    cross = [
-        (orders[c][r], orders[(c + 1) % K][r])
-        for c in range(K)
-        for r in range(S)
-    ]
+    # Stage 2 — across-ring rotation of the ring partials.
+    cross = _cross_ring_edges(orders)
     buf = acc
     out = acc
     for _ in range(K - 1):
         buf = _ppermute(buf, axis_name, cross)
         out = out + buf
     return out
+
+
+def _multi_ring_rs_ag(
+    x: jax.Array, axis_name: Axis, orders: list[tuple[int, ...]]
+) -> jax.Array:
+    """Fused per-ring reduce-scatter -> cross-ring shard rotation ->
+    fused per-ring all-gather. Shards are addressed by *ring position*
+    (shard j of the payload ends, fully reduced, at local position j of
+    every ring), so the cross-ring exchange at position r always pairs
+    partials of the same shard."""
+    K, S = len(orders), len(orders[0])
+    idx = _axis_index(axis_name)
+
+    # Static ring position of every device (each appears in exactly one
+    # ring — validated by the caller).
+    pos_np = [0] * (K * S)
+    for c in orders:
+        for p, d in enumerate(c):
+            pos_np[d] = p
+    pos = jnp.asarray(pos_np)[idx]
+
+    lead = x.shape[0]
+    pad = (-lead) % S
+    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+    shards = xp.reshape((S, xp.shape[0] // S) + x.shape[1:])
+
+    intra = [e for c in orders for e in chain_edges(c, wrap=True)]
+
+    # Stage 1 — fused per-ring reduce-scatter: the partial for position
+    # j starts one hop downstream (position j+1, holding its local
+    # shard) and travels S-1 hops, accumulating every ring member's
+    # contribution; 1/S payload per step.
+    buf = lax.dynamic_index_in_dim(shards, (pos - 1) % S, axis=0, keepdims=False)
+    for s in range(1, S):
+        buf = _ppermute(buf, axis_name, intra)
+        j = (pos - s - 1) % S
+        buf = buf + lax.dynamic_index_in_dim(shards, j, axis=0, keepdims=False)
+
+    # Stage 2 — rotate the ring-reduced shards across rings (K-1 steps,
+    # still 1/S payload — the bandwidth collapse vs full-payload
+    # rotation). Each device forwards the partial it received while
+    # accumulating: after K-1 steps position r holds the global sum of
+    # shard r.
+    cross = _cross_ring_edges(orders)
+    acc = buf
+    for _ in range(K - 1):
+        buf = _ppermute(buf, axis_name, cross)
+        acc = acc + buf
+
+    # Stage 3 — fused per-ring all-gather of the S reduced shards.
+    out = jnp.zeros_like(shards)
+    out = lax.dynamic_update_index_in_dim(out, acc, pos, axis=0)
+    buf = acc
+    for s in range(1, S):
+        buf = _ppermute(buf, axis_name, intra)
+        src = (pos - s) % S
+        out = lax.dynamic_update_index_in_dim(out, buf, src, axis=0)
+    full = out.reshape((S * shards.shape[1],) + x.shape[1:])
+    return full[:lead] if pad else full
 
 
 def chain_all_to_all(

@@ -12,6 +12,11 @@ from typing import Sequence
 
 import numpy as np
 
+# Canonical multi-ring all-reduce schedule names. Defined here (the
+# dependency-light numpy module) so the SPMD layer, the simulator and
+# the CLI all validate against ONE tuple.
+ALL_REDUCE_ALGOS = ("rs_ag", "rotation")
+
 
 def broadcast_ref(
     xs: np.ndarray, order: Sequence[int]
@@ -80,3 +85,165 @@ def all_to_all_ref(xs: np.ndarray) -> np.ndarray:
     """xs: (L, L, chunk...) — xs[s][d] is the chunk device s sends to
     device d. Device d ends with out[s] = xs[s][d] (transpose)."""
     return np.swapaxes(xs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-simulating multi-ring all-reduce oracles
+# ---------------------------------------------------------------------------
+#
+# ``all_reduce_ref`` defines the *semantics* (sum everywhere); the
+# oracles below additionally replay the exact per-step permute/add
+# order of ``chainwrite.multi_chain_all_reduce``'s two schedules, so
+# tests can pin the SPMD collectives BIT-exactly (float addition is not
+# associative — value equality up to reassociation would hide
+# scheduling bugs).
+
+
+def _permute(bufs: np.ndarray, edges) -> np.ndarray:
+    """Numpy twin of ``lax.ppermute``: dst receives src's buffer;
+    devices no edge targets receive zeros."""
+    out = np.zeros_like(bufs)
+    for src, dst in edges:
+        out[dst] = bufs[src]
+    return out
+
+
+def _ring_maps(orders):
+    """(intra_edges, cross_edges, pos) for K equal-size rings."""
+    orders = [tuple(int(d) for d in c) for c in orders]
+    K, S = len(orders), len(orders[0])
+    L = K * S
+    intra = [
+        (c[p], c[(p + 1) % S]) for c in orders for p in range(S)
+    ] if S > 1 else []
+    cross = [
+        (orders[c][r], orders[(c + 1) % K][r])
+        for c in range(K)
+        for r in range(S)
+    ]
+    pos = np.zeros(L, dtype=int)
+    for c in orders:
+        for p, d in enumerate(c):
+            pos[d] = p
+    return intra, cross, pos
+
+
+def multi_all_reduce_ref(
+    xs: np.ndarray, orders, algo: str = "rs_ag"
+) -> np.ndarray:
+    """Oracle for ``multi_chain_all_reduce``: replays the schedule
+    step-for-step (same permutes, same left-folded additions) so the
+    SPMD result matches bit-exactly. ``xs`` is the (L, n, ...) global
+    view. K=1 delegates — like the SPMD implementation — to the
+    single-ring reduce-scatter + all-gather for either ``algo``.
+    """
+    orders = [tuple(int(d) for d in c) for c in orders if len(c)]
+    if not orders:
+        raise ValueError("empty ring set")
+    if algo not in ALL_REDUCE_ALGOS:
+        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
+    if len(orders) == 1:
+        return _chain_rs_ag_ref(xs, orders[0])
+    if algo == "rotation":
+        return _multi_rotation_ref(xs, orders)
+    return _multi_rs_ag_ref(xs, orders)
+
+
+def _chain_rs_ag_ref(xs: np.ndarray, order) -> np.ndarray:
+    """Replays ``chain_all_reduce`` (single-ring reduce-scatter +
+    all-gather) exactly: chunks are addressed by *device id* — the K=1
+    delegation path of ``multi_chain_all_reduce`` — which for scheduled
+    (non-identity) ring orders folds each chunk's additions along a
+    different ring segment than position addressing would."""
+    order = tuple(int(d) for d in order)
+    L = xs.shape[0]
+    lead = xs.shape[1]
+    padw = (-lead) % L
+    xp = (
+        np.pad(xs, [(0, 0), (0, padw)] + [(0, 0)] * (xs.ndim - 2))
+        if padw
+        else xs
+    )
+    m = xp.shape[1] // L
+    chunks = xp.reshape((L, L, m) + xs.shape[2:])
+    pos = np.zeros(L, dtype=int)
+    for p, d in enumerate(order):
+        pos[d] = p
+    edges = list(zip(order, order[1:])) + (
+        [(order[-1], order[0])] if L > 1 else []
+    )
+
+    buf = np.stack([chunks[d][order[(pos[d] - 1) % L]] for d in range(L)])
+    for s in range(1, L):
+        buf = _permute(buf, edges)
+        buf = buf + np.stack(
+            [chunks[d][order[(pos[d] - s - 1) % L]] for d in range(L)]
+        )
+
+    out = np.zeros_like(chunks)
+    for d in range(L):
+        out[d][d] = buf[d]
+    gbuf = buf.copy()
+    for s in range(1, L):
+        gbuf = _permute(gbuf, edges)
+        for d in range(L):
+            out[d][order[(pos[d] - s) % L]] = gbuf[d]
+    full = out.reshape((L, L * m) + xs.shape[2:])
+    return full[:, :lead] if padw else full
+
+
+def _multi_rotation_ref(xs: np.ndarray, orders) -> np.ndarray:
+    K, S = len(orders), len(orders[0])
+    intra, cross, _ = _ring_maps(orders)
+    acc = xs.copy()
+    buf = xs.copy()
+    for _ in range(S - 1):
+        buf = _permute(buf, intra)
+        acc = acc + buf
+    out = acc.copy()
+    buf = acc.copy()
+    for _ in range(K - 1):
+        buf = _permute(buf, cross)
+        out = out + buf
+    return out
+
+
+def _multi_rs_ag_ref(xs: np.ndarray, orders) -> np.ndarray:
+    """RS -> cross-ring shard rotation -> AG, shards addressed by ring
+    position. With K=1 this replays ``chain_all_reduce``'s single-ring
+    reduce-scatter + all-gather add order exactly (the K=1 delegation
+    path), since both accumulate each shard along the ring traversal."""
+    L = xs.shape[0]
+    K, S = len(orders), len(orders[0])
+    intra, cross, pos = _ring_maps(orders)
+    lead = xs.shape[1]
+    padw = (-lead) % S
+    xp = (
+        np.pad(xs, [(0, 0), (0, padw)] + [(0, 0)] * (xs.ndim - 2))
+        if padw
+        else xs
+    )
+    m = xp.shape[1] // S
+    shards = xp.reshape((L, S, m) + xs.shape[2:])
+
+    buf = np.stack([shards[d][(pos[d] - 1) % S] for d in range(L)])
+    for s in range(1, S):
+        buf = _permute(buf, intra)
+        buf = buf + np.stack(
+            [shards[d][(pos[d] - s - 1) % S] for d in range(L)]
+        )
+    acc = buf.copy()
+    for _ in range(K - 1):
+        buf = _permute(buf, cross)
+        acc = acc + buf
+
+    out = np.zeros_like(shards)
+    for d in range(L):
+        out[d][pos[d]] = acc[d]
+    buf = acc.copy()
+    for s in range(1, S):
+        buf = _permute(buf, intra)
+        for d in range(L):
+            out[d][(pos[d] - s) % S] = buf[d]
+    full = out.reshape((L, S * m) + xs.shape[2:])
+    return full[:, :lead] if padw else full

@@ -19,6 +19,13 @@ same three P2MP mechanisms on the same NoC (2-D mesh, XY routing,
   cfg-inject port; completion = max over chains. Reduces exactly to
   ``chainwrite_latency`` at K=1. ``choose_num_chains`` picks K by
   argmin of this model.
+* ``all_reduce_latency`` — algo-aware model of the K-sub-ring
+  all-reduce schedules (``multi_chain_all_reduce``): the same
+  staggered-cfg/grant/finish machinery with a data phase built from
+  the schedule's sequential rotation steps — full payloads for
+  ``rotation``, 1/S shards for ``rs_ag`` — so
+  ``choose_num_chains(collective="all_reduce")`` picks K from modeled
+  bytes *and* cycles.
 * ``chain_recovery_latency`` — failure/recovery extension: one chain
   member dies, the initiator times out (``fail_timeout_cc``), re-forms
   the orphaned suffix (``scheduling.reform_chain``) and re-dispatches
@@ -39,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+from .chainwrite_ref import ALL_REDUCE_ALGOS
 from .scheduling import (
     SCHEDULERS,
     chain_total_hops,
@@ -148,6 +156,26 @@ def _effective_bw(p: SimParams, streams: int) -> int:
     return max(1, min(p.link_bw, p.src_read_bw // streams))
 
 
+def _cfg_phase(
+    topo: MeshTopology,
+    src: int,
+    order: Sequence[int],
+    p: SimParams,
+    injected: int,
+) -> int:
+    """Cfg-dispatch phase shared by every chain-shaped schedule: the
+    initiator serializes ``injected`` cfg packets through its single
+    cfg-inject port; packets race to members in parallel; the chain is
+    ready when the farthest member has decoded its cfg."""
+    far = max(topo.distance(src, d) for d in order)
+    return (
+        p.dma_setup_cc
+        + injected * p.cfg_inject_cc
+        + far * p.router_cc
+        + p.cfg_proc_cc
+    )
+
+
 def _chain_phases(
     topo: MeshTopology,
     src: int,
@@ -178,13 +206,7 @@ def _chain_phases(
     """
     n = len(order)
     chain_hops = chain_total_hops(topo, order, head)
-    far = max(topo.distance(src, d) for d in order)
-    cfg = (
-        p.dma_setup_cc
-        + injected * p.cfg_inject_cc
-        + far * p.router_cc
-        + p.cfg_proc_cc
-    )
+    cfg = _cfg_phase(topo, src, order, p, injected)
     grant = chain_hops * p.router_cc + n * p.grant_fwd_cc
     data = (
         chain_hops * p.router_cc
@@ -352,6 +374,151 @@ def chain_recovery_latency(
     return total
 
 
+def all_reduce_wire_bytes(
+    ring_size: int, num_chains: int, size_bytes: int, algo: str = "rs_ag"
+) -> int:
+    """Per-device wire bytes of the K-sub-ring all-reduce schedules
+    (``chainwrite.multi_chain_all_reduce``): S = ``ring_size`` members
+    per ring, K = ``num_chains`` rings.
+
+    * ``rs_ag``:    (2·(S-1) + (K-1)) shard-sized frames, shard =
+      ceil(payload / S) — ≈ (2·(S-1)+(K-1))/S · payload, the
+      bandwidth-optimal family (K=1 gives 2·(L-1)/L exactly).
+    * ``rotation``: (S + K - 2) full payloads.
+
+    K=1 always delegates to the single-ring reduce-scatter +
+    all-gather, so the ``rs_ag`` formula applies for either ``algo``.
+    """
+    if algo not in ALL_REDUCE_ALGOS:
+        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
+    S, K = int(ring_size), int(num_chains)
+    if S < 1 or K < 1:
+        raise ValueError("ring_size and num_chains must be >= 1")
+    if K == 1 or algo == "rs_ag":
+        return (2 * (S - 1) + (K - 1)) * _ceil_div(size_bytes, S)
+    return (S + K - 2) * size_bytes
+
+
+def _ring_hops(topo: MeshTopology, order: Sequence[int]) -> int:
+    """Total hop count around the closed ring (incl. the wrap link)."""
+    if len(order) <= 1:
+        return 0
+    loop = list(order) + [order[0]]
+    return sum(topo.distance(a, b) for a, b in zip(loop, loop[1:]))
+
+
+def _max_edge_hops(topo: MeshTopology, edges) -> int:
+    """Per-step cost of one fused rotation: the step completes when its
+    slowest edge lands."""
+    return max((topo.distance(a, b) for a, b in edges), default=0)
+
+
+def all_reduce_latency(
+    topo: MeshTopology,
+    src: int,
+    orders: Sequence[Sequence[int]],
+    size_bytes: int,
+    p: SimParams = DEFAULT_PARAMS,
+    *,
+    algo: str = "rs_ag",
+    detail: bool = False,
+) -> int | dict[str, object]:
+    """Analytical latency of the K-sub-ring all-reduce schedules.
+
+    Mirrors ``multi_chain_latency``'s four-phase structure — the same
+    cfg-port serialization (the initiator injects one cfg per ring
+    member, later rings start after earlier rings' cfgs) and the same
+    per-chain grant/finish forwarding — but with an algo-aware data
+    phase built from the schedule's sequential rotation steps:
+
+    * ``rotation``:  (S-1) intra + (K-1) cross steps, each a
+      full-payload fused ppermute;
+    * ``rs_ag``:     2·(S-1) intra + (K-1) cross steps at shard size
+      ceil(payload/S) — more steps, S× fewer bytes per step.
+
+    Every step costs its slowest edge's router hops + one
+    store-and-forward fill + frame_bytes / effective bandwidth
+    (``_effective_bw``; each device drives one outgoing stream at a
+    time, so ``streams=1``). Completion = max over rings of the
+    staggered-cfg four-phase sum. K=1 reduces — CC-exactly, for either
+    ``algo`` — to the single-ring reduce-scatter + all-gather model,
+    mirroring ``multi_chain_all_reduce``'s K=1 delegation.
+
+    With ``detail=True`` returns ``{"total", "per_chain", "per_phase",
+    "algo", "wire_bytes"}``.
+    """
+    if algo not in ALL_REDUCE_ALGOS:
+        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
+    orders = [list(c) for c in orders if len(c)]
+    if not orders:
+        return (
+            {"total": 0, "per_chain": [], "per_phase": [],
+             "algo": algo, "wire_bytes": 0}
+            if detail
+            else 0
+        )
+    K = len(orders)
+    S = len(orders[0])
+    if any(len(c) != S for c in orders):
+        raise ValueError("sub-rings must have equal sizes")
+    if K == 1:
+        algo = "rs_ag"  # the K=1 delegation path: single-ring RS+AG
+
+    intra_edges = [
+        e
+        for c in orders
+        for e in zip(list(c) + [c[0]], (list(c) + [c[0]])[1:])
+    ] if S > 1 else []
+    cross_edges = (
+        [
+            (orders[c][r], orders[(c + 1) % K][r])
+            for c in range(K)
+            for r in range(S)
+        ]
+        if K > 1
+        else []
+    )
+    intra_hop = _max_edge_hops(topo, intra_edges)
+    cross_hop = _max_edge_hops(topo, cross_edges)
+    if algo == "rs_ag":
+        frame = _ceil_div(size_bytes, S)
+        intra_steps = 2 * (S - 1)
+    else:
+        frame = size_bytes
+        intra_steps = S - 1
+    cross_steps = K - 1
+    bw = _effective_bw(p, 1)  # one outgoing stream per device per step
+    step_payload_cc = _ceil_div(frame, bw)
+    data = intra_steps * (
+        intra_hop * p.router_cc + p.sf_fill_cc + step_payload_cc
+    ) + cross_steps * (
+        cross_hop * p.router_cc + p.sf_fill_cc + step_payload_cc
+    )
+
+    per_chain: list[int] = []
+    per_phase: list[tuple[int, int, int, int]] = []
+    injected = 0
+    for order in orders:
+        injected += len(order)
+        cfg = _cfg_phase(topo, src, order, p, injected)
+        hops = _ring_hops(topo, order)
+        grant = hops * p.router_cc + S * p.grant_fwd_cc
+        finish = hops * p.router_cc + S * p.finish_fwd_cc
+        per_phase.append((cfg, grant, data, finish))
+        per_chain.append(cfg + grant + data + finish)
+
+    total = max(per_chain)
+    if detail:
+        return {
+            "total": total,
+            "per_chain": per_chain,
+            "per_phase": per_phase,
+            "algo": algo,
+            "wire_bytes": all_reduce_wire_bytes(S, K, size_bytes, algo),
+        }
+    return total
+
+
 def choose_num_chains(
     topo: MeshTopology,
     src: int,
@@ -361,24 +528,59 @@ def choose_num_chains(
     max_chains: int = 4,
     scheduler: str = "tsp",
     p: SimParams = DEFAULT_PARAMS,
+    collective: str = "broadcast",
+    algo: str = "rs_ag",
 ) -> tuple[int, list[list[int]]]:
-    """Pick K (1..max_chains) minimizing the calibrated multi-chain
-    latency; ties go to fewer chains. Returns ``(k, chains)``.
+    """Pick K (1..max_chains) minimizing the calibrated model; ties go
+    to fewer chains. Returns ``(k, chains)``.
 
-    Because K=1 is always a candidate and ``partition_schedule`` with
-    ``num_chains=1`` reproduces the single-chain schedule exactly, the
-    returned partition's latency never exceeds the K=1 schedule's.
+    ``collective="broadcast"`` (default) partitions ``dsts`` into K
+    sub-chains scored by ``multi_chain_latency`` (PR 1 behaviour;
+    ``algo`` is ignored). Because K=1 is always a candidate and
+    ``partition_schedule`` with ``num_chains=1`` reproduces the
+    single-chain schedule exactly, the returned partition's latency
+    never exceeds the K=1 schedule's.
+
+    ``collective="all_reduce"`` schedules the closed ring
+    ``src -> dsts`` (the same snake construction as
+    ``parallel.collectives.ring_order_for_axis``), splits it into every
+    K ≤ max_chains that divides the group size, and scores the
+    candidate sub-ring sets with :func:`all_reduce_latency` for the
+    given ``algo`` — so K is chosen from modeled *bytes and cycles*
+    rather than the broadcast-only model. Returns the winning
+    ``(k, sub_rings)``; K=1 is always a candidate, so the result never
+    models worse than the single ring.
     """
     dsts = list(dict.fromkeys(dsts))
+    if collective == "broadcast":
+        if not dsts:
+            return 1, []
+        chains = partition_schedule(
+            topo, dsts, src,
+            scheduler=scheduler,
+            max_chains=max_chains,
+            cost_fn=lambda cs: multi_chain_latency(topo, src, cs, size_bytes, p),
+        )
+        return len(chains), chains
+    if collective != "all_reduce":
+        raise ValueError(f"unknown collective {collective!r}")
+
     if not dsts:
-        return 1, []
-    chains = partition_schedule(
-        topo, dsts, src,
-        scheduler=scheduler,
-        max_chains=max_chains,
-        cost_fn=lambda cs: multi_chain_latency(topo, src, cs, size_bytes, p),
-    )
-    return len(chains), chains
+        return 1, [[int(src)]]
+    ring = [int(src)] + [int(d) for d in SCHEDULERS[scheduler](topo, dsts, src)]
+    n = len(ring)
+    best: tuple[int, int, list[list[int]]] | None = None
+    for k in range(1, max_chains + 1):
+        if n % k:
+            continue
+        size = n // k
+        rings = [ring[i * size : (i + 1) * size] for i in range(k)]
+        lat = all_reduce_latency(topo, src, rings, size_bytes, p, algo=algo)
+        assert isinstance(lat, int)
+        if best is None or lat < best[0]:
+            best = (lat, k, rings)
+    assert best is not None  # k=1 always divides
+    return best[1], best[2]
 
 
 # ---------------------------------------------------------------------------

@@ -32,7 +32,8 @@ import traceback
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              collectives: str = "xla", remat: str = "dots",
-             variant: str = "baseline", num_chains: int = 1) -> dict:
+             variant: str = "baseline", num_chains: int | str = 1,
+             ar_algo: str = "rs_ag") -> dict:
     import jax
 
     from repro import configs as C
@@ -44,7 +45,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     rec: dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "collectives": collectives, "remat": remat, "variant": variant,
-        "num_chains": num_chains,
+        "num_chains": num_chains, "ar_algo": ar_algo,
     }
     if not ok:
         rec.update(status="skipped", reason=reason)
@@ -53,8 +54,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     cell = build_cell(arch, shape_name, mesh, collectives=collectives,
-                      num_chains=num_chains, remat=remat, variant=variant)
+                      num_chains=num_chains, ar_algo=ar_algo,
+                      remat=remat, variant=variant)
     rec["num_chains"] = cell.num_chains  # effective K (VARIANTS resolved)
+    rec["ar_algo"] = cell.ar_algo
     lowered = cell.lower()
     t1 = time.time()
     compiled = lowered.compile()
@@ -133,10 +136,18 @@ def main() -> None:
     p.add_argument("--remat", default="dots")
     p.add_argument("--variant", default="baseline",
                    help="optimization bundle from steps.VARIANTS")
-    p.add_argument("--num-chains", type=int, default=1,
+    p.add_argument("--num-chains", type=_parse_num_chains, default=1,
                    help="multi-chain Chainwrite sub-rings per DP "
-                        "reduction (with --collectives torrent); "
-                        "sweepable next to --collectives")
+                        "reduction (with --collectives torrent), or "
+                        "'auto' to pick K from the all_reduce_latency "
+                        "model; sweepable next to --collectives")
+    from repro.core.chainwrite_ref import ALL_REDUCE_ALGOS  # numpy-only
+
+    p.add_argument("--ar-algo", choices=ALL_REDUCE_ALGOS,
+                   default="rs_ag",
+                   help="multi-ring all-reduce schedule: fused "
+                        "reduce-scatter/all-gather (bandwidth-optimal "
+                        "default) or full-payload rotation")
     p.add_argument("--out", default="experiments/dryrun")
     p.add_argument("--all", action="store_true")
     p.add_argument("--meshes", default="single,multi")
@@ -169,6 +180,7 @@ def main() -> None:
             args.arch, args.shape, args.mesh, out_dir,
             collectives=args.collectives, remat=args.remat,
             variant=args.variant, num_chains=args.num_chains,
+            ar_algo=args.ar_algo,
         )
     except Exception:
         rec = {
@@ -190,6 +202,16 @@ def main() -> None:
         print(f"{args.arch} × {args.shape} × {args.mesh}: {rec['status']} ({rec.get('reason','')})")
 
 
+def _parse_num_chains(value: str):
+    """CLI type for --num-chains: a positive int or the literal 'auto'."""
+    if value == "auto":
+        return "auto"
+    k = int(value)
+    if k < 1:
+        raise argparse.ArgumentTypeError("num-chains must be >= 1 or 'auto'")
+    return k
+
+
 def _cell_suffix(args) -> str:
     """Output-file suffix encoding every non-default cell knob — shared
     by the single-cell writer and the --all cache check so sweeps over
@@ -197,6 +219,8 @@ def _cell_suffix(args) -> str:
     suffix = "" if args.collectives == "xla" else f"__{args.collectives}"
     if args.num_chains != 1:
         suffix += f"__k{args.num_chains}"
+    if args.ar_algo != "rs_ag":
+        suffix += f"__{args.ar_algo}"
     if args.variant != "baseline":
         suffix += f"__{args.variant}"
     if args.remat != "dots":
@@ -216,8 +240,8 @@ def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
         sys.executable, "-m", "repro.launch.dryrun",
         "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
         "--collectives", args.collectives, "--remat", args.remat,
-        "--num-chains", str(args.num_chains), "--variant", args.variant,
-        "--out", args.out,
+        "--num-chains", str(args.num_chains), "--ar-algo", args.ar_algo,
+        "--variant", args.variant, "--out", args.out,
     ]
     print("::", " ".join(cmd[3:]), flush=True)
     try:

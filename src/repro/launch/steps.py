@@ -40,7 +40,8 @@ class Cell:
     in_shardings: tuple
     out_shardings: Any
     donate_argnums: tuple[int, ...] = ()
-    num_chains: int = 1  # effective K after VARIANTS resolution
+    num_chains: int | str = 1  # effective K after VARIANTS resolution ("auto" = model-picked)
+    ar_algo: str = "rs_ag"  # multi-ring all-reduce schedule (rs_ag | rotation)
 
     def lower(self):
         jitted = jax.jit(
@@ -86,7 +87,8 @@ def make_train_step(
     *,
     remat: str = "dots",
     collectives: str = "xla",
-    num_chains: int = 1,
+    num_chains: int | str = 1,
+    ar_algo: str = "rs_ag",
     mesh=None,
     batch_specs=None,
     loss_chunks: int = 8,
@@ -101,9 +103,13 @@ def make_train_step(
 
     ``num_chains`` (with ``collectives="torrent"``) selects the
     multi-chain Chainwrite gradient reduction: K concurrent sub-rings
-    per DP reduction (``parallel.collectives.torrent_grad_reduce``).
-    Sweepable next to ``collectives=`` from the dry-run CLI
-    (``--num-chains``) and via ``VARIANTS`` bundles.
+    per DP reduction (``parallel.collectives.torrent_grad_reduce``);
+    ``"auto"`` picks K per gradient leaf from the calibrated
+    ``all_reduce_latency`` model. ``ar_algo`` selects the multi-ring
+    schedule (``"rs_ag"`` fused reduce-scatter/all-gather, the
+    bandwidth-optimal default, or ``"rotation"``). Both are sweepable
+    next to ``collectives=`` from the dry-run CLI (``--num-chains``,
+    ``--ar-algo``) and via ``VARIANTS`` bundles.
     """
 
     def grad_fn_local(params, batch):
@@ -116,7 +122,8 @@ def make_train_step(
     def grad_fn(params, batch):
         if collectives == "torrent":
             return torrent_grad_reduce(
-                grad_fn_local, mesh, batch_specs, num_chains=num_chains
+                grad_fn_local, mesh, batch_specs,
+                num_chains=num_chains, algo=ar_algo,
             )(params, batch)
         return grad_fn_local(params, batch)
 
@@ -169,14 +176,20 @@ def make_serve_step(cfg: ModelConfig):
 
 # Named optimization bundles for the §Perf hillclimb. "baseline" is the
 # paper-faithful configuration; each variant is one recorded change.
-# Entries are ModelConfig field overrides, except the step-builder knob
-# "num_chains" (popped by build_cell and routed to make_train_step) so
-# the multi-chain Chainwrite reduction sweeps next to ``collectives=``.
+# Entries are ModelConfig field overrides, except the step-builder
+# knobs "num_chains" and "ar_algo" (popped by build_cell and routed to
+# make_train_step) so the multi-chain Chainwrite reduction sweeps next
+# to ``collectives=``.
 VARIANTS: dict[str, dict] = {
     "baseline": {},
-    # multi-chain Chainwrite DP reduction (K=2 concurrent sub-rings);
-    # only meaningful with collectives="torrent".
+    # multi-chain Chainwrite DP reduction (K=2 concurrent sub-rings,
+    # fused RS+AG schedule); only meaningful with collectives="torrent".
     "k2": {"num_chains": 2},
+    # K=2 with PR 1's full-payload rotation schedule — the regression
+    # twin that keeps the (S+K-2)-payload wire behaviour sweepable.
+    "k2-rot": {"num_chains": 2, "ar_algo": "rotation"},
+    # model-driven K: all_reduce_latency picks per gradient leaf.
+    "k-auto": {"num_chains": "auto"},
     # chunked online-softmax attention (flash twin) — kills the S²
     # score materialization that dominates every memory term.
     "chunked": {"attn_impl": "chunked"},
@@ -201,7 +214,8 @@ def build_cell(
     mesh: jax.sharding.Mesh,
     *,
     collectives: str = "xla",
-    num_chains: int = 1,
+    num_chains: int | str = 1,
+    ar_algo: str = "rs_ag",
     remat: str = "dots",
     smoke: bool = False,
     variant: str = "baseline",
@@ -216,6 +230,14 @@ def build_cell(
                 f"num_chains={num_chains} was passed explicitly"
             )
         num_chains = variant_k
+    variant_algo = overrides.pop("ar_algo", None)
+    if variant_algo is not None:
+        if ar_algo not in ("rs_ag", variant_algo):
+            raise ValueError(
+                f"variant {variant!r} sets ar_algo={variant_algo!r} but "
+                f"ar_algo={ar_algo!r} was passed explicitly"
+            )
+        ar_algo = variant_algo
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = C.SHAPES[shape_name]
@@ -239,7 +261,8 @@ def build_cell(
         )
         step = make_train_step(
             cfg, opt_cfg, remat=remat, collectives=collectives,
-            num_chains=num_chains, mesh=mesh, batch_specs=bspecs_clean,
+            num_chains=num_chains, ar_algo=ar_algo,
+            mesh=mesh, batch_specs=bspecs_clean,
         )
         return Cell(
             cfg=cfg, shape=shape, mesh=mesh, step_fn=step,
@@ -252,6 +275,7 @@ def build_cell(
             ),
             donate_argnums=(0, 1),
             num_chains=num_chains,
+            ar_algo=ar_algo,
         )
 
     if shape.kind == "prefill":

@@ -17,7 +17,15 @@ stays GSPMD-managed. Options mirror the paper's knobs:
   exchange across rings (``core.chainwrite.multi_chain_all_reduce``).
   ``hierarchical`` over a (pod, data) mesh is exactly the
   ``num_chains = #pods`` special case of this schedule on the
-  flattened DP axis — K=2 for the production two-pod system;
+  flattened DP axis — K=2 for the production two-pod system.
+  ``num_chains="auto"`` picks K per gradient leaf from the calibrated
+  ``core.simulator.all_reduce_latency`` model (modeled bytes *and*
+  cycles for the chosen ``algo``);
+* ``algo`` — multi-ring all-reduce schedule: ``"rs_ag"`` (default,
+  fused per-ring reduce-scatter/all-gather + cross-ring shard
+  rotation — ≈ (2·(S-1)+(K-1))/S payloads of wire per device) or
+  ``"rotation"`` (PR 1's full-payload rotations — fewer steps,
+  (S+K-2) payloads of wire; only wins for tiny payloads);
 * ``compress`` — int8 error-feedback wire format (4× fewer bytes).
   ``compress`` keeps the single-ring schedule (the int8 wire format is
   defined per ring hop), so ``num_chains`` is ignored when set.
@@ -33,6 +41,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import chainwrite as cw
+from repro.core import simulator as sim
 from repro.core.scheduling import SCHEDULERS, partition_schedule, reform_chain
 from repro.core.topology import MeshTopology
 from repro.runtime.compression import compressed_chain_all_reduce
@@ -151,6 +160,34 @@ def _dp_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+@functools.lru_cache(maxsize=None)
+def auto_ring_chains(
+    axis_size: int,
+    size_bytes: int,
+    scheduler: str = "tsp",
+    algo: str = "rs_ag",
+    max_chains: int = 4,
+) -> tuple[int, tuple[tuple[int, ...], ...]]:
+    """Model-driven (K, sub_rings) for one DP reduction of
+    ``size_bytes`` over ``axis_size`` devices — the ``num_chains=
+    "auto"`` resolver. Delegates to the algo-aware
+    ``core.simulator.choose_num_chains(collective="all_reduce")`` on
+    the 1-D ring topology (the same snake construction as
+    ``ring_order_for_axis``, so intra-ring hops stay 1 physical link).
+    Cached: the choice is static per (shape, axis) and runs at trace
+    time for every gradient leaf.
+    """
+    if axis_size <= 2:
+        return 1, (tuple(range(axis_size)),)
+    topo = MeshTopology(axis_size, 1)
+    k, rings = sim.choose_num_chains(
+        topo, 0, list(range(1, axis_size)), int(size_bytes),
+        scheduler=scheduler, max_chains=max_chains,
+        collective="all_reduce", algo=algo,
+    )
+    return k, tuple(tuple(r) for r in rings)
+
+
 def torrent_grad_reduce(
     grad_fn: Callable[..., tuple[PyTree, PyTree]],
     mesh,
@@ -158,7 +195,8 @@ def torrent_grad_reduce(
     *,
     scheduler: str = "tsp",
     hierarchical: bool = True,
-    num_chains: int = 1,
+    num_chains: int | str = 1,
+    algo: str = "rs_ag",
     compress: bool = False,
 ) -> Callable[..., tuple[PyTree, PyTree]]:
     """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` (grads LOCAL
@@ -167,8 +205,16 @@ def torrent_grad_reduce(
 
     ``num_chains > 1`` switches each DP reduction to the multi-chain
     schedule (K concurrent sub-rings; see module docstring). It must
-    divide the group size being reduced; ``compress`` overrides it back
-    to the single ring."""
+    divide the group size being reduced. ``num_chains="auto"`` picks K
+    per gradient leaf from the ``all_reduce_latency`` model for the
+    chosen ``algo`` (modeled bytes and cycles). ``compress`` overrides
+    either back to the single ring."""
+    if algo not in cw.ALL_REDUCE_ALGOS:
+        raise ValueError(
+            f"unknown algo {algo!r}; expected {cw.ALL_REDUCE_ALGOS}"
+        )
+    if num_chains != "auto" and not isinstance(num_chains, int):
+        raise ValueError(f'num_chains must be an int or "auto", got {num_chains!r}')
     dp = _dp_axes(mesh)
 
     dp_size = 1
@@ -185,9 +231,16 @@ def torrent_grad_reduce(
             order = ring_order_for_axis(size, scheduler)
             if compress:
                 return compressed_chain_all_reduce(x, axis, order)
-            if num_chains > 1 and size > num_chains:
+            if num_chains == "auto":
+                k, rings = auto_ring_chains(
+                    size, x.size * x.dtype.itemsize, scheduler, algo
+                )
+                if k > 1:
+                    return cw.multi_chain_all_reduce(x, axis, rings, algo=algo)
+            elif num_chains > 1 and size > num_chains:
                 return cw.multi_chain_all_reduce(
-                    x, axis, sub_ring_orders(size, num_chains, scheduler)
+                    x, axis, sub_ring_orders(size, num_chains, scheduler),
+                    algo=algo,
                 )
             return cw.chain_all_reduce(x, axis, order)
 

@@ -1,0 +1,237 @@
+"""Algo-aware all-reduce latency model + ring-partition validation.
+
+Pins the PR 3 acceptance invariants host-side (no devices needed):
+
+* ``all_reduce_latency`` at K=1 reduces CC-exactly to the single-ring
+  reduce-scatter + all-gather model (closed form recomputed here from
+  ``SimParams`` — for either ``algo``, mirroring the SPMD delegation);
+* the byte/latency trade: ``rs_ag`` wins for large payloads, the
+  step-count-lean ``rotation`` for tiny ones;
+* ``choose_num_chains(collective="all_reduce")`` returns a divisor K
+  whose sub-rings partition the group and never models worse than K=1;
+* ``all_reduce_wire_bytes`` matches the schedule formulas;
+* ``chainwrite.validate_ring_partition`` + the numpy schedule oracle
+  ``multi_all_reduce_ref``, property-style via _hypothesis_compat.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core.chainwrite import validate_ring_partition
+from repro.core.chainwrite_ref import all_reduce_ref, multi_all_reduce_ref
+from repro.core.simulator import (
+    DEFAULT_PARAMS,
+    _ceil_div,
+    all_reduce_latency,
+    all_reduce_wire_bytes,
+    choose_num_chains,
+)
+from repro.core.topology import MeshTopology
+
+LINE8 = MeshTopology(8, 1)  # the DP-ring analogue topo (1 hop/neighbour)
+MESH = MeshTopology(4, 5)  # the paper's 20-cluster SoC
+KB = 1024
+
+
+def _single_ring_closed_form(topo, src, ring, size_bytes, p=DEFAULT_PARAMS):
+    """The single-ring RS+AG model, written out independently."""
+    L = len(ring)
+    loop = list(ring) + [ring[0]]
+    hops = sum(topo.distance(a, b) for a, b in zip(loop, loop[1:]))
+    far = max(topo.distance(src, d) for d in ring)
+    max_edge = max(topo.distance(a, b) for a, b in zip(loop, loop[1:]))
+    cfg = (
+        p.dma_setup_cc + L * p.cfg_inject_cc + far * p.router_cc + p.cfg_proc_cc
+    )
+    grant = hops * p.router_cc + L * p.grant_fwd_cc
+    finish = hops * p.router_cc + L * p.finish_fwd_cc
+    shard_cc = _ceil_div(_ceil_div(size_bytes, L), p.link_bw)
+    data = 2 * (L - 1) * (max_edge * p.router_cc + p.sf_fill_cc + shard_cc)
+    return cfg + grant + data + finish
+
+
+def test_k1_reduces_exactly_to_single_ring_model():
+    ring = list(range(8))
+    for size in (1 * KB, 64 * KB, 1 << 20):
+        want = _single_ring_closed_form(LINE8, 0, ring, size)
+        for algo in ("rs_ag", "rotation"):  # K=1 delegates for either
+            assert all_reduce_latency(LINE8, 0, [ring], size, algo=algo) == want
+
+
+def test_rs_ag_wins_large_payloads_rotation_wins_tiny():
+    rings = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    big = 1 << 20
+    assert all_reduce_latency(LINE8, 0, rings, big, algo="rs_ag") < (
+        all_reduce_latency(LINE8, 0, rings, big, algo="rotation")
+    )
+    # 1-byte payload: the extra S-1 steps of RS+AG cost more than the
+    # (negligible) byte saving — the trade choose_num_chains models.
+    assert all_reduce_latency(LINE8, 0, rings, 1, algo="rotation") < (
+        all_reduce_latency(LINE8, 0, rings, 1, algo="rs_ag")
+    )
+
+
+def test_detail_dict_consistent():
+    rings = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    d = all_reduce_latency(LINE8, 0, rings, 64 * KB, algo="rs_ag", detail=True)
+    assert d["total"] == max(d["per_chain"])
+    for per_chain, phases in zip(d["per_chain"], d["per_phase"]):
+        assert per_chain == sum(phases)
+    assert d["algo"] == "rs_ag"
+    assert d["wire_bytes"] == all_reduce_wire_bytes(4, 2, 64 * KB, "rs_ag")
+    # cfg-port serialization: the second ring's cfg phase starts later
+    assert d["per_phase"][1][0] > d["per_phase"][0][0]
+    assert all_reduce_latency(LINE8, 0, [], 64 * KB) == 0
+
+
+def test_unequal_rings_and_bad_algo_raise():
+    with pytest.raises(ValueError):
+        all_reduce_latency(LINE8, 0, [[0, 1, 2], [3, 4]], KB)
+    with pytest.raises(ValueError):
+        all_reduce_latency(LINE8, 0, [[0, 1]], KB, algo="bogus")
+    with pytest.raises(ValueError):
+        all_reduce_wire_bytes(4, 2, KB, algo="bogus")
+    with pytest.raises(ValueError):
+        all_reduce_wire_bytes(0, 2, KB)
+    with pytest.raises(ValueError):
+        choose_num_chains(LINE8, 0, [1, 2], KB, collective="bogus")
+
+
+def test_wire_bytes_formulas():
+    B = 256 * KB
+    # rotation: (S+K-2) full payloads
+    assert all_reduce_wire_bytes(4, 2, B, "rotation") == 4 * B
+    assert all_reduce_wire_bytes(2, 4, B, "rotation") == 4 * B
+    # rs_ag: (2(S-1)+(K-1)) shards of ceil(B/S)
+    assert all_reduce_wire_bytes(4, 2, B, "rs_ag") == 7 * (B // 4)
+    assert all_reduce_wire_bytes(2, 4, B, "rs_ag") == 5 * (B // 2)
+    # K=1 delegates to single-ring RS+AG for either algo: 2(L-1)/L
+    assert (
+        all_reduce_wire_bytes(8, 1, B, "rotation")
+        == all_reduce_wire_bytes(8, 1, B, "rs_ag")
+        == 14 * (B // 8)
+    )
+    # the collapse the tentpole claims: rs_ag strictly below rotation
+    for S, K in ((4, 2), (2, 4), (8, 2), (4, 4)):
+        assert all_reduce_wire_bytes(S, K, B, "rs_ag") < (
+            all_reduce_wire_bytes(S, K, B, "rotation")
+        )
+
+
+def test_choose_num_chains_all_reduce_invariants():
+    for topo, n in ((LINE8, 8), (MeshTopology(16, 1), 16), (MESH, 20)):
+        for size in (1 * KB, 64 * KB, 4 << 20):
+            for algo in ("rs_ag", "rotation"):
+                k, rings = choose_num_chains(
+                    topo, 0, list(range(1, n)), size,
+                    collective="all_reduce", algo=algo,
+                )
+                assert 1 <= k <= 4 and n % k == 0 and len(rings) == k
+                assert sorted(d for r in rings for d in r) == list(range(n))
+                assert all(len(r) == n // k for r in rings)
+                lat = all_reduce_latency(topo, 0, rings, size, algo=algo)
+                ring1 = choose_num_chains(
+                    topo, 0, list(range(1, n)), size,
+                    collective="all_reduce", algo=algo, max_chains=1,
+                )[1]
+                assert lat <= all_reduce_latency(topo, 0, ring1, size, algo=algo)
+
+
+def test_choose_num_chains_broadcast_path_unchanged():
+    """The PR 1 behaviour survives the algo-aware extension."""
+    k, chains = choose_num_chains(MESH, 0, [3, 7, 12, 14], 64 * KB)
+    assert 1 <= k <= 4
+    assert sorted(d for c in chains for d in c) == [3, 7, 12, 14]
+
+
+# ---------------------------------------------------------------------------
+# Property tests (deterministic via _hypothesis_compat)
+# ---------------------------------------------------------------------------
+
+
+def _random_partition(rng, L, K):
+    perm = list(range(L))
+    rng.shuffle(perm)
+    S = L // K
+    return [tuple(perm[i * S : (i + 1) * S]) for i in range(K)]
+
+
+@settings(max_examples=40)
+@given(data=st.data())
+def test_validate_ring_partition_properties(data):
+    K = data.draw(st.sampled_from([1, 2, 3, 4]), label="K")
+    S = data.draw(st.integers(min_value=1, max_value=5), label="S")
+    L = K * S
+    import random as _random
+
+    rng = _random.Random(data.draw(st.integers(min_value=0, max_value=9999)))
+    orders = _random_partition(rng, L, K)
+    cleaned = validate_ring_partition(L, orders)
+    assert sorted(d for c in cleaned for d in c) == list(range(L))
+
+    # a duplicated member (no longer a partition) must raise
+    if L > 1:
+        bad = [list(c) for c in orders]
+        bad[0][0] = bad[-1][-1]
+        with pytest.raises(ValueError):
+            validate_ring_partition(L, bad)
+    # unequal sizes must raise
+    if K > 1 and S > 1:
+        lop = [orders[0][:-1]] + [orders[1] + orders[0][-1:]] + list(orders[2:])
+        with pytest.raises(ValueError):
+            validate_ring_partition(L, lop)
+    # missing a device must raise
+    with pytest.raises(ValueError):
+        validate_ring_partition(L + 1, orders)
+    with pytest.raises(ValueError):
+        validate_ring_partition(L, [])
+
+
+@settings(max_examples=25)
+@given(data=st.data())
+def test_multi_all_reduce_ref_sums_any_schedule(data):
+    """The schedule-replaying oracle computes a true all-reduce for any
+    ring partition, either algo, any (incl. non-divisible) payload."""
+    K = data.draw(st.sampled_from([1, 2, 3, 4]), label="K")
+    S = data.draw(st.integers(min_value=1, max_value=4), label="S")
+    lead = data.draw(st.integers(min_value=1, max_value=9), label="lead")
+    algo = data.draw(st.sampled_from(["rs_ag", "rotation"]), label="algo")
+    L = K * S
+    import random as _random
+
+    rng = _random.Random(data.draw(st.integers(min_value=0, max_value=9999)))
+    orders = _random_partition(rng, L, K)
+    xs = np.random.default_rng(L * lead).normal(size=(L, lead, 2))
+    xs = xs.astype(np.float32)
+    out = multi_all_reduce_ref(xs, orders, algo)
+    assert out.shape == xs.shape
+    np.testing.assert_allclose(
+        out, all_reduce_ref(xs), rtol=2e-5, atol=2e-5,
+        err_msg=f"{orders} {algo} lead={lead}",
+    )
+
+
+@settings(max_examples=20)
+@given(data=st.data())
+def test_wire_bytes_monotone_and_model_agrees(data):
+    """rs_ag wire bytes never exceed rotation's for K>=2 at any
+    non-degenerate payload (shard rounding can invert the order only
+    when the payload is smaller than one shard per step, i.e. a few
+    bytes), and the latency model's detail reports exactly the formula
+    bytes."""
+    K = data.draw(st.integers(min_value=2, max_value=4), label="K")
+    S = data.draw(st.integers(min_value=2, max_value=8), label="S")
+    size = data.draw(st.sampled_from([4096, 65536, 1 << 20]), label="size")
+    assert all_reduce_wire_bytes(S, K, size, "rs_ag") <= (
+        all_reduce_wire_bytes(S, K, size, "rotation")
+    )
+    topo = MeshTopology(S * K, 1)
+    rings = [
+        list(range(c * S, (c + 1) * S)) for c in range(K)
+    ]
+    for algo in ("rs_ag", "rotation"):
+        d = all_reduce_latency(topo, 0, rings, size, algo=algo, detail=True)
+        assert d["wire_bytes"] == all_reduce_wire_bytes(S, K, size, algo)

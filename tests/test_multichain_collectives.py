@@ -4,8 +4,12 @@ virtual devices (subprocess via conftest.run_multidevice).
 Covers the acceptance matrix: K in {1, 2, 3}, partial chains, with and
 without frame pipelining — ``multi_chain_broadcast`` must match
 ``chainwrite_ref.multi_broadcast_ref`` bit-exactly; plus the K-sub-ring
-``multi_chain_all_reduce`` (the hierarchical generalization) and its
-integration with ``torrent_grad_reduce(num_chains=...)``.
+``multi_chain_all_reduce`` (the hierarchical generalization) under both
+schedules — PR 1's full-payload ``rotation`` and PR 3's fused
+reduce-scatter/all-gather ``rs_ag`` — pinned BIT-exactly against the
+schedule-replaying ``multi_all_reduce_ref`` for K in {1, 2, 4} incl.
+shard-padding payloads, and its integration with
+``torrent_grad_reduce(num_chains=..., algo=...)``.
 """
 
 from __future__ import annotations
@@ -218,14 +222,20 @@ def test_multi_chain_all_reduce_matches_oracle(run_multidevice):
         [(3, 1, 0, 2), (7, 5, 6, 4)],                # K=2, scheduled orders
     ]
     for orders in ring_sets:
-        def f(x, orders=orders):
-            return cw.multi_chain_all_reduce(x[0], 'x', orders)[None]
-        y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
-        np.testing.assert_allclose(
-            np.asarray(y), ref.all_reduce_ref(np.asarray(xs)),
-            rtol=1e-5, atol=1e-5, err_msg=str(orders))
+        for algo in ('rs_ag', 'rotation'):
+            def f(x, orders=orders, algo=algo):
+                return cw.multi_chain_all_reduce(x[0], 'x', orders, algo=algo)[None]
+            y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+            np.testing.assert_allclose(
+                np.asarray(y), ref.all_reduce_ref(np.asarray(xs)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{orders} {algo}")
+            # the schedule-replaying oracle pins the result BIT-exactly
+            np.testing.assert_array_equal(
+                np.asarray(y),
+                ref.multi_all_reduce_ref(np.asarray(xs), orders, algo),
+                err_msg=f"{orders} {algo}")
 
-    # validation: unequal rings / non-partition must raise
+    # validation: unequal rings / non-partition / unknown algo must raise
     for bad in ([(0, 1, 2), (3, 4, 5, 6, 7)], [(0, 1), (2, 3)]):
         try:
             def g(x, bad=bad):
@@ -234,14 +244,79 @@ def test_multi_chain_all_reduce_matches_oracle(run_multidevice):
             raise SystemExit("expected ValueError for " + str(bad))
         except ValueError:
             pass
+    try:
+        def h(x):
+            return cw.multi_chain_all_reduce(
+                x[0], 'x', [(0,1,2,3), (4,5,6,7)], algo='bogus')[None]
+        jax.jit(jax.shard_map(h, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+        raise SystemExit("expected ValueError for bad algo")
+    except ValueError:
+        pass
     print("multi-chain all-reduce OK")
     """, timeout=900)
 
 
-def test_torrent_grad_reduce_num_chains(run_multidevice):
-    """The num_chains knob: identical grads for K in {1, 2, 4}."""
+def test_multi_chain_all_reduce_rs_ag_shard_padding(run_multidevice):
+    """The K=4 (and K=2) RS+AG oracle suite over payload lengths NOT
+    divisible by the ring size S — the shard pad/unpad path — pinned
+    bit-exactly on 8 virtual devices."""
     run_multidevice("""
-    from repro.parallel.collectives import torrent_grad_reduce, sub_ring_orders
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(7)
+    ring_sets = [
+        [(0, 1, 2, 3, 4, 5, 6, 7)],                  # K=1, S=8
+        [(3, 1, 0, 2), (7, 5, 6, 4)],                # K=2, S=4, scrambled
+        [(0, 2), (4, 6), (1, 3), (5, 7)],            # K=4, S=2, scrambled
+    ]
+    for lead in (5, 6, 13):   # 5 % 2, 6 % 4, 13 % 8 all nonzero
+        xs = jnp.asarray(rng.normal(size=(8, lead, 2)).astype(np.float32))
+        for orders in ring_sets:
+            for algo in ('rs_ag', 'rotation'):
+                def f(x, orders=orders, algo=algo):
+                    return cw.multi_chain_all_reduce(
+                        x[0], 'x', orders, algo=algo)[None]
+                y = jax.jit(jax.shard_map(
+                    f, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+                assert np.asarray(y).shape == xs.shape
+                np.testing.assert_array_equal(
+                    np.asarray(y),
+                    ref.multi_all_reduce_ref(np.asarray(xs), orders, algo),
+                    err_msg=f"lead={lead} {orders} {algo}")
+    print("rs_ag shard padding OK")
+    """, timeout=900)
+
+
+def test_multi_chain_all_reduce_k1_delegates_to_chain(run_multidevice):
+    """K=1 (either algo) computes exactly chain_all_reduce over the
+    same scheduled ring."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.normal(size=(8, 7)).astype(np.float32))
+    order = (3, 1, 0, 2, 7, 5, 6, 4)
+    def single(x):
+        return cw.chain_all_reduce(x[0], 'x', order)[None]
+    ys = jax.jit(jax.shard_map(single, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+    for algo in ('rs_ag', 'rotation'):
+        def multi(x, algo=algo):
+            return cw.multi_chain_all_reduce(x[0], 'x', [order], algo=algo)[None]
+        ym = jax.jit(jax.shard_map(multi, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+        np.testing.assert_array_equal(np.asarray(ym), np.asarray(ys))
+    print("K=1 delegation OK")
+    """, timeout=900)
+
+
+def test_torrent_grad_reduce_num_chains(run_multidevice):
+    """The num_chains/algo knobs: identical grads for K in {1, 2, 4,
+    "auto"} under either all-reduce schedule."""
+    run_multidevice("""
+    from repro.parallel.collectives import (
+        auto_ring_chains, torrent_grad_reduce, sub_ring_orders)
 
     assert sub_ring_orders(8, 2) == [(0, 1, 2, 3), (4, 5, 6, 7)]
     try:
@@ -249,6 +324,15 @@ def test_torrent_grad_reduce_num_chains(run_multidevice):
         raise SystemExit("expected ValueError")
     except ValueError:
         pass
+    try:
+        torrent_grad_reduce(lambda p, b: (p, {}), None, None, algo='bogus')
+        raise SystemExit("expected ValueError for bad algo")
+    except ValueError:
+        pass
+    # the auto resolver returns a divisor-K partition of the group
+    k, rings = auto_ring_chains(8, 1 << 20)
+    assert 8 % k == 0
+    assert sorted(d for r in rings for d in r) == list(range(8))
 
     mesh = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
     def grad_fn(params, batch):
@@ -260,14 +344,17 @@ def test_torrent_grad_reduce_num_chains(run_multidevice):
     rng = np.random.default_rng(0)
     batch = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
     outs = {}
-    for k in (1, 2, 4):
-        f = torrent_grad_reduce(grad_fn, mesh, P('data'),
-                                num_chains=k, hierarchical=False)
-        g, m = f(params, batch)
-        outs[k] = np.asarray(g['w'])
-    np.testing.assert_allclose(outs[1], outs[2], rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(outs[1], outs[4], rtol=1e-5, atol=1e-6)
+    for k in (1, 2, 4, 'auto'):
+        for algo in ('rs_ag', 'rotation'):
+            f = torrent_grad_reduce(grad_fn, mesh, P('data'),
+                                    num_chains=k, algo=algo,
+                                    hierarchical=False)
+            g, m = f(params, batch)
+            outs[(k, algo)] = np.asarray(g['w'])
+    base = outs[(1, 'rs_ag')]
+    for key, got in outs.items():
+        np.testing.assert_allclose(base, got, rtol=1e-5, atol=1e-6, err_msg=str(key))
     ref_g = np.asarray(jax.grad(lambda p: jnp.mean((batch @ p['w']) ** 2))(params)['w'])
-    np.testing.assert_allclose(outs[1], ref_g, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(base, ref_g, rtol=1e-4, atol=1e-6)
     print("num_chains grad reduce OK")
     """, timeout=900)

@@ -57,8 +57,77 @@ def test_num_chains_variant_plumbs_to_train_step(host_mesh, monkeypatch):
     # num_chains is a step-builder knob, not a ModelConfig field
     assert VARIANTS["k2"] == {"num_chains": 2}  # not mutated by the pop
     assert cell.cfg == C.get_smoke_config("llama3-8b")
+    assert cell.ar_algo == "rs_ag"  # the bandwidth-optimal default
     compiled = cell.lower().compile()
     assert compiled.cost_analysis() is not None
+
+
+def test_ar_algo_and_auto_variants_plumb_to_train_step(host_mesh, monkeypatch):
+    """'k2-rot' (rotation schedule) and 'k-auto' (model-picked K) are
+    step-builder knobs like num_chains: resolved by build_cell, never
+    ModelConfig fields, and the cells still lower + compile."""
+    from repro.launch.steps import VARIANTS
+
+    shape = SMOKE_SHAPES["train"]
+    monkeypatch.setitem(C.SHAPES, shape.name, shape)
+    assert VARIANTS["k2-rot"] == {"num_chains": 2, "ar_algo": "rotation"}
+    assert VARIANTS["k-auto"] == {"num_chains": "auto"}
+
+    cell = build_cell(
+        "llama3-8b", shape.name, host_mesh, smoke=True,
+        collectives="torrent", variant="k2-rot",
+    )
+    assert VARIANTS["k2-rot"] == {"num_chains": 2, "ar_algo": "rotation"}
+    assert cell.cfg == C.get_smoke_config("llama3-8b")
+    assert (cell.num_chains, cell.ar_algo) == (2, "rotation")
+    assert cell.lower().compile().cost_analysis() is not None
+
+    cell = build_cell(
+        "llama3-8b", shape.name, host_mesh, smoke=True,
+        collectives="torrent", variant="k-auto",
+    )
+    assert cell.num_chains == "auto"
+    assert cell.lower().compile().cost_analysis() is not None
+
+    # conflicting explicit knobs are rejected (ar_algo="rs_ag" is the
+    # default and therefore never conflicts; a variant pinning rs_ag
+    # conflicts with an explicit rotation)
+    monkeypatch.setitem(VARIANTS, "pin-rsag", {"ar_algo": "rs_ag"})
+    with pytest.raises(ValueError):
+        build_cell(
+            "llama3-8b", shape.name, host_mesh, smoke=True,
+            collectives="torrent", variant="pin-rsag", ar_algo="rotation",
+        )
+    with pytest.raises(ValueError):
+        build_cell(
+            "llama3-8b", shape.name, host_mesh, smoke=True,
+            collectives="torrent", variant="k2", num_chains=4,
+        )
+
+
+def test_dryrun_cell_suffix_and_num_chains_parse():
+    """--num-chains accepts ints or 'auto'; the output-file suffix
+    encodes the algo and K knobs so sweeps never collide."""
+    import argparse
+
+    from repro.launch.dryrun import _cell_suffix, _parse_num_chains
+
+    assert _parse_num_chains("2") == 2
+    assert _parse_num_chains("auto") == "auto"
+    with pytest.raises(argparse.ArgumentTypeError):
+        _parse_num_chains("0")
+
+    def ns(**kw):
+        base = dict(collectives="xla", num_chains=1, ar_algo="rs_ag",
+                    variant="baseline", remat="dots")
+        base.update(kw)
+        return argparse.Namespace(**base)
+
+    assert _cell_suffix(ns()) == ""
+    assert _cell_suffix(ns(collectives="torrent", num_chains=2)) == "__torrent__k2"
+    assert _cell_suffix(
+        ns(collectives="torrent", num_chains="auto", ar_algo="rotation")
+    ) == "__torrent__kauto__rotation"
 
 
 def test_applicability_matrix():
