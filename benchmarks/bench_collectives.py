@@ -5,25 +5,40 @@ This is the JAX-side counterpart of Fig. 5: the "network-layer
 multicast" baseline is XLA's built-in all-reduce/all-gather; "Torrent"
 is the scheduled ppermute chain. On CPU the wall-clock ratio is not
 meaningful for TPU — the *collective wire bytes* (trip-count-aware HLO
-parse) are the portable metric and must match the ring-algorithm
-prediction 2·(L-1)/L · payload per device.
+parse) are the portable metric and must match the ChainProgram IR's
+``program_wire_bytes`` prediction for every collective × K:
 
-The ``num_chains``/``algo`` knobs are surfaced here too: multi-chain
-all-reduce (K=2/K=4 partitioned sub-rings, the hierarchical
-generalization) is emitted for BOTH schedules and byte-pinned —
-``rotation`` must match the (S+K-2)-payload/device prediction and
-``rs_ag`` (fused per-ring reduce-scatter/all-gather + cross-ring shard
-rotation) must match (2·(S-1)+(K-1))/S·payload and land strictly below
-its rotation twin; multi-chain broadcast (K=2) is timed against the
-single chain.
+* all-reduce — ``rotation`` must match the (S+K-2)-payload/device
+  prediction and ``rs_ag`` (fused per-ring reduce-scatter/all-gather +
+  cross-ring shard rotation) must match (2·(S-1)+(K-1))/S·payload and
+  land strictly below its rotation twin;
+* reduce-scatter / all-gather / all-to-all — the K-ring schedules must
+  match the single ring's bytes exactly (the planner redistributes
+  hops, not bytes);
+* multi-chain broadcast (K=2) is timed against the single chain.
+
+Besides the CSV rows, ``main()`` writes ``BENCH_collectives.json`` at
+the repo root — per-benchmark ``{us, hlo_bytes, modeled_bytes,
+modeled_latency_cc}`` from the very same IR the executors run — so the
+perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import time
+
+L = 8
+N = 1 << 18  # 256k f32 per device = 1 MiB
+RINGS = {
+    1: ((0, 1, 2, 3, 4, 5, 6, 7),),
+    2: ((0, 1, 2, 3), (4, 5, 6, 7)),
+    4: ((0, 1), (2, 3), (4, 5), (6, 7)),
+}
+BCAST_CHAINS = ((1, 2, 3), (4, 5, 6, 7))
 
 _SNIPPET = r"""
 import os
@@ -62,22 +77,55 @@ def multi_ar(k, algo):
         return cw.multi_chain_all_reduce(x[0], "x", RINGS[k], algo=algo)[None]
     return fn
 
+def multi_rs(k):
+    def fn(x):
+        orders = RINGS[k] if k > 1 else None
+        v = x[0].reshape(L, N // L)
+        out = (cw.multi_chain_reduce_scatter(v, "x", orders) if k > 1
+               else cw.chain_reduce_scatter(v, "x"))
+        return jnp.tile(out, L)[None]
+    return fn
+
+def multi_ag(k):
+    def fn(x):
+        v = x[0, : N // L]
+        out = (cw.multi_chain_all_gather(v, "x", RINGS[k], tiled=True) if k > 1
+               else cw.chain_all_gather(v, "x", tiled=True))
+        return out[None]
+    return fn
+
+def multi_a2a(k):
+    def fn(x):
+        v = x[0].reshape(L, N // L)
+        out = (cw.multi_chain_all_to_all(v, "x", RINGS[k]) if k > 1
+               else cw.chain_all_to_all(v, "x"))
+        return out.reshape(N)[None]
+    return fn
+
 results = {}
-for name, fn in [
+cases = [
     ("chain_all_reduce", chain_ar),
     ("multi_chain_all_reduce_k2_rotation", multi_ar(2, "rotation")),
     ("multi_chain_all_reduce_k2_rs_ag", multi_ar(2, "rs_ag")),
     ("multi_chain_all_reduce_k4_rotation", multi_ar(4, "rotation")),
     ("multi_chain_all_reduce_k4_rs_ag", multi_ar(4, "rs_ag")),
     ("xla_all_reduce", xla_ar),
-]:
+]
+for k in (1, 2, 4):
+    cases += [
+        (f"multi_chain_reduce_scatter_k{k}", multi_rs(k)),
+        (f"multi_chain_all_gather_k{k}", multi_ag(k)),
+        (f"multi_chain_all_to_all_k{k}", multi_a2a(k)),
+    ]
+for name, fn in cases:
     sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     jitted = jax.jit(sm)
     us = time_fn(jitted, x)
     cost = hlo_cost.analyze(jitted.lower(x).compile().as_text())
     results[name] = (us, cost.coll_bytes)
-    # correctness
-    np.testing.assert_allclose(np.asarray(jitted(x))[0], np.full((N,), L, np.float32))
+    if "all_reduce" in name:  # correctness: every element sums to L
+        np.testing.assert_allclose(
+            np.asarray(jitted(x))[0], np.full((N,), L, np.float32))
 
 payload = N * 4
 ring_pred = 2 * (L - 1) / L * payload
@@ -96,8 +144,23 @@ for K in (2, 4):
     assert 0.9 * rsag_pred <= rsag_bytes <= 1.35 * rsag_pred, (K, rsag_bytes, rsag_pred)
     assert rsag_bytes < rot_bytes, (K, rsag_bytes, rot_bytes)
 
-# P2MP broadcast: single chain vs 2 partitioned chains (wire bytes drop
-# because the longest chain halves: 7 sequential hops -> 2x3+1 concurrent).
+# The K-ring reduce-scatter / all-gather / all-to-all redistribute hops,
+# not bytes: every K must land on the single ring's byte count.
+ring_bytes = {
+    "multi_chain_reduce_scatter": (L - 1) / L * payload,
+    "multi_chain_all_gather": (L - 1) / L * payload,
+    "multi_chain_all_to_all": (L - 1) * payload,
+}
+for stem, pred in ring_bytes.items():
+    for k in (1, 2, 4):
+        got = results[f"{stem}_k{k}"][1]
+        assert 0.9 * pred <= got <= 1.35 * pred, (stem, k, got, pred)
+
+# P2MP broadcast: single chain vs 2 partitioned chains. The K=2 split
+# buys LATENCY (10 -> 7 pipeline slots: the longest chain halves), not
+# bytes — the head's per-slot fan-out costs a second ppermute, so HLO
+# wire bytes RISE from 10 to 7x2 frame-payloads (both recorded in
+# BENCH_collectives.json and matched exactly by pipelined_wire_bytes).
 def chain_bc(x):
     return cw.chain_broadcast(x[0], "x", tuple(range(8)), num_frames=4)[None]
 
@@ -118,6 +181,49 @@ for name, (us, cb) in results.items():
 """
 
 
+def _modeled(name: str) -> dict:
+    """Modeled bytes/latency for a benchmark entry from the very same
+    ChainProgram the subprocess executed (host-side: no jax needed)."""
+    from repro.core import program as prg
+    from repro.core.simulator import program_latency
+    from repro.core.topology import MeshTopology
+
+    topo = MeshTopology(L, 1)  # the snake-ring analogue topology
+    payload = N * 4
+    prog = None
+    size = payload
+    if name in ("chain_broadcast", "multi_chain_broadcast_k2"):
+        chains = (
+            (tuple(range(1, L)),) if name == "chain_broadcast" else BCAST_CHAINS
+        )
+        prog = prg.plan_broadcast(L, 0, chains)
+        return {
+            # the bench runs the frame-pipelined path (num_frames=4)
+            "modeled_bytes": prg.pipelined_wire_bytes(prog, payload, 4),
+            "modeled_latency_cc": program_latency(topo, 0, prog, payload),
+        }
+    if name.startswith("multi_chain_all_reduce") or name == "chain_all_reduce":
+        if name == "chain_all_reduce":
+            k, algo = 1, "rs_ag"
+        else:
+            parts = name.split("_k")[1].split("_", 1)
+            k, algo = int(parts[0]), parts[1]
+        prog = prg.plan_all_reduce(L, RINGS[k], "rs_ag" if k == 1 else algo)
+    elif name.startswith("multi_chain_reduce_scatter"):
+        prog = prg.plan_reduce_scatter(L, RINGS[int(name[-1])])
+    elif name.startswith("multi_chain_all_gather"):
+        prog = prg.plan_all_gather(L, RINGS[int(name[-1])])
+        size = payload // L  # per-device input is one shard
+    elif name.startswith("multi_chain_all_to_all"):
+        prog = prg.plan_all_to_all(L, RINGS[int(name[-1])])
+    if prog is None:
+        return {}
+    return {
+        "modeled_bytes": prog.wire_bytes(size),
+        "modeled_latency_cc": program_latency(topo, 0, prog, size),
+    }
+
+
 def main() -> list[tuple[str, float, str]]:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -125,14 +231,27 @@ def main() -> list[tuple[str, float, str]]:
     t0 = time.perf_counter()
     proc = subprocess.run(
         [sys.executable, "-c", _SNIPPET], capture_output=True, text=True,
-        env=env, timeout=900,
+        env=env, timeout=1800,
     )
     if proc.returncode != 0:
         raise RuntimeError(proc.stderr[-2000:])
     rows = []
+    metrics: dict[str, dict] = {}
     for line in proc.stdout.strip().splitlines():
         name, us, cb = line.split(",")
         rows.append((f"collectives.{name}", float(us), f"wire_bytes={cb}"))
+        metrics[name] = {
+            "us": float(us), "hlo_bytes": float(cb), **_modeled(name),
+        }
+    for name, m in metrics.items():
+        # The IR's byte model must match the HLO parse EXACTLY — this
+        # also keeps the module-level L/N/RINGS constants honest
+        # against their copies inside the subprocess snippet.
+        assert m.get("modeled_bytes", m["hlo_bytes"]) == m["hlo_bytes"], (
+            name, m)
+    with open(os.path.join(repo, "BENCH_collectives.json"), "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+        f.write("\n")
     rows.append((
         "collectives.subprocess_s",
         (time.perf_counter() - t0) * 1e6, "8 virtual devices",

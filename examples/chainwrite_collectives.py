@@ -2,7 +2,10 @@
 
 Shows the TPU-side of the paper's contribution: P2MP broadcast to a
 device *subset*, scheduled ring all-reduce, and the backend seam that
-swaps XLA collectives for Torrent chains.
+swaps XLA collectives for Torrent chains — plus the ChainProgram IR
+behind all of them: every collective is planned ONCE (``core.program``)
+and the same step/edge/byte table drives the SPMD executor, the numpy
+oracle and the cycle model (section 0 prints the planned tables).
 
 This script needs 8 devices, so it sets the host-platform flag itself —
 run it standalone, not inside other JAX code:
@@ -27,7 +30,36 @@ from repro.core.scheduling import tsp_schedule
 from repro.core.topology import MeshTopology
 
 
+def show_programs():
+    """--- 0. The schedule IR: one planner, three backends ------------
+
+    Prints each collective's planned step/edge/byte table straight
+    from the ChainProgram — the same object `chainwrite` executes,
+    `chainwrite_ref` replays and `simulator.program_latency` prices.
+    """
+    from repro.core import program as prg
+    from repro.core.simulator import program_latency
+
+    L, payload = 8, 64 * 1024
+    topo = MeshTopology(L, 1)
+    rings2 = ((0, 1, 2, 3), (4, 5, 6, 7))
+    programs = [
+        prg.plan_broadcast(L, 0, ((1, 2, 3), (4, 5, 6, 7))),
+        prg.plan_all_reduce(L, rings2, "rs_ag"),
+        prg.plan_all_reduce(L, rings2, "rotation"),
+        prg.plan_reduce_scatter(L, rings2),
+        prg.plan_all_gather(L, rings2),
+        prg.plan_all_to_all(L, rings2),
+    ]
+    for prog in programs:
+        for line in prog.describe(payload):
+            print(line)
+        print(f"  modeled latency: "
+              f"{program_latency(topo, 0, prog, payload)} CC\n")
+
+
 def main():
+    show_programs()
     mesh = jax.make_mesh((8,), ("x",),
                          axis_types=(jax.sharding.AxisType.Auto,))
     print(f"devices: {jax.device_count()}")

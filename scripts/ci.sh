@@ -5,8 +5,11 @@
 # QUICK=1 skips the @pytest.mark.slow tests (exact-TSP and multidevice
 # oracle suites) for a fast inner loop — the default run keeps them.
 # QUICK=1 BENCH=1 keeps the fast lane honest about wire bytes: it runs
-# the self-contained bench_collectives subprocess (the chain/multi-ring
-# all-reduce byte-prediction assertions) instead of the full harness.
+# the self-contained bench_collectives subprocess (the ChainProgram
+# byte-prediction assertions for every collective × K) instead of the
+# full harness. Either BENCH path rewrites BENCH_collectives.json —
+# the per-benchmark modeled-vs-HLO bytes/latency record tracked across
+# PRs.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."

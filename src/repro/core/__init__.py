@@ -3,9 +3,13 @@
 * :mod:`.topology`   — 2-D mesh/torus + XY routing (SoC NoC and ICI).
 * :mod:`.scheduling` — Chainwrite sequence schedulers (Alg. 1 greedy,
   open-path TSP) and hop accounting.
-* :mod:`.simulator`  — cycle-level NoC model (Fig. 5/6/7 reproduction).
+* :mod:`.program`    — the ChainProgram schedule IR + ``plan_*``
+  planners: every collective described ONCE, consumed by three
+  interchangeable backends.
+* :mod:`.simulator`  — cycle-level NoC model (Fig. 5/6/7 reproduction)
+  — drives the IR via ``program_latency``/``program_wire_bytes``.
 * :mod:`.chainwrite` — Chainwrite collectives on TPU ICI
-  (scheduled ppermute chains inside shard_map).
+  (the generic SPMD program executor inside shard_map).
 * :mod:`.chaintask`  — host-side four-phase orchestration (Fig. 4).
 """
 
@@ -17,10 +21,24 @@ from .chainwrite import (
     chain_broadcast,
     chain_edges,
     chain_reduce_scatter,
+    execute_program,
+    multi_chain_all_gather,
     multi_chain_all_reduce,
+    multi_chain_all_to_all,
     multi_chain_broadcast,
+    multi_chain_reduce_scatter,
     validate_ring_partition,
     xla_broadcast,
+)
+from .program import (
+    ChainProgram,
+    Step,
+    plan_all_gather,
+    plan_all_reduce,
+    plan_all_to_all,
+    plan_broadcast,
+    plan_reduce_scatter,
+    program_wire_bytes,
 )
 from .chaintask import (
     AffinePattern,
@@ -49,6 +67,8 @@ from .simulator import (
     all_reduce_wire_bytes,
     chainwrite_latency,
     choose_num_chains,
+    plan_ring_collective,
+    program_latency,
     config_overhead_per_destination,
     eta_p2mp,
     multi_chain_latency,
@@ -69,6 +89,8 @@ __all__ = [
     "Phase",
     "SCHEDULERS",
     "SimParams",
+    "ChainProgram",
+    "Step",
     "all_reduce_latency",
     "all_reduce_wire_bytes",
     "brute_force_schedule",
@@ -83,10 +105,14 @@ __all__ = [
     "config_overhead_per_destination",
     "eta_p2mp",
     "choose_num_chains",
+    "execute_program",
     "greedy_schedule",
+    "multi_chain_all_gather",
     "multi_chain_all_reduce",
+    "multi_chain_all_to_all",
     "multi_chain_broadcast",
     "multi_chain_latency",
+    "multi_chain_reduce_scatter",
     "MultiChainTask",
     "multicast_latency",
     "multicast_total_hops",
@@ -96,6 +122,14 @@ __all__ = [
     "partition_balance_slack",
     "partition_schedule",
     "partition_total_hops",
+    "plan_all_gather",
+    "plan_ring_collective",
+    "plan_all_reduce",
+    "plan_all_to_all",
+    "plan_broadcast",
+    "plan_reduce_scatter",
+    "program_latency",
+    "program_wire_bytes",
     "tsp_schedule",
     "unicast_latency",
     "unicast_total_hops",

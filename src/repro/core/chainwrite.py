@@ -3,45 +3,45 @@
 The paper moves data replication out of the NoC routers and into the DMA
 endpoints: data traverses a *scheduled chain* of destinations, each hop
 an ordinary P2P transfer. On TPU the only true P2P primitive is
-``jax.lax.ppermute`` (collective-permute), so Chainwrite maps to chains
-of ppermutes inside ``shard_map``:
+``jax.lax.ppermute`` (collective-permute), so every Chainwrite pattern
+maps to chains of ppermutes inside ``shard_map``.
 
-* :func:`chain_broadcast` — P2MP multicast of a payload held by the
-  chain head to an arbitrary *subset* of devices on an axis. Supports
-  frame pipelining (``num_frames``): the payload is sliced into frames
-  that stream through the chain (store-and-forward), so chain latency
-  is (F + L - 2) frame-times rather than F·L — exactly the paper's
-  §III-C stream duplicator behaviour.
-* :func:`multi_chain_broadcast` — the multi-chain extension: K
-  link-disjoint sub-chains (from ``scheduling.partition_schedule``)
-  stream the same payload concurrently from one head. All chains live
-  in one SPMD program; intra-chain hops across different chains fuse
-  into a single ``ppermute`` per step (their sources/targets are
-  disjoint), while the head's K same-step fan-out sends are emitted as
-  K tiny ppermutes (XLA requires unique sources per permute). Supports
-  the same per-chain frame pipelining as :func:`chain_broadcast`.
+Since the ChainProgram refactor there is exactly ONE interpreter here:
+:func:`execute_program` runs any :class:`~repro.core.program.
+ChainProgram` step by step (one fused ppermute per step; a pipeline
+head's same-step fan-out gets per-edge permutes because XLA requires
+unique permute sources). Every public collective is a thin
+``plan_* -> execute_program`` wrapper whose signature is unchanged from
+the pre-IR versions:
+
+* :func:`chain_broadcast` / :func:`multi_chain_broadcast` /
+  :func:`degraded_multi_chain_broadcast` — P2MP multicast down one or
+  K link-disjoint sub-chains, with optional frame pipelining
+  (``num_frames``: payload frames stream through the chains
+  store-and-forward, F + L - 2 slots instead of F·L — the paper's
+  §III-C stream duplicator).
 * :func:`chain_all_gather` / :func:`chain_reduce_scatter` /
-  :func:`chain_all_reduce` — ring collectives over an explicitly
-  *scheduled* ring order (from ``core.scheduling``), replacing XLA's
-  built-in all-gather/all-reduce ("network-layer multicast" analogue).
-* :func:`multi_chain_all_reduce` — all-reduce over K disjoint
-  equal-size sub-rings; the generalization whose K=2 case is
-  hierarchical (within-pod then cross-pod) all-reduce. Two schedules:
-  ``algo="rs_ag"`` (default) runs a fused per-ring reduce-scatter,
-  rotates the 1/S-payload *shards* across rings, then a fused per-ring
-  all-gather — ≈ (2·(S-1)+(K-1))/S payloads of wire per device, the
-  bandwidth-optimal family; ``algo="rotation"`` keeps the short
-  (S+K-2)-step full-payload rotation schedule, latency-optimal for
-  tiny payloads where per-step overhead dominates.
-* :func:`chain_all_to_all` — MoE dispatch as a rotating chain.
+  :func:`chain_all_reduce` / :func:`chain_all_to_all` — ring
+  collectives over an explicitly *scheduled* ring order.
+* :func:`multi_chain_all_reduce` — K disjoint equal sub-rings;
+  ``algo="rs_ag"`` (fused per-ring reduce-scatter → cross-ring shard
+  rotation → fused per-ring all-gather, ≈ (2·(S-1)+(K-1))/S payloads
+  of wire per device) or ``algo="rotation"`` (S+K-2 full-payload
+  steps).
+* :func:`multi_chain_reduce_scatter` / :func:`multi_chain_all_gather` /
+  :func:`multi_chain_all_to_all` — the K-ring generalizations that
+  fall straight out of the planner (same total wire as the single
+  ring, ring-local/position-paired hops).
 
 All functions must be called inside ``shard_map`` with a manual axis.
-``order`` is always a static tuple of device indices along the axis;
-non-members of a partial chain participate in the SPMD program but
-receive (and keep) zeros — the paper's "no change to the interconnect"
-property: nothing outside the chain is touched.
+``order``/``orders``/``chains`` are static tuples of device indices
+along the axis; non-members of a partial chain participate in the SPMD
+program but receive (and keep) zeros — the paper's "no change to the
+interconnect" property: nothing outside the chain is touched.
 
-Pure-jnp oracles for every collective live in :mod:`.chainwrite_ref`.
+The numpy twin of :func:`execute_program` is
+:func:`repro.core.chainwrite_ref.interpret_program`; both interpret the
+same program, so they agree BIT-exactly (the IR fixes the fold order).
 """
 
 from __future__ import annotations
@@ -53,14 +53,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .chainwrite_ref import ALL_REDUCE_ALGOS  # canonical algo names
+from . import program as prg
+from .program import ALL_REDUCE_ALGOS, ChainProgram, validate_ring_partition
 
 Axis = str | tuple[str, ...]
 
 # When True, ring/chain scans are fully unrolled. The dry-run sets this
 # so every ppermute appears as its own HLO op and the §Roofline
 # collective-bytes parser counts true wire traffic (a rolled scan's
-# body is counted once regardless of trip count).
+# body is counted once regardless of trip count). The stepped program
+# interpreter is always unrolled (its addressing tables are per-step
+# static); only the frame-pipelined broadcast scan consults this.
 _STATIC_UNROLL = False
 
 
@@ -70,8 +73,6 @@ def set_static_unroll(value: bool) -> None:
 
 
 def _scan(body, carry, xs):
-    import numpy as _np
-
     length = int(xs.shape[0]) if hasattr(xs, "shape") else len(xs)
     return lax.scan(
         body, carry, xs, unroll=length if _STATIC_UNROLL else 1
@@ -101,6 +102,310 @@ def _ppermute(x: jax.Array, axis_name: Axis, perm: list[tuple[int, int]]) -> jax
 
 
 # ---------------------------------------------------------------------------
+# The generic SPMD program executor
+# ---------------------------------------------------------------------------
+
+
+def _fanout(
+    buf: jax.Array, axis_name: Axis, edges: Sequence[tuple[int, int]], idx
+) -> jax.Array:
+    """One program step's hop. Unique-source edges fuse into a single
+    ppermute; each repeated source (the pipeline head's same-step
+    fan-out) costs its own permute (XLA's unique-source rule) — the
+    split :meth:`Step.num_permutes` accounts for."""
+    if not edges:
+        return jnp.zeros_like(buf)
+    seen: set[int] = set()
+    fused: list[tuple[int, int]] = []
+    extra: list[tuple[int, int]] = []
+    for e in edges:
+        if e[0] in seen:
+            extra.append(e)
+        else:
+            seen.add(e[0])
+            fused.append(e)
+    new = _ppermute(buf, axis_name, fused)
+    for e in extra:
+        r = _ppermute(buf, axis_name, [e])
+        new = jnp.where(idx == e[1], r, new)
+    return new
+
+
+def _rows_from(table, idx, source, keep=None):
+    """Per-device row select: ``result[j] = source[table[self][j]]``,
+    with ``-1`` giving ``keep[j]`` (same-width) or zeros."""
+    t = jnp.asarray(table)[idx]  # (width,)
+    safe = jnp.clip(t, 0, source.shape[0] - 1)
+    rows = source[safe]
+    mask = (t >= 0).reshape((-1,) + (1,) * (source.ndim - 1))
+    if keep is not None and keep.shape[0] == len(table[0]):
+        return jnp.where(mask, rows, keep)
+    return jnp.where(mask, rows, jnp.zeros_like(rows))
+
+
+def _one_step(buf, out, shards, axis_name, idx, step):
+    """One program step (the machine model of :mod:`repro.core.program`
+    verbatim): load -> hop -> combine -> write."""
+    if step.load is not None:
+        buf = _rows_from(step.load, idx, out, keep=buf)
+    buf = _fanout(buf, axis_name, step.edges, idx)
+    if step.combine == prg.ADD:
+        src = shards if step.add_from == "input" else out
+        buf = buf + _rows_from(step.add_src, idx, src)
+    if step.write is not None:
+        sparse = _sparse_write(step.write)
+        if sparse is not None:
+            rows_tbl, slots_tbl = sparse
+            out = _write_one(
+                buf, out, jnp.asarray(rows_tbl)[idx],
+                jnp.asarray(slots_tbl)[idx], step.write_op,
+            )
+        else:
+            t = jnp.asarray(step.write)[idx]  # (width,)
+            out = _write_dense(buf, out, t, step.width, step.write_op)
+    return buf, out
+
+
+def _sparse_write(table):
+    """When every device writes at most ONE buf row per step (e.g. the
+    all_to_all peel: width L, one live slot), the write collapses to a
+    single indexed update instead of a width-long guarded loop —
+    keeping HLO size O(L) rather than O(L^2) for the chunk train.
+    Returns per-device (buf_row, out_slot) tables, or None when some
+    device writes multiple slots."""
+    rows: list[int] = []
+    slots: list[int] = []
+    for drow in table:
+        live = [(j, s) for j, s in enumerate(drow) if s >= 0]
+        if len(live) > 1:
+            return None
+        j, s = live[0] if live else (0, -1)
+        rows.append(j)
+        slots.append(s)
+    return tuple(rows), tuple(slots)
+
+
+def _write_one(buf, out, row_t, slot_t, write_op):
+    """out[slot] (op)= buf[row] for this device; slot < 0 is a no-op."""
+    valid = slot_t >= 0
+    row_c = jnp.clip(row_t, 0, buf.shape[0] - 1)
+    val = lax.dynamic_index_in_dim(buf, row_c, 0, keepdims=False)
+    slot_c = jnp.clip(slot_t, 0, out.shape[0] - 1)
+    cur = lax.dynamic_index_in_dim(out, slot_c, 0, keepdims=False)
+    new = val if write_op == prg.COPY else cur + val
+    new = jnp.where(valid, new, cur)
+    return lax.dynamic_update_index_in_dim(out, new, slot_c, 0)
+
+
+def _write_dense(buf, out, slots, width, write_op):
+    for j in range(width):
+        slot = slots[j]
+        valid = slot >= 0
+        slot_c = jnp.clip(slot, 0, out.shape[0] - 1)
+        cur = lax.dynamic_index_in_dim(out, slot_c, 0, keepdims=False)
+        new = buf[j] if write_op == prg.COPY else cur + buf[j]
+        new = jnp.where(valid, new, cur)
+        out = lax.dynamic_update_index_in_dim(out, new, slot_c, 0)
+    return out
+
+
+def _uniform_runs(steps):
+    """Group consecutive steps that share edges/width/combine/write
+    structure (differing only in their addressing tables) so the
+    executor can roll each group into one ``lax.scan`` — keeping the
+    compiled HLO ring-length-independent as the pre-IR collectives
+    were. Steps with a ``load`` (phase boundaries) run standalone."""
+    runs: list[list] = []
+    key_prev = None
+    for s in steps:
+        key = (s.edges, s.width, s.combine, s.add_from,
+               s.add_src is None, s.write is None, s.write_op)
+        if s.load is None and runs and key_prev == key:
+            runs[-1].append(s)
+        else:
+            runs.append([s])
+        key_prev = key if s.load is None else None
+    return runs
+
+
+def _scan_run(buf, out, shards, axis_name, idx, run):
+    """Rolled execution of a uniform step run: the per-step addressing
+    tables stack into the scan's ``xs`` (pre-gathered to this device's
+    rows), the step structure lives in the body."""
+    s0 = run[0]
+    T = len(run)
+    dummy = jnp.zeros((T, 1), jnp.int32)
+    add_xs = (
+        jnp.asarray([s.add_src for s in run])[:, idx]
+        if s0.add_src is not None else dummy
+    )
+    sparse = None
+    write_xs = dummy
+    if s0.write is not None:
+        sparse_all = [_sparse_write(s.write) for s in run]
+        if all(sp is not None for sp in sparse_all):
+            sparse = (
+                jnp.asarray([sp[0] for sp in sparse_all])[:, idx],  # rows
+                jnp.asarray([sp[1] for sp in sparse_all])[:, idx],  # slots
+            )
+        else:
+            write_xs = jnp.asarray([s.write for s in run])[:, idx]
+
+    def body(carry, xs):
+        buf, out = carry
+        add_t, write_t, row_t, slot_t = xs
+        buf = _fanout(buf, axis_name, s0.edges, idx)
+        if s0.combine == prg.ADD:
+            src = shards if s0.add_from == "input" else out
+            safe = jnp.clip(add_t, 0, src.shape[0] - 1)
+            rows = src[safe]
+            mask = (add_t >= 0).reshape((-1,) + (1,) * (src.ndim - 1))
+            buf = buf + jnp.where(mask, rows, jnp.zeros_like(rows))
+        if s0.write is not None:
+            if sparse is not None:
+                out = _write_one(buf, out, row_t, slot_t, s0.write_op)
+            else:
+                out = _write_dense(buf, out, write_t, s0.width, s0.write_op)
+        return (buf, out), None
+
+    row_xs, slot_xs = sparse if sparse is not None else (
+        jnp.zeros((T,), jnp.int32), jnp.zeros((T,), jnp.int32)
+    )
+    (buf, out), _ = lax.scan(
+        body, (buf, out), (add_xs, write_xs, row_xs, slot_xs)
+    )
+    return buf, out
+
+
+def _run_stepped(shards: jax.Array, axis_name: Axis, prog: ChainProgram) -> jax.Array:
+    """Interpret a program over pre-blocked input ``shards``
+    (``(addr_shards, m, ...)`` per device); returns the
+    ``(out_slots, m, ...)`` output slots.
+
+    Uniform step runs (same edges/structure, different tables — the
+    RS/AG/rotation/cross phases of the ring collectives) execute as one
+    rolled ``lax.scan`` each, so compiled HLO size stays independent of
+    the ring length; ``set_static_unroll(True)`` (the dry-run's
+    HLO-byte-parsing mode) unrolls every step into its own ppermute.
+    """
+    idx = _axis_index(axis_name)
+    buf = _rows_from(prog.buf_init, idx, shards)
+    out = _rows_from(prog.out_init, idx, shards)
+    for run in _uniform_runs(prog.steps):
+        if len(run) == 1 or _STATIC_UNROLL:
+            for step in run:
+                buf, out = _one_step(buf, out, shards, axis_name, idx, step)
+        else:
+            buf, out = _scan_run(buf, out, shards, axis_name, idx, run)
+    return out
+
+
+def _execute_pipeline(
+    x: jax.Array, axis_name: Axis, prog: ChainProgram, num_frames: int
+) -> jax.Array:
+    """Broadcast-kind programs: the stepped interpreter for a single
+    frame, or the store-and-forward frame-pipelined scan (all chains'
+    edges applied every slot; one scan step per frame-hop slot,
+    F + L - 2 total)."""
+    if num_frames <= 1 or not prog.steps:
+        return _run_stepped(x[None], axis_name, prog)[0]
+
+    if x.shape[0] % num_frames != 0:
+        raise ValueError(
+            f"leading dim {x.shape[0]} not divisible by num_frames={num_frames}"
+        )
+    head = int(prog.head)
+    idx = _axis_index(axis_name)
+    is_head = idx == head
+    x = jnp.where(is_head, x, jnp.zeros_like(x))
+    frames = x.reshape((num_frames, x.shape[0] // num_frames) + x.shape[1:])
+
+    # Static per-device chain position: 0 = head, p >= 1 = receiver of
+    # step p-1 (its chain depth), max_len = non-member (out of range).
+    max_len = len(prog.steps) + 1
+    pos_np = [max_len] * prog.num_devices
+    pos_np[head] = 0
+    for t, step in enumerate(prog.steps):
+        for _, dst in step.edges:
+            pos_np[dst] = t + 1
+    pos = jnp.asarray(pos_np)[idx]
+    member = pos < max_len
+    all_edges = [e for step in prog.steps for e in step.edges]
+    T = num_frames + max_len - 2  # scan steps (longest chain's fill)
+
+    def step(carry, t):
+        buf, out = carry
+        t_clamped = jnp.minimum(t, num_frames - 1)
+        inject = lax.dynamic_index_in_dim(frames, t_clamped, axis=0, keepdims=False)
+        buf = jnp.where(is_head & (t < num_frames), inject, buf)
+        buf = _fanout(buf, axis_name, all_edges, idx)
+        # After hop t, the member at chain position p holds frame t-(p-1).
+        fidx = t - (pos - 1)
+        valid = member & (pos > 0) & (fidx >= 0) & (fidx < num_frames)
+        fidx_c = jnp.clip(fidx, 0, num_frames - 1)
+        current = lax.dynamic_index_in_dim(out, fidx_c, axis=0, keepdims=False)
+        new = jnp.where(valid, buf, current)
+        out = lax.dynamic_update_index_in_dim(out, new, fidx_c, axis=0)
+        return (buf, out), None
+
+    buf0 = jnp.zeros_like(frames[0])
+    out0 = jnp.where(is_head, frames, jnp.zeros_like(frames))
+    (_, out), _ = _scan(step, (buf0, out0), jnp.arange(T))
+    return out.reshape(x.shape)
+
+
+def execute_program(
+    x: jax.Array,
+    axis_name: Axis,
+    prog: ChainProgram,
+    *,
+    num_frames: int = 1,
+    tiled: bool = False,
+) -> jax.Array:
+    """Run a :class:`ChainProgram` inside ``shard_map``.
+
+    Handles the per-collective input blocking / output assembly around
+    the one generic interpreter: ``broadcast`` takes/returns the whole
+    payload (``num_frames`` pipelines it); ``all_gather`` stacks (or,
+    ``tiled``, concatenates) device-id-indexed shards;
+    ``reduce_scatter``/``all_to_all`` take ``(L, ...)`` chunk trains;
+    ``all_reduce`` zero-pads the leading dim to the program's shard
+    count and unpads on the way out.
+    """
+    L = prog.num_devices
+    if _axis_size(axis_name) != L:
+        raise ValueError(
+            f"program planned for {L} devices, axis has {_axis_size(axis_name)}"
+        )
+    c = prog.collective
+    if c == "broadcast":
+        return _execute_pipeline(x, axis_name, prog, num_frames)
+    if c == "all_gather":
+        out = _run_stepped(x[None], axis_name, prog)
+        if tiled:
+            out = out.reshape((L * x.shape[0],) + x.shape[1:])
+        return out
+    if c in ("reduce_scatter", "all_to_all"):
+        if x.shape[0] != L:
+            raise ValueError(f"leading dim {x.shape[0]} != axis size {L}")
+        out = _run_stepped(x, axis_name, prog)
+        return out[0] if c == "reduce_scatter" else out
+    if c == "all_reduce":
+        S = prog.addr_shards
+        lead = x.shape[0]
+        pad = (-lead) % S
+        xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+        shards = xp.reshape((S, xp.shape[0] // S) + x.shape[1:])
+        out = _run_stepped(shards, axis_name, prog)
+        if prog.out_slots == 1:  # rotation: whole payload in one slot
+            full = out[0]
+        else:
+            full = out.reshape((out.shape[0] * out.shape[1],) + x.shape[1:])
+        return full[:lead] if pad else full
+    raise ValueError(f"unknown collective {c!r}")
+
+
+# ---------------------------------------------------------------------------
 # P2MP broadcast (the paper's core operation)
 # ---------------------------------------------------------------------------
 
@@ -125,77 +430,18 @@ def chain_broadcast(
     order = tuple(int(o) for o in order)
     if len(order) == 0:
         raise ValueError("empty chain")
-    head = order[0]
-    idx = _axis_index(axis_name)
-    is_head = idx == head
-    x = jnp.where(is_head, x, jnp.zeros_like(x))
-    if len(order) == 1:
-        return x
-    edges = chain_edges(order, wrap=False)
-
-    if num_frames <= 1:
-        # Non-pipelined: the whole payload hops down the chain, one
-        # sequential ppermute per edge; every member keeps a copy as the
-        # payload passes through (store-and-forward of a single frame).
-        out = x
-        buf = x
-        order_arr = jnp.asarray(order)
-        for step in range(len(order) - 1):
-            buf = _ppermute(buf, axis_name, [edges[step]])
-            receiver = order_arr[step + 1]
-            out = jnp.where(idx == receiver, buf, out)
-        return out
-
-    if x.shape[0] % num_frames != 0:
-        raise ValueError(
-            f"leading dim {x.shape[0]} not divisible by num_frames={num_frames}"
-        )
-    frames = x.reshape((num_frames, x.shape[0] // num_frames) + x.shape[1:])
-    order_arr = jnp.asarray(order)
-    # Ring position of this device in the chain; -1 (→ L, clamped out of
-    # range) for non-members.
-    member = (order_arr == idx).any()
-    pos = jnp.argmax(order_arr == idx)  # 0 if non-member; masked below
-    L = len(order)
-    T = num_frames + L - 2  # scan steps
-
-    def step(carry, t):
-        buf, out = carry
-        # Head injects frame t while frames remain; members forward the
-        # frame they hold. (Head's "buf" is its injection register.)
-        t_clamped = jnp.minimum(t, num_frames - 1)
-        inject = lax.dynamic_index_in_dim(frames, t_clamped, axis=0, keepdims=False)
-        buf = jnp.where(is_head & (t < num_frames), inject, buf)
-        buf = _ppermute(buf, axis_name, edges)
-        # After hop t, the device at chain position p holds frame t-(p-1).
-        fidx = t - (pos - 1)
-        valid = member & (pos > 0) & (fidx >= 0) & (fidx < num_frames)
-        fidx_c = jnp.clip(fidx, 0, num_frames - 1)
-        current = lax.dynamic_index_in_dim(out, fidx_c, axis=0, keepdims=False)
-        new = jnp.where(valid, buf, current)
-        out = lax.dynamic_update_index_in_dim(out, new, fidx_c, axis=0)
-        return (buf, out), None
-
-    buf0 = jnp.zeros_like(frames[0])
-    out0 = jnp.where(is_head, frames, jnp.zeros_like(frames))
-    (_, out), _ = _scan(step, (buf0, out0), jnp.arange(T))
-    return out.reshape(x.shape)
+    prog = prg.plan_broadcast(
+        _axis_size(axis_name), order[0], (order[1:],) if len(order) > 1 else ()
+    )
+    return execute_program(x, axis_name, prog, num_frames=num_frames)
 
 
 def _validate_multi_chains(
     head: int, chains: Sequence[Sequence[int]]
-) -> list[tuple[int, ...]]:
-    clean = [tuple(int(d) for d in c) for c in chains if len(c)]
+) -> tuple[tuple[int, ...], ...]:
+    clean = prg.validate_chains(head, chains)
     if not clean:
         raise ValueError("empty chain set")
-    seen: set[int] = set()
-    for c in clean:
-        for d in c:
-            if d == head:
-                raise ValueError("head cannot appear inside a chain")
-            if d in seen:
-                raise ValueError(f"destination {d} appears in two chains")
-            seen.add(d)
     return clean
 
 
@@ -219,84 +465,12 @@ def multi_chain_broadcast(
     ``num_frames + max_chain_len - 1`` frame-hop slots instead of
     ``num_frames * max_chain_len``.
 
-    K=1 computes exactly ``chain_broadcast(x, axis, (head, *chains[0]))``.
+    K=1 computes exactly ``chain_broadcast(x, axis, (head, *chains[0]))``
+    (they interpret the identical program).
     """
     chains = _validate_multi_chains(int(head), chains)
-    head = int(head)
-    if len(chains) == 1:
-        return chain_broadcast(
-            x, axis_name, (head,) + chains[0], num_frames=num_frames
-        )
-
-    idx = _axis_index(axis_name)
-    is_head = idx == head
-    x = jnp.where(is_head, x, jnp.zeros_like(x))
-    full = [(head,) + c for c in chains]  # per-chain node traversal
-    max_len = max(len(f) for f in full)
-
-    # Static per-device chain position: pos 0 = head, p >= 1 = p-th
-    # member of its (unique) chain, L (out of range) = non-member.
-    L_axis = _axis_size(axis_name)
-    pos_np = [max_len] * L_axis
-    pos_np[head] = 0
-    for f in full:
-        for p, d in enumerate(f[1:], start=1):
-            pos_np[d] = p
-    pos = jnp.asarray(pos_np)[idx]
-    member = pos < max_len
-
-    def fanout(buf: jax.Array, edges: list[tuple[int, int]]) -> jax.Array:
-        """One hop of every chain. All intra-chain edges (plus the
-        first head edge) have unique sources/targets -> one fused
-        ppermute; the head's remaining same-step sends need their own
-        ppermutes (unique-source rule)."""
-        head_edges = [e for e in edges if e[0] == head]
-        fused = [e for e in edges if e[0] != head] + head_edges[:1]
-        new = _ppermute(buf, axis_name, fused) if fused else jnp.zeros_like(buf)
-        for e in head_edges[1:]:
-            r = _ppermute(buf, axis_name, [e])
-            new = jnp.where(idx == e[1], r, new)
-        return new
-
-    if num_frames <= 1:
-        out = x
-        buf = x
-        for step in range(max_len - 1):
-            edges = [
-                (f[step], f[step + 1]) for f in full if step + 1 < len(f)
-            ]
-            buf = fanout(buf, edges)
-            receivers = jnp.asarray([e[1] for e in edges])
-            out = jnp.where((idx == receivers).any(), buf, out)
-        return out
-
-    if x.shape[0] % num_frames != 0:
-        raise ValueError(
-            f"leading dim {x.shape[0]} not divisible by num_frames={num_frames}"
-        )
-    frames = x.reshape((num_frames, x.shape[0] // num_frames) + x.shape[1:])
-    all_edges = [e for f in full for e in zip(f, f[1:])]
-    T = num_frames + max_len - 2  # scan steps (longest chain's fill)
-
-    def step(carry, t):
-        buf, out = carry
-        t_clamped = jnp.minimum(t, num_frames - 1)
-        inject = lax.dynamic_index_in_dim(frames, t_clamped, axis=0, keepdims=False)
-        buf = jnp.where(is_head & (t < num_frames), inject, buf)
-        buf = fanout(buf, all_edges)
-        # After hop t, the member at chain position p holds frame t-(p-1).
-        fidx = t - (pos - 1)
-        valid = member & (pos > 0) & (fidx >= 0) & (fidx < num_frames)
-        fidx_c = jnp.clip(fidx, 0, num_frames - 1)
-        current = lax.dynamic_index_in_dim(out, fidx_c, axis=0, keepdims=False)
-        new = jnp.where(valid, buf, current)
-        out = lax.dynamic_update_index_in_dim(out, new, fidx_c, axis=0)
-        return (buf, out), None
-
-    buf0 = jnp.zeros_like(frames[0])
-    out0 = jnp.where(is_head, frames, jnp.zeros_like(frames))
-    (_, out), _ = _scan(step, (buf0, out0), jnp.arange(T))
-    return out.reshape(x.shape)
+    prog = prg.plan_broadcast(_axis_size(axis_name), int(head), chains)
+    return execute_program(x, axis_name, prog, num_frames=num_frames)
 
 
 def degraded_chains(
@@ -349,8 +523,8 @@ def degraded_multi_chain_broadcast(
         raise ValueError("the initiator (head) cannot be dropped")
     remaining = degraded_chains(chains, failed)
     if not remaining:  # every destination failed: head keeps its payload
-        idx = _axis_index(axis_name)
-        return jnp.where(idx == head, x, jnp.zeros_like(x))
+        prog = prg.plan_broadcast(_axis_size(axis_name), head, ())
+        return execute_program(x, axis_name, prog, num_frames=num_frames)
     return multi_chain_broadcast(
         x, axis_name, head, remaining, num_frames=num_frames
     )
@@ -359,6 +533,23 @@ def degraded_multi_chain_broadcast(
 # ---------------------------------------------------------------------------
 # Ring collectives over a scheduled order
 # ---------------------------------------------------------------------------
+
+
+def _ring_args(
+    axis_name: Axis, order: Sequence[int] | None
+) -> tuple[int, tuple[int, ...]]:
+    L = _axis_size(axis_name)
+    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
+    if sorted(order) != list(range(L)):
+        raise ValueError("ring order must be a permutation of the whole axis")
+    return L, order
+
+
+def _ring_partition(
+    axis_name: Axis, orders: Sequence[Sequence[int]]
+) -> tuple[int, tuple[tuple[int, ...], ...]]:
+    L = _axis_size(axis_name)
+    return L, tuple(validate_ring_partition(L, orders))
 
 
 def chain_all_gather(
@@ -375,29 +566,27 @@ def chain_all_gather(
     id along the axis* (standard all_gather semantics, so this is a
     drop-in for ``lax.all_gather`` regardless of ring order).
     """
-    L = _axis_size(axis_name)
-    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
-    if sorted(order) != list(range(L)):
-        raise ValueError("ring order must be a permutation of the whole axis")
-    idx = _axis_index(axis_name)
-    order_arr = jnp.asarray(order)
-    pos = jnp.argmax(order_arr == idx)
-    edges = chain_edges(order, wrap=True)
+    L, order = _ring_args(axis_name, order)
+    prog = prg.plan_all_gather(L, (order,))
+    return execute_program(x, axis_name, prog, tiled=tiled)
 
-    out = jnp.zeros((L,) + x.shape, x.dtype)
-    out = lax.dynamic_update_index_in_dim(out, x, idx, axis=0)
 
-    def step(carry, s):
-        buf, out = carry
-        buf = _ppermute(buf, axis_name, edges)
-        src = order_arr[(pos - s) % L]  # origin device of the shard just received
-        out = lax.dynamic_update_index_in_dim(out, buf, src, axis=0)
-        return (buf, out), None
-
-    (_, out), _ = _scan(step, (x, out), jnp.arange(1, L))
-    if tiled:
-        out = out.reshape((L * x.shape[0],) + x.shape[1:])
-    return out
+def multi_chain_all_gather(
+    x: jax.Array,
+    axis_name: Axis,
+    orders: Sequence[Sequence[int]],
+    *,
+    tiled: bool = False,
+) -> jax.Array:
+    """All-gather over K disjoint equal-size sub-rings: per-ring
+    all-gather (S-1 fused 1-shard steps), then a cross-ring exchange of
+    the gathered ring blocks (K-1 width-S steps) — (S-1) + (K-1)·S =
+    L-1 shards of wire per device, exactly the single ring's, with
+    every hop ring-local or position-paired. K=1 delegates to
+    :func:`chain_all_gather`'s schedule."""
+    L, orders = _ring_partition(axis_name, orders)
+    prog = prg.plan_all_gather(L, orders)
+    return execute_program(x, axis_name, prog, tiled=tiled)
 
 
 def chain_reduce_scatter(
@@ -411,32 +600,25 @@ def chain_reduce_scatter(
     returns the fully-reduced chunk owned by this device
     (``sum_over_devices(x)[my_id]``).
     """
-    L = _axis_size(axis_name)
-    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
-    if sorted(order) != list(range(L)):
-        raise ValueError("ring order must be a permutation of the whole axis")
-    if x.shape[0] != L:
-        raise ValueError(f"leading dim {x.shape[0]} != axis size {L}")
-    idx = _axis_index(axis_name)
-    order_arr = jnp.asarray(order)
-    pos = jnp.argmax(order_arr == idx)
-    edges = chain_edges(order, wrap=True)
+    L, order = _ring_args(axis_name, order)
+    prog = prg.plan_reduce_scatter(L, (order,))
+    return execute_program(x, axis_name, prog)
 
-    # Chunks are addressed by ring position: the chunk that must end at
-    # ring position p is the one for device order[p]. The partial for
-    # position j starts at position j+1 (holding its local chunk) and
-    # travels L-1 hops, accumulating every member's contribution.
-    start_chunk = order_arr[(pos - 1) % L]
-    buf = lax.dynamic_index_in_dim(x, start_chunk, axis=0, keepdims=False)
 
-    def step(buf, s):
-        buf = _ppermute(buf, axis_name, edges)
-        j = order_arr[(pos - s - 1) % L]
-        buf = buf + lax.dynamic_index_in_dim(x, j, axis=0, keepdims=False)
-        return buf, None
-
-    buf, _ = _scan(step, buf, jnp.arange(1, L))
-    return buf
+def multi_chain_reduce_scatter(
+    x: jax.Array,
+    axis_name: Axis,
+    orders: Sequence[Sequence[int]],
+) -> jax.Array:
+    """Reduce-scatter over K disjoint equal-size sub-rings: per-ring
+    reduce-scatter of width-K chunk *groups* (S-1 steps), then a
+    cross-ring reduce-scatter of each group (K-1 single-chunk steps) —
+    (S-1)·K + (K-1) = L-1 chunks of wire per device, matching the
+    single ring. K=1 delegates to :func:`chain_reduce_scatter`'s
+    schedule."""
+    L, orders = _ring_partition(axis_name, orders)
+    prog = prg.plan_reduce_scatter(L, orders)
+    return execute_program(x, axis_name, prog)
 
 
 def chain_all_reduce(
@@ -446,43 +628,9 @@ def chain_all_reduce(
 ) -> jax.Array:
     """Ring all-reduce = reduce-scatter + all-gather on the scheduled
     ring (bandwidth-optimal: 2·(L-1)/L of the payload per link)."""
-    L = _axis_size(axis_name)
-    lead = x.shape[0]
-    pad = (-lead) % L
-    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
-    chunks = xp.reshape((L, xp.shape[0] // L) + x.shape[1:])
-    own = chain_reduce_scatter(chunks, axis_name, order)
-    full = chain_all_gather(own, axis_name, order, tiled=True)
-    return full[:lead] if pad else full
-
-
-def validate_ring_partition(
-    axis_size: int, orders: Sequence[Sequence[int]]
-) -> list[tuple[int, ...]]:
-    """Clean + validate K disjoint equal-size sub-rings covering the
-    whole axis. Pure host-side helper (no axis context needed) shared
-    by :func:`multi_chain_all_reduce` and the property tests."""
-    clean = [tuple(int(o) for o in c) for c in orders if len(c)]
-    if not clean:
-        raise ValueError("empty ring set")
-    S = len(clean[0])
-    if any(len(c) != S for c in clean):
-        raise ValueError("sub-rings must have equal sizes")
-    flat = [d for c in clean for d in c]
-    if sorted(flat) != list(range(axis_size)):
-        raise ValueError("sub-rings must partition the whole axis")
-    return clean
-
-
-def _cross_ring_edges(orders: Sequence[tuple[int, ...]]) -> list[tuple[int, int]]:
-    """Rotation edges across rings: local position r of ring c -> local
-    position r of ring (c+1) % K — one fused ppermute per step."""
-    K, S = len(orders), len(orders[0])
-    return [
-        (orders[c][r], orders[(c + 1) % K][r])
-        for c in range(K)
-        for r in range(S)
-    ]
+    L, order = _ring_args(axis_name, order)
+    prog = prg.plan_all_reduce(L, (order,))
+    return execute_program(x, axis_name, prog)
 
 
 def multi_chain_all_reduce(
@@ -522,95 +670,9 @@ def multi_chain_all_reduce(
     """
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
-    orders = validate_ring_partition(_axis_size(axis_name), orders)
-    if len(orders) == 1:
-        return chain_all_reduce(x, axis_name, orders[0])
-    if algo == "rotation":
-        return _multi_ring_rotation(x, axis_name, orders)
-    return _multi_ring_rs_ag(x, axis_name, orders)
-
-
-def _multi_ring_rotation(
-    x: jax.Array, axis_name: Axis, orders: list[tuple[int, ...]]
-) -> jax.Array:
-    """PR 1 rotation schedule: full-payload rotations, S+K-2 steps."""
-    K, S = len(orders), len(orders[0])
-
-    # Stage 1 — within-ring rotation all-reduce (fused across rings).
-    intra = [e for c in orders for e in chain_edges(c, wrap=True)]
-    acc = x
-    buf = x
-    for _ in range(S - 1):
-        buf = _ppermute(buf, axis_name, intra)
-        acc = acc + buf
-
-    # Stage 2 — across-ring rotation of the ring partials.
-    cross = _cross_ring_edges(orders)
-    buf = acc
-    out = acc
-    for _ in range(K - 1):
-        buf = _ppermute(buf, axis_name, cross)
-        out = out + buf
-    return out
-
-
-def _multi_ring_rs_ag(
-    x: jax.Array, axis_name: Axis, orders: list[tuple[int, ...]]
-) -> jax.Array:
-    """Fused per-ring reduce-scatter -> cross-ring shard rotation ->
-    fused per-ring all-gather. Shards are addressed by *ring position*
-    (shard j of the payload ends, fully reduced, at local position j of
-    every ring), so the cross-ring exchange at position r always pairs
-    partials of the same shard."""
-    K, S = len(orders), len(orders[0])
-    idx = _axis_index(axis_name)
-
-    # Static ring position of every device (each appears in exactly one
-    # ring — validated by the caller).
-    pos_np = [0] * (K * S)
-    for c in orders:
-        for p, d in enumerate(c):
-            pos_np[d] = p
-    pos = jnp.asarray(pos_np)[idx]
-
-    lead = x.shape[0]
-    pad = (-lead) % S
-    xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
-    shards = xp.reshape((S, xp.shape[0] // S) + x.shape[1:])
-
-    intra = [e for c in orders for e in chain_edges(c, wrap=True)]
-
-    # Stage 1 — fused per-ring reduce-scatter: the partial for position
-    # j starts one hop downstream (position j+1, holding its local
-    # shard) and travels S-1 hops, accumulating every ring member's
-    # contribution; 1/S payload per step.
-    buf = lax.dynamic_index_in_dim(shards, (pos - 1) % S, axis=0, keepdims=False)
-    for s in range(1, S):
-        buf = _ppermute(buf, axis_name, intra)
-        j = (pos - s - 1) % S
-        buf = buf + lax.dynamic_index_in_dim(shards, j, axis=0, keepdims=False)
-
-    # Stage 2 — rotate the ring-reduced shards across rings (K-1 steps,
-    # still 1/S payload — the bandwidth collapse vs full-payload
-    # rotation). Each device forwards the partial it received while
-    # accumulating: after K-1 steps position r holds the global sum of
-    # shard r.
-    cross = _cross_ring_edges(orders)
-    acc = buf
-    for _ in range(K - 1):
-        buf = _ppermute(buf, axis_name, cross)
-        acc = acc + buf
-
-    # Stage 3 — fused per-ring all-gather of the S reduced shards.
-    out = jnp.zeros_like(shards)
-    out = lax.dynamic_update_index_in_dim(out, acc, pos, axis=0)
-    buf = acc
-    for s in range(1, S):
-        buf = _ppermute(buf, axis_name, intra)
-        src = (pos - s) % S
-        out = lax.dynamic_update_index_in_dim(out, buf, src, axis=0)
-    full = out.reshape((S * shards.shape[1],) + x.shape[1:])
-    return full[:lead] if pad else full
+    L, orders = _ring_partition(axis_name, orders)
+    prog = prg.plan_all_reduce(L, orders, algo)
+    return execute_program(x, axis_name, prog)
 
 
 def chain_all_to_all(
@@ -627,34 +689,24 @@ def chain_all_to_all(
     keeps the chunk addressed to it — each chunk travels exactly its
     ring distance, the chain analogue of per-pair P2P transfers.
     """
-    L = _axis_size(axis_name)
-    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
-    if sorted(order) != list(range(L)):
-        raise ValueError("ring order must be a permutation of the whole axis")
-    if x.shape[0] != L:
-        raise ValueError(f"leading dim {x.shape[0]} != axis size {L}")
-    idx = _axis_index(axis_name)
-    order_arr = jnp.asarray(order)
-    pos = jnp.argmax(order_arr == idx)
-    edges = chain_edges(order, wrap=True)
+    L, order = _ring_args(axis_name, order)
+    prog = prg.plan_all_to_all(L, (order,))
+    return execute_program(x, axis_name, prog)
 
-    out = jnp.zeros_like(x)
-    out = lax.dynamic_update_index_in_dim(
-        out, lax.dynamic_index_in_dim(x, idx, axis=0, keepdims=False), idx, axis=0
-    )
 
-    def step(carry, s):
-        buf, out = carry
-        buf = _ppermute(buf, axis_name, edges)
-        # After s hops, this device holds the chunk-train of the ring
-        # predecessor at distance s: origin device order[(pos - s) % L].
-        src = order_arr[(pos - s) % L]
-        mine = lax.dynamic_index_in_dim(buf, idx, axis=0, keepdims=False)
-        out = lax.dynamic_update_index_in_dim(out, mine, src, axis=0)
-        return (buf, out), None
-
-    (_, out), _ = _scan(step, (x, out), jnp.arange(1, L))
-    return out
+def multi_chain_all_to_all(
+    x: jax.Array,
+    axis_name: Axis,
+    orders: Sequence[Sequence[int]],
+) -> jax.Array:
+    """All-to-all over K disjoint equal-size sub-rings: intra-ring
+    rotations interleaved with cross-ring hops (K·(S-1) + (K-1) = L-1
+    full-train steps — a chunk train cannot shrink, so the wire bytes
+    match the single ring; every hop is ring-local or position-paired).
+    K=1 delegates to :func:`chain_all_to_all`'s schedule."""
+    L, orders = _ring_partition(axis_name, orders)
+    prog = prg.plan_all_to_all(L, orders)
+    return execute_program(x, axis_name, prog)
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,26 @@
 """Pure-numpy oracles for the Chainwrite collectives.
 
+Two layers of oracle live here:
+
+* **Semantic oracles** (``broadcast_ref``, ``all_gather_ref``,
+  ``reduce_scatter_ref``, ``all_reduce_ref``, ``all_to_all_ref``, ...)
+  state what each collective must *compute*, independent of any
+  schedule — the ground truth the planners are checked against.
+
+* **The program interpreter** (:func:`interpret_program` /
+  :func:`run_program_ref`) replays any
+  :class:`~repro.core.program.ChainProgram` step for step on the
+  global ``(L, ...)`` view — the numpy twin of
+  ``chainwrite.execute_program``. Because both backends interpret the
+  SAME program (same permutes, same left-folded additions), the SPMD
+  collectives are pinned BIT-exactly against it: float addition is not
+  associative, so value equality up to reassociation would hide
+  scheduling bugs. This one interpreter replaces the hand-written
+  per-collective replays that previously lived here.
+
 Each function takes the *global* view — ``xs[d]`` is device ``d``'s
-input along the axis — and returns the global stacked outputs, defining
-the semantics :mod:`.chainwrite` must match for any scheduled order.
-Used by tests/test_chainwrite_collectives.py.
+input along the axis — and returns the global stacked outputs.
+Used by tests/test_chainwrite_collectives.py and friends.
 """
 
 from __future__ import annotations
@@ -12,10 +29,12 @@ from typing import Sequence
 
 import numpy as np
 
-# Canonical multi-ring all-reduce schedule names. Defined here (the
-# dependency-light numpy module) so the SPMD layer, the simulator and
-# the CLI all validate against ONE tuple.
-ALL_REDUCE_ALGOS = ("rs_ag", "rotation")
+from . import program as prg
+
+# Canonical multi-ring all-reduce schedule names (re-exported from the
+# schedule IR so the SPMD layer, the simulator and the CLI keep
+# validating against ONE tuple).
+ALL_REDUCE_ALGOS = prg.ALL_REDUCE_ALGOS
 
 
 def broadcast_ref(
@@ -88,162 +107,138 @@ def all_to_all_ref(xs: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Schedule-simulating multi-ring all-reduce oracles
+# The numpy program interpreter
 # ---------------------------------------------------------------------------
-#
-# ``all_reduce_ref`` defines the *semantics* (sum everywhere); the
-# oracles below additionally replay the exact per-step permute/add
-# order of ``chainwrite.multi_chain_all_reduce``'s two schedules, so
-# tests can pin the SPMD collectives BIT-exactly (float addition is not
-# associative — value equality up to reassociation would hide
-# scheduling bugs).
 
 
-def _permute(bufs: np.ndarray, edges) -> np.ndarray:
-    """Numpy twin of ``lax.ppermute``: dst receives src's buffer;
-    devices no edge targets receive zeros."""
-    out = np.zeros_like(bufs)
-    for src, dst in edges:
-        out[dst] = bufs[src]
+def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
+    """Replay ``prog`` on the global pre-blocked view ``shards``
+    (``(L, addr_shards, m, ...)``); returns the global out slots
+    ``(L, out_slots, m, ...)``. Implements the machine model documented
+    in :mod:`repro.core.program` verbatim — the numpy twin of
+    ``chainwrite.execute_program``."""
+    L = prog.num_devices
+    if shards.shape[0] != L or shards.shape[1] != prog.addr_shards:
+        raise ValueError(
+            f"shards {shards.shape} incompatible with program "
+            f"(L={L}, addr_shards={prog.addr_shards})"
+        )
+    inner = shards.shape[2:]
+
+    def rows(table, source, keep=None):
+        width = len(table[0])
+        out = np.zeros((L, width) + inner, shards.dtype)
+        for d in range(L):
+            for j in range(width):
+                v = table[d][j]
+                if v >= 0:
+                    out[d, j] = source[d, v]
+                elif keep is not None and keep.shape[1] == width:
+                    out[d, j] = keep[d, j]
+        return out
+
+    buf = rows(prog.buf_init, shards)
+    out = rows(prog.out_init, shards)
+    for step in prog.steps:
+        if step.load is not None:
+            buf = rows(step.load, out, keep=buf)
+        new = np.zeros((L, step.width) + inner, shards.dtype)
+        for src, dst in step.edges:
+            new[dst] = buf[src]
+        buf = new
+        if step.combine == prg.ADD:
+            source = shards if step.add_from == "input" else out
+            buf = buf + rows(step.add_src, source)
+        if step.write is not None:
+            for d in range(L):
+                for j in range(step.width):
+                    slot = step.write[d][j]
+                    if slot >= 0:
+                        if step.write_op == prg.COPY:
+                            out[d, slot] = buf[d, j]
+                        else:
+                            out[d, slot] = out[d, slot] + buf[d, j]
     return out
 
 
-def _ring_maps(orders):
-    """(intra_edges, cross_edges, pos) for K equal-size rings."""
-    orders = [tuple(int(d) for d in c) for c in orders]
-    K, S = len(orders), len(orders[0])
-    L = K * S
-    intra = [
-        (c[p], c[(p + 1) % S]) for c in orders for p in range(S)
-    ] if S > 1 else []
-    cross = [
-        (orders[c][r], orders[(c + 1) % K][r])
-        for c in range(K)
-        for r in range(S)
-    ]
-    pos = np.zeros(L, dtype=int)
-    for c in orders:
-        for p, d in enumerate(c):
-            pos[d] = p
-    return intra, cross, pos
+def run_program_ref(
+    xs: np.ndarray, prog: prg.ChainProgram, *, tiled: bool = False
+) -> np.ndarray:
+    """:func:`interpret_program` plus the same per-collective input
+    blocking / output assembly as ``chainwrite.execute_program`` —
+    global in, global out."""
+    L = prog.num_devices
+    if xs.shape[0] != L:
+        raise ValueError(f"global view has {xs.shape[0]} rows, expected {L}")
+    c = prog.collective
+    if c in ("broadcast", "all_gather"):
+        out = interpret_program(xs[:, None], prog)
+        if c == "broadcast":
+            return out[:, 0]
+        if tiled:
+            return out.reshape((L, L * xs.shape[1]) + xs.shape[2:])
+        return out
+    if c in ("reduce_scatter", "all_to_all"):
+        if xs.shape[1] != L:
+            raise ValueError(f"leading dim {xs.shape[1]} != axis size {L}")
+        out = interpret_program(xs, prog)
+        return out[:, 0] if c == "reduce_scatter" else out
+    if c == "all_reduce":
+        S = prog.addr_shards
+        lead = xs.shape[1]
+        pad = (-lead) % S
+        xp = (
+            np.pad(xs, [(0, 0), (0, pad)] + [(0, 0)] * (xs.ndim - 2))
+            if pad
+            else xs
+        )
+        shards = xp.reshape((L, S, xp.shape[1] // S) + xs.shape[2:])
+        out = interpret_program(shards, prog)
+        if prog.out_slots == 1:  # rotation: whole payload in one slot
+            full = out[:, 0]
+        else:
+            full = out.reshape((L, out.shape[1] * out.shape[2]) + xs.shape[2:])
+        return full[:, :lead] if pad else full
+    raise ValueError(f"unknown collective {c!r}")
 
 
 def multi_all_reduce_ref(
     xs: np.ndarray, orders, algo: str = "rs_ag"
 ) -> np.ndarray:
-    """Oracle for ``multi_chain_all_reduce``: replays the schedule
-    step-for-step (same permutes, same left-folded additions) so the
-    SPMD result matches bit-exactly. ``xs`` is the (L, n, ...) global
-    view. K=1 delegates — like the SPMD implementation — to the
-    single-ring reduce-scatter + all-gather for either ``algo``.
+    """Oracle for ``multi_chain_all_reduce``: plans the same
+    :class:`ChainProgram` the SPMD collective executes and replays it
+    with :func:`run_program_ref`, so the result matches bit-exactly.
+    ``xs`` is the (L, n, ...) global view. K=1 is — like the SPMD
+    implementation — the single-ring reduce-scatter + all-gather with
+    device-id chunk addressing, for either ``algo``.
     """
-    orders = [tuple(int(d) for d in c) for c in orders if len(c)]
+    orders = tuple(tuple(int(d) for d in c) for c in orders if len(c))
     if not orders:
         raise ValueError("empty ring set")
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
-    if len(orders) == 1:
-        return _chain_rs_ag_ref(xs, orders[0])
-    if algo == "rotation":
-        return _multi_rotation_ref(xs, orders)
-    return _multi_rs_ag_ref(xs, orders)
+    prog = prg.plan_all_reduce(xs.shape[0], orders, algo)
+    return run_program_ref(xs, prog)
 
 
-def _chain_rs_ag_ref(xs: np.ndarray, order) -> np.ndarray:
-    """Replays ``chain_all_reduce`` (single-ring reduce-scatter +
-    all-gather) exactly: chunks are addressed by *device id* — the K=1
-    delegation path of ``multi_chain_all_reduce`` — which for scheduled
-    (non-identity) ring orders folds each chunk's additions along a
-    different ring segment than position addressing would."""
-    order = tuple(int(d) for d in order)
-    L = xs.shape[0]
-    lead = xs.shape[1]
-    padw = (-lead) % L
-    xp = (
-        np.pad(xs, [(0, 0), (0, padw)] + [(0, 0)] * (xs.ndim - 2))
-        if padw
-        else xs
-    )
-    m = xp.shape[1] // L
-    chunks = xp.reshape((L, L, m) + xs.shape[2:])
-    pos = np.zeros(L, dtype=int)
-    for p, d in enumerate(order):
-        pos[d] = p
-    edges = list(zip(order, order[1:])) + (
-        [(order[-1], order[0])] if L > 1 else []
-    )
-
-    buf = np.stack([chunks[d][order[(pos[d] - 1) % L]] for d in range(L)])
-    for s in range(1, L):
-        buf = _permute(buf, edges)
-        buf = buf + np.stack(
-            [chunks[d][order[(pos[d] - s - 1) % L]] for d in range(L)]
-        )
-
-    out = np.zeros_like(chunks)
-    for d in range(L):
-        out[d][d] = buf[d]
-    gbuf = buf.copy()
-    for s in range(1, L):
-        gbuf = _permute(gbuf, edges)
-        for d in range(L):
-            out[d][order[(pos[d] - s) % L]] = gbuf[d]
-    full = out.reshape((L, L * m) + xs.shape[2:])
-    return full[:, :lead] if padw else full
+def multi_reduce_scatter_ref(xs: np.ndarray, orders) -> np.ndarray:
+    """Schedule-replaying oracle for ``multi_chain_reduce_scatter``."""
+    orders = tuple(tuple(int(d) for d in c) for c in orders if len(c))
+    prog = prg.plan_reduce_scatter(xs.shape[0], orders)
+    return run_program_ref(xs, prog)
 
 
-def _multi_rotation_ref(xs: np.ndarray, orders) -> np.ndarray:
-    K, S = len(orders), len(orders[0])
-    intra, cross, _ = _ring_maps(orders)
-    acc = xs.copy()
-    buf = xs.copy()
-    for _ in range(S - 1):
-        buf = _permute(buf, intra)
-        acc = acc + buf
-    out = acc.copy()
-    buf = acc.copy()
-    for _ in range(K - 1):
-        buf = _permute(buf, cross)
-        out = out + buf
-    return out
+def multi_all_gather_ref(
+    xs: np.ndarray, orders, tiled: bool = False
+) -> np.ndarray:
+    """Schedule-replaying oracle for ``multi_chain_all_gather``."""
+    orders = tuple(tuple(int(d) for d in c) for c in orders if len(c))
+    prog = prg.plan_all_gather(xs.shape[0], orders)
+    return run_program_ref(xs, prog, tiled=tiled)
 
 
-def _multi_rs_ag_ref(xs: np.ndarray, orders) -> np.ndarray:
-    """RS -> cross-ring shard rotation -> AG, shards addressed by ring
-    position. With K=1 this replays ``chain_all_reduce``'s single-ring
-    reduce-scatter + all-gather add order exactly (the K=1 delegation
-    path), since both accumulate each shard along the ring traversal."""
-    L = xs.shape[0]
-    K, S = len(orders), len(orders[0])
-    intra, cross, pos = _ring_maps(orders)
-    lead = xs.shape[1]
-    padw = (-lead) % S
-    xp = (
-        np.pad(xs, [(0, 0), (0, padw)] + [(0, 0)] * (xs.ndim - 2))
-        if padw
-        else xs
-    )
-    m = xp.shape[1] // S
-    shards = xp.reshape((L, S, m) + xs.shape[2:])
-
-    buf = np.stack([shards[d][(pos[d] - 1) % S] for d in range(L)])
-    for s in range(1, S):
-        buf = _permute(buf, intra)
-        buf = buf + np.stack(
-            [shards[d][(pos[d] - s - 1) % S] for d in range(L)]
-        )
-    acc = buf.copy()
-    for _ in range(K - 1):
-        buf = _permute(buf, cross)
-        acc = acc + buf
-
-    out = np.zeros_like(shards)
-    for d in range(L):
-        out[d][pos[d]] = acc[d]
-    buf = acc.copy()
-    for s in range(1, S):
-        buf = _permute(buf, intra)
-        for d in range(L):
-            out[d][(pos[d] - s) % S] = buf[d]
-    full = out.reshape((L, S * m) + xs.shape[2:])
-    return full[:, :lead] if padw else full
+def multi_all_to_all_ref(xs: np.ndarray, orders) -> np.ndarray:
+    """Schedule-replaying oracle for ``multi_chain_all_to_all``."""
+    orders = tuple(tuple(int(d) for d in c) for c in orders if len(c))
+    prog = prg.plan_all_to_all(xs.shape[0], orders)
+    return run_program_ref(xs, prog)

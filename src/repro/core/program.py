@@ -1,0 +1,740 @@
+"""ChainProgram: the single schedule IR behind every Torrent collective.
+
+The paper's core claim is that every P2MP pattern is *just a schedule*
+of P2P hops over an unmodified NoC. This module makes that literal: a
+:class:`ChainProgram` is an ordered list of :class:`Step`\\ s, each step
+a set of ``(src, dst)`` edges plus static per-device shard-addressing
+tables, generated once by the ``plan_*`` functions from a chain/ring
+partition. Three interchangeable backends consume the same program:
+
+* the SPMD executor (``chainwrite.execute_program`` — fused ppermutes),
+* the numpy interpreter (``chainwrite_ref.interpret_program`` — the
+  bit-exactness oracle),
+* the cycle/byte models (``simulator.program_latency`` /
+  ``simulator.program_wire_bytes``).
+
+Machine model (identical in every backend). Each device ``d`` holds:
+
+* ``shards`` — its local input viewed as ``(addr_shards, m, ...)``
+  (``addr_shards == 1`` means the whole payload is one frame);
+* ``buf``   — the transit register: ``(width, m, ...)`` where ``width``
+  is per-step (a step may carry a multi-shard block);
+* ``out``   — ``(out_slots, m, ...)`` result/accumulator slots.
+
+Per step, in order:
+
+1. *load*    — ``buf[j] = out[load[d][j]]`` (``-1`` keeps the current
+   row; required in full whenever the width changes);
+2. *hop*     — ``buf = permute(buf, edges)``: ``dst`` receives ``src``'s
+   buffer, devices no edge targets receive zeros;
+3. *combine* — ``combine == "add"``: ``buf[j] += source[add_src[d][j]]``
+   where ``source`` is the input shards (``add_from == "input"``) or the
+   out slots (``add_from == "out"``); ``-1`` adds nothing;
+4. *write*   — ``out[write[d][j]] (op)= buf[j]`` with ``write_op`` in
+   ``{"copy", "add"}``; ``-1`` discards the row.
+
+IR invariants (enforced by :meth:`ChainProgram.validate`, pinned by the
+device-free golden-schedule tests):
+
+* **edge-disjointness within a step** — a device receives at most one
+  frame per step (unique destinations always; unique sources too for
+  ``kind == "stepped"`` programs, so every step is ONE fused ppermute;
+  ``kind == "pipeline"`` may repeat the head as a source — the
+  executor splits the extra fan-out sends into their own permutes,
+  which :func:`program_wire_bytes` accounts via
+  :meth:`Step.num_permutes`);
+* **shard-fraction accounting** — every step moves
+  ``width / addr_shards`` of the payload per edge
+  (:meth:`ChainProgram.step_bytes`); all addressing tables index within
+  ``addr_shards`` / ``out_slots`` bounds, and a device's write rows
+  target distinct slots;
+* **combine-op semantics** — ``"copy"`` steps move data unchanged;
+  ``"add"`` steps fold exactly one addressed local shard into each buf
+  row *after* the hop (left-fold: ``buf + shard``), so replaying the
+  program fixes the floating-point reduction order and any two
+  backends agree BIT-exactly.
+
+Planners (``orders``/``chains`` are the scheduled partitions from
+``core.scheduling``; ``num_devices`` is the SPMD axis size or the NoC
+node count):
+
+* :func:`plan_broadcast`       — P2MP multicast down K disjoint chains
+  (``kind="pipeline"``: the data phase streams, frames optional);
+* :func:`plan_all_gather`      — per-ring all-gather, then a cross-ring
+  block exchange for K > 1;
+* :func:`plan_reduce_scatter`  — per-ring reduce-scatter over K-chunk
+  groups, then a cross-ring group reduce-scatter for K > 1;
+* :func:`plan_all_reduce`      — ``algo="rs_ag"`` (fused per-ring RS →
+  cross-ring shard rotation → fused per-ring AG, shards addressed by
+  ring position) or ``algo="rotation"`` (full-payload rotations); K=1
+  is the single-ring RS+AG with *device-id* chunk addressing (the
+  historical ``chain_all_reduce`` schedule);
+* :func:`plan_all_to_all`      — the rotating chunk train; K > 1
+  interleaves intra-ring rotations with cross-ring hops (same total
+  wire, shorter per-step distances).
+
+This module is dependency-light (stdlib only) so the SPMD layer, the
+numpy oracle, the simulator and the CLI all share ONE schedule source.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterator, Sequence
+
+# Canonical multi-ring all-reduce schedule names — the single tuple the
+# SPMD layer, the simulator and the CLI validate against.
+ALL_REDUCE_ALGOS = ("rs_ag", "rotation")
+
+Edge = tuple[int, int]
+Table = tuple[tuple[int, ...], ...]  # (num_devices, width); -1 = none
+
+COPY = "copy"
+ADD = "add"
+
+
+def _table(rows: Sequence[Sequence[int]]) -> Table:
+    return tuple(tuple(int(v) for v in row) for row in rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One schedule step: a set of concurrent P2P hops + addressing."""
+
+    edges: tuple[Edge, ...]
+    width: int = 1
+    combine: str = COPY  # buf update after the hop: copy | add
+    add_from: str = "input"  # add reads "input" shards or "out" slots
+    add_src: Table | None = None
+    load: Table | None = None  # out slots loaded into buf BEFORE the hop
+    write: Table | None = None  # out slot written per buf row after combine
+    write_op: str = COPY  # copy | add
+    tag: str = "intra"  # intra | cross | chain (latency-model grouping)
+
+    def num_permutes(self) -> int:
+        """ppermute ops the SPMD executor emits for this step: one fused
+        permute for the unique-source edge set, plus one extra permute
+        per repeated source (the pipeline head's same-step fan-out)."""
+        if not self.edges:
+            return 0
+        counts: dict[int, int] = {}
+        for src, _ in self.edges:
+            counts[src] = counts.get(src, 0) + 1
+        return 1 + sum(c - 1 for c in counts.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainProgram:
+    """A complete collective schedule (see module docstring)."""
+
+    collective: str  # broadcast | all_gather | reduce_scatter | ...
+    kind: str  # "pipeline" (streamed chains) | "stepped" (ring rounds)
+    num_devices: int
+    addr_shards: int  # input viewed as (addr_shards, m, ...)
+    out_slots: int
+    buf_init: Table  # (L, width0) input-shard indices; -1 = zeros
+    out_init: Table  # (L, out_slots) input-shard indices; -1 = zeros
+    steps: tuple[Step, ...]
+    # Schedule metadata for the latency model: for kind="pipeline" the
+    # per-chain destination orders (head excluded) + head; for
+    # kind="stepped" the K sub-rings (full member orders).
+    groups: tuple[tuple[int, ...], ...]
+    head: int | None = None
+    algo: str | None = None
+
+    # -- accounting ---------------------------------------------------
+    def step_bytes(self, step: Step, size_bytes: int) -> int:
+        """Frame bytes one edge of ``step`` carries, for a per-device
+        input payload of ``size_bytes``."""
+        return step.width * _ceil_div(size_bytes, self.addr_shards)
+
+    def wire_bytes(self, size_bytes: int) -> int:
+        """Modeled collective wire bytes of the whole program — the
+        trip-count-aware HLO ``collective-permute`` attribution: every
+        emitted ppermute counts its (per-device) operand bytes. For
+        ring ("stepped") programs every device sends each step, so this
+        is also the per-device wire-byte total."""
+        return sum(
+            s.num_permutes() * self.step_bytes(s, size_bytes)
+            for s in self.steps
+        )
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.steps)
+
+    def describe(self, size_bytes: int | None = None) -> Iterator[str]:
+        """Human-readable step table (the examples/ demo)."""
+        yield (
+            f"{self.collective} [{self.kind}"
+            + (f", algo={self.algo}" if self.algo else "")
+            + f"] devices={self.num_devices} shards=1/{self.addr_shards}"
+            f" out_slots={self.out_slots} groups={list(self.groups)}"
+        )
+        for i, s in enumerate(self.steps):
+            line = (
+                f"  step {i:2d} [{s.tag:5s}] edges={len(s.edges)}"
+                f" permutes={s.num_permutes()} frac={s.width}/{self.addr_shards}"
+                f" combine={s.combine} {list(s.edges)}"
+            )
+            if size_bytes is not None:
+                line += f" bytes/edge={self.step_bytes(s, size_bytes)}"
+            yield line
+        if size_bytes is not None:
+            yield f"  total wire bytes: {self.wire_bytes(size_bytes)}"
+
+    # -- validation ---------------------------------------------------
+    def validate(self) -> "ChainProgram":
+        L = self.num_devices
+        if L < 1 or self.addr_shards < 1 or self.out_slots < 1:
+            raise ValueError("degenerate program dimensions")
+        if self.kind not in ("pipeline", "stepped"):
+            raise ValueError(f"unknown program kind {self.kind!r}")
+        self._check_table(self.buf_init, None, self.addr_shards, "buf_init")
+        self._check_table(self.out_init, self.out_slots, self.addr_shards, "out_init")
+        width = len(self.buf_init[0]) if self.buf_init else 1
+        for i, s in enumerate(self.steps):
+            if s.width < 1:
+                raise ValueError(f"step {i}: width < 1")
+            dsts = [e[1] for e in s.edges]
+            if len(set(dsts)) != len(dsts):
+                raise ValueError(f"step {i}: duplicate edge destinations")
+            if self.kind == "stepped":
+                srcs = [e[0] for e in s.edges]
+                if len(set(srcs)) != len(srcs):
+                    raise ValueError(f"step {i}: duplicate edge sources")
+            for a, b in s.edges:
+                if not (0 <= a < L and 0 <= b < L):
+                    raise ValueError(f"step {i}: edge ({a},{b}) out of range")
+            if s.width != width and s.load is None:
+                raise ValueError(f"step {i}: width change without load")
+            if s.load is not None:
+                self._check_table(s.load, s.width, self.out_slots, f"step {i} load")
+            if s.combine == ADD:
+                bound = self.addr_shards if s.add_from == "input" else self.out_slots
+                if s.add_src is None:
+                    raise ValueError(f"step {i}: add without add_src")
+                self._check_table(s.add_src, s.width, bound, f"step {i} add_src")
+            elif s.combine != COPY:
+                raise ValueError(f"step {i}: unknown combine {s.combine!r}")
+            if s.write is not None:
+                self._check_table(s.write, s.width, self.out_slots, f"step {i} write")
+                for d, row in enumerate(s.write):
+                    live = [v for v in row if v >= 0]
+                    if len(set(live)) != len(live):
+                        raise ValueError(
+                            f"step {i}: device {d} writes one slot twice"
+                        )
+            width = s.width
+        return self
+
+    def _check_table(self, table, width, bound, name) -> None:
+        if len(table) != self.num_devices:
+            raise ValueError(f"{name}: table has {len(table)} rows, "
+                             f"expected {self.num_devices}")
+        for row in table:
+            if width is not None and len(row) != width:
+                raise ValueError(f"{name}: row width {len(row)} != {width}")
+            for v in row:
+                if not (-1 <= v < bound):
+                    raise ValueError(f"{name}: index {v} out of range {bound}")
+
+
+def program_wire_bytes(program: ChainProgram, size_bytes: int) -> int:
+    """Functional alias of :meth:`ChainProgram.wire_bytes`."""
+    return program.wire_bytes(size_bytes)
+
+
+def pipelined_wire_bytes(
+    program: ChainProgram, size_bytes: int, num_frames: int = 1
+) -> int:
+    """Wire bytes of the frame-pipelined execution of a ``pipeline``
+    program: the store-and-forward scan applies EVERY chain edge on
+    each of its F + L - 2 slots at 1/F-payload frame granularity
+    (idle edge slots still ship a frame-sized buffer — the modeled HLO
+    attribution of the scanned executor). ``num_frames <= 1`` is the
+    stepped execution, i.e. :func:`program_wire_bytes`."""
+    if program.kind != "pipeline" or num_frames <= 1 or not program.steps:
+        return program.wire_bytes(size_bytes)
+    counts: dict[int, int] = {}
+    for s in program.steps:
+        for src, _ in s.edges:
+            counts[src] = counts.get(src, 0) + 1
+    permutes = 1 + sum(c - 1 for c in counts.values())
+    slots = num_frames + len(program.steps) - 1
+    return slots * permutes * _ceil_div(size_bytes, num_frames)
+
+
+# ---------------------------------------------------------------------------
+# Partition validation helpers
+# ---------------------------------------------------------------------------
+
+
+def validate_chains(
+    head: int, chains: Sequence[Sequence[int]]
+) -> tuple[tuple[int, ...], ...]:
+    """Clean + validate K disjoint broadcast sub-chains (head excluded
+    from every chain; empty chains dropped). An empty *result* is
+    allowed here (a head-only broadcast); ``multi_chain_broadcast``
+    rejects it at its own layer."""
+    head = int(head)
+    clean = [tuple(int(d) for d in c) for c in chains if len(c)]
+    seen: set[int] = set()
+    for c in clean:
+        for d in c:
+            if d == head:
+                raise ValueError("head cannot appear inside a chain")
+            if d in seen:
+                raise ValueError(f"destination {d} appears in two chains")
+            seen.add(d)
+    return tuple(clean)
+
+
+def validate_ring_partition(
+    axis_size: int, orders: Sequence[Sequence[int]]
+) -> list[tuple[int, ...]]:
+    """Clean + validate K disjoint equal-size sub-rings covering the
+    whole axis. Pure host-side helper shared by the SPMD ring
+    collectives, the planners and the property tests."""
+    clean = [tuple(int(o) for o in c) for c in orders if len(c)]
+    if not clean:
+        raise ValueError("empty ring set")
+    S = len(clean[0])
+    if any(len(c) != S for c in clean):
+        raise ValueError("sub-rings must have equal sizes")
+    flat = [d for c in clean for d in c]
+    if sorted(flat) != list(range(axis_size)):
+        raise ValueError("sub-rings must partition the whole axis")
+    return clean
+
+
+def _check_rings(
+    num_devices: int, orders: Sequence[Sequence[int]]
+) -> tuple[tuple[int, ...], ...]:
+    """Planner-level ring validation: disjoint, equal sizes, members in
+    range. (Unlike :func:`validate_ring_partition` the rings need not
+    cover every device — the simulator models rings over node subsets
+    of a larger NoC.)"""
+    clean = [tuple(int(o) for o in c) for c in orders if len(c)]
+    if not clean:
+        raise ValueError("empty ring set")
+    S = len(clean[0])
+    if any(len(c) != S for c in clean):
+        raise ValueError("sub-rings must have equal sizes")
+    flat = [d for c in clean for d in c]
+    if len(set(flat)) != len(flat):
+        raise ValueError("sub-rings must be disjoint")
+    if any(not 0 <= d < num_devices for d in flat):
+        raise ValueError("ring member out of device range")
+    return tuple(clean)
+
+
+def _ring_maps(orders: tuple[tuple[int, ...], ...]):
+    """(intra_edges, cross_edges, pos, ring_of) for K equal-size rings."""
+    K, S = len(orders), len(orders[0])
+    intra = tuple(
+        (c[p], c[(p + 1) % S]) for c in orders for p in range(S)
+    ) if S > 1 else ()
+    cross = tuple(
+        (orders[j][r], orders[(j + 1) % K][r])
+        for j in range(K)
+        for r in range(S)
+    ) if K > 1 else ()
+    pos: dict[int, int] = {}
+    ring_of: dict[int, int] = {}
+    for j, ring in enumerate(orders):
+        for p, d in enumerate(ring):
+            pos[d] = p
+            ring_of[d] = j
+    return intra, cross, pos, ring_of
+
+
+def _rows(num_devices: int, width: int) -> list[list[int]]:
+    return [[-1] * width for _ in range(num_devices)]
+
+
+# ---------------------------------------------------------------------------
+# Planners
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def plan_broadcast(
+    num_devices: int, head: int, chains: tuple[tuple[int, ...], ...]
+) -> ChainProgram:
+    """P2MP multicast from ``head`` down K disjoint sub-chains.
+
+    ``kind="pipeline"``: step ``t`` holds every chain's depth-``t``
+    edge, so the steps double as the per-frame hop slots of the
+    streamed (frame-pipelined) execution.
+    """
+    head = int(head)
+    chains = validate_chains(head, chains)
+    L = int(num_devices)
+    full = [(head,) + c for c in chains]
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, 1)
+    buf_init[head][0] = 0
+    out_init[head][0] = 0
+    steps = []
+    max_len = max((len(f) for f in full), default=1)
+    for t in range(max_len - 1):
+        edges = tuple((f[t], f[t + 1]) for f in full if t + 1 < len(f))
+        write = _rows(L, 1)
+        for _, dst in edges:
+            write[dst][0] = 0
+        steps.append(
+            Step(edges=edges, width=1, tag="chain", write=_table(write))
+        )
+    return ChainProgram(
+        collective="broadcast", kind="pipeline", num_devices=L,
+        addr_shards=1, out_slots=1,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=chains, head=head,
+    ).validate()
+
+
+@functools.lru_cache(maxsize=None)
+def plan_all_gather(
+    num_devices: int, orders: tuple[tuple[int, ...], ...]
+) -> ChainProgram:
+    """Per-ring all-gather; K > 1 adds a cross-ring exchange of the
+    gathered ring *blocks* (width-S steps). Output slots are device-id
+    addressed — standard all_gather semantics for any ring order."""
+    L = int(num_devices)
+    orders = _check_rings(L, orders)
+    K, S = len(orders), len(orders[0])
+    intra, cross, pos, ring_of = _ring_maps(orders)
+
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, L)
+    for d in pos:
+        buf_init[d][0] = 0
+        out_init[d][d] = 0
+
+    steps: list[Step] = []
+    for s in range(1, S):
+        write = _rows(L, 1)
+        for d in pos:
+            write[d][0] = orders[ring_of[d]][(pos[d] - s) % S]
+        steps.append(Step(edges=intra, width=1, tag="intra", write=_table(write)))
+    for c in range(1, K):
+        load = None
+        if c == 1:
+            load_rows = _rows(L, S)
+            for d in pos:
+                load_rows[d] = list(orders[ring_of[d]])
+            load = _table(load_rows)
+        write = _rows(L, S)
+        for d in pos:
+            write[d] = list(orders[(ring_of[d] - c) % K])
+        steps.append(
+            Step(edges=cross, width=S, tag="cross", load=load, write=_table(write))
+        )
+    return ChainProgram(
+        collective="all_gather", kind="stepped", num_devices=L,
+        addr_shards=1, out_slots=L,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=orders,
+    ).validate()
+
+
+@functools.lru_cache(maxsize=None)
+def plan_reduce_scatter(
+    num_devices: int, orders: tuple[tuple[int, ...], ...]
+) -> ChainProgram:
+    """Reduce-scatter over K sub-rings: the input is ``num_devices``
+    device-id-addressed chunks; device ``d`` ends with the fully
+    reduced chunk ``d`` in out slot 0.
+
+    K=1 is the classic ring schedule (1/L frames, L-1 steps). K > 1
+    first reduce-scatters width-K chunk *groups* within each ring
+    (group ``p`` = the chunks of every ring's position-``p`` member),
+    then reduce-scatters each group across the rings at single-chunk
+    width — same total wire as the single ring, shorter rounds.
+    """
+    L = int(num_devices)
+    orders = _check_rings(L, orders)
+    K, S = len(orders), len(orders[0])
+    intra, cross, pos, ring_of = _ring_maps(orders)
+    steps: list[Step] = []
+
+    if K == 1:
+        ring = orders[0]
+        buf_init = _rows(L, 1)
+        out_init = _rows(L, 1)
+        if S == 1:
+            out_init[ring[0]][0] = ring[0]
+        for d in pos:
+            buf_init[d][0] = ring[(pos[d] - 1) % S]
+        for s in range(1, S):
+            add = _rows(L, 1)
+            for d in pos:
+                add[d][0] = ring[(pos[d] - s - 1) % S]
+            write = None
+            if s == S - 1:
+                w = _rows(L, 1)
+                for d in pos:
+                    w[d][0] = 0
+                write = _table(w)
+            steps.append(Step(
+                edges=intra, width=1, tag="intra", combine=ADD,
+                add_src=_table(add), write=write,
+            ))
+        return ChainProgram(
+            collective="reduce_scatter", kind="stepped", num_devices=L,
+            addr_shards=L, out_slots=1,
+            buf_init=_table(buf_init), out_init=_table(out_init),
+            steps=tuple(steps), groups=orders,
+        ).validate()
+
+    out_slots = K
+    buf_init = _rows(L, K)
+    out_init = _rows(L, K)
+    if S == 1:
+        # No intra phase: seed the group slots straight from the input.
+        for d in pos:
+            for j in range(K):
+                out_init[d][j] = orders[j][0]
+    else:
+        for d in pos:
+            buf_init[d] = [orders[j][(pos[d] - 1) % S] for j in range(K)]
+        for s in range(1, S):
+            add = _rows(L, K)
+            for d in pos:
+                add[d] = [orders[j][(pos[d] - s - 1) % S] for j in range(K)]
+            write = None
+            if s == S - 1:
+                w = _rows(L, K)
+                for d in pos:
+                    w[d] = list(range(K))
+                write = _table(w)
+            steps.append(Step(
+                edges=intra, width=K, tag="intra", combine=ADD,
+                add_src=_table(add), write=write,
+            ))
+    for c in range(1, K):
+        load = None
+        if c == 1:
+            load_rows = _rows(L, 1)
+            for d in pos:
+                load_rows[d][0] = (ring_of[d] - 1) % K
+            load = _table(load_rows)
+        add = _rows(L, 1)
+        for d in pos:
+            add[d][0] = (ring_of[d] - c - 1) % K
+        write = None
+        if c == K - 1:
+            w = _rows(L, 1)
+            for d in pos:
+                w[d][0] = 0
+            write = _table(w)
+        steps.append(Step(
+            edges=cross, width=1, tag="cross", combine=ADD,
+            add_from="out", add_src=_table(add), load=load, write=write,
+        ))
+    return ChainProgram(
+        collective="reduce_scatter", kind="stepped", num_devices=L,
+        addr_shards=L, out_slots=out_slots,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=orders,
+    ).validate()
+
+
+@functools.lru_cache(maxsize=None)
+def plan_all_reduce(
+    num_devices: int,
+    orders: tuple[tuple[int, ...], ...],
+    algo: str = "rs_ag",
+) -> ChainProgram:
+    """All-reduce over K sub-rings (see module docstring for the two
+    schedules). K=1 is the single-ring reduce-scatter + all-gather
+    with *device-id* chunk addressing for either ``algo`` — the
+    historical ``chain_all_reduce`` schedule, kept so its fold order
+    (and therefore every bit-exactness pin) is unchanged."""
+    if algo not in ALL_REDUCE_ALGOS:
+        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
+    L = int(num_devices)
+    orders = _check_rings(L, orders)
+    K, S = len(orders), len(orders[0])
+    intra, cross, pos, ring_of = _ring_maps(orders)
+    steps: list[Step] = []
+
+    if K == 1 and S == L:
+        # The full-axis single ring keeps the historical device-id
+        # addressing (chunk i = device i's chunk). A *subset* ring —
+        # simulator-only, the SPMD layer requires a full partition —
+        # falls through to the position-addressed schedules below, so
+        # its shard size is payload/S, not payload/num_devices.
+        ring = orders[0]
+        buf_init = _rows(L, 1)
+        out_init = _rows(L, L)
+        if S == 1:
+            out_init[ring[0]][ring[0]] = ring[0]
+        for d in pos:
+            buf_init[d][0] = ring[(pos[d] - 1) % S]
+        for s in range(1, S):  # reduce-scatter (device-id chunks)
+            add = _rows(L, 1)
+            for d in pos:
+                add[d][0] = ring[(pos[d] - s - 1) % S]
+            write = None
+            if s == S - 1:
+                w = _rows(L, 1)
+                for d in pos:
+                    w[d][0] = d  # own chunk lands in slot = device id
+                write = _table(w)
+            steps.append(Step(
+                edges=intra, width=1, tag="intra", combine=ADD,
+                add_src=_table(add), write=write,
+            ))
+        for s in range(1, S):  # all-gather
+            write = _rows(L, 1)
+            for d in pos:
+                write[d][0] = ring[(pos[d] - s) % S]
+            steps.append(
+                Step(edges=intra, width=1, tag="intra", write=_table(write))
+            )
+        return ChainProgram(
+            collective="all_reduce", kind="stepped", num_devices=L,
+            addr_shards=L, out_slots=L,
+            buf_init=_table(buf_init), out_init=_table(out_init),
+            steps=tuple(steps), groups=orders, algo=algo,
+        ).validate()
+
+    if algo == "rotation" or S == 1:
+        # Full-payload rotations (S=1 rs_ag degenerates to the same
+        # cross-only schedule: there is nothing to shard over).
+        buf_init = _rows(L, 1)
+        out_init = _rows(L, 1)
+        for d in pos:
+            buf_init[d][0] = 0
+            out_init[d][0] = 0
+        w = _rows(L, 1)
+        for d in pos:
+            w[d][0] = 0
+        acc_write = _table(w)
+        for _s in range(1, S):
+            steps.append(Step(
+                edges=intra, width=1, tag="intra",
+                write=acc_write, write_op=ADD,
+            ))
+        for c in range(1, K):
+            load = acc_write if c == 1 else None  # same table shape: slot 0
+            steps.append(Step(
+                edges=cross, width=1, tag="cross",
+                load=load, write=acc_write, write_op=ADD,
+            ))
+        return ChainProgram(
+            collective="all_reduce", kind="stepped", num_devices=L,
+            addr_shards=1, out_slots=1,
+            buf_init=_table(buf_init), out_init=_table(out_init),
+            steps=tuple(steps), groups=orders, algo=algo,
+        ).validate()
+
+    # rs_ag, K > 1, S > 1: shards addressed by ring position.
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, S)
+    for d in pos:
+        buf_init[d][0] = (pos[d] - 1) % S
+    for s in range(1, S):  # fused per-ring reduce-scatter
+        add = _rows(L, 1)
+        for d in pos:
+            add[d][0] = (pos[d] - s - 1) % S
+        write = None
+        if s == S - 1:
+            w = _rows(L, 1)
+            for d in pos:
+                w[d][0] = pos[d]
+            write = _table(w)
+        steps.append(Step(
+            edges=intra, width=1, tag="intra", combine=ADD,
+            add_src=_table(add), write=write,
+        ))
+    w = _rows(L, 1)
+    for d in pos:
+        w[d][0] = pos[d]
+    pos_write = _table(w)
+    for _c in range(1, K):  # cross-ring shard rotation (accumulating)
+        steps.append(Step(
+            edges=cross, width=1, tag="cross",
+            write=pos_write, write_op=ADD,
+        ))
+    for s in range(1, S):  # fused per-ring all-gather
+        load = pos_write if s == 1 else None
+        write = _rows(L, 1)
+        for d in pos:
+            write[d][0] = (pos[d] - s) % S
+        steps.append(Step(
+            edges=intra, width=1, tag="intra", load=load, write=_table(write)
+        ))
+    return ChainProgram(
+        collective="all_reduce", kind="stepped", num_devices=L,
+        addr_shards=S, out_slots=S,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=orders, algo=algo,
+    ).validate()
+
+
+@functools.lru_cache(maxsize=None)
+def plan_all_to_all(
+    num_devices: int, orders: tuple[tuple[int, ...], ...]
+) -> ChainProgram:
+    """All-to-all (MoE dispatch): chunk ``j`` of each device's train is
+    destined to device ``j``. The train rotates whole; each device
+    peels the chunk addressed to it every step. K > 1 interleaves
+    intra-ring rotations with cross-ring hops — (K·(S-1) + (K-1)) =
+    L-1 steps either way (a chunk train cannot shrink), but every hop
+    stays ring-local/position-paired."""
+    L = int(num_devices)
+    orders = _check_rings(L, orders)
+    K, S = len(orders), len(orders[0])
+    intra, cross, pos, ring_of = _ring_maps(orders)
+
+    buf_init = _rows(L, L)
+    out_init = _rows(L, L)
+    for d in pos:
+        buf_init[d] = list(range(L))
+        out_init[d][d] = d
+
+    def peel(origin_of) -> Table:
+        write = _rows(L, L)
+        for d in pos:
+            write[d][d] = origin_of(d)
+        return _table(write)
+
+    steps: list[Step] = []
+    for j in range(K):
+        # After j cross hops and t intra hops the train at device (c, p)
+        # originated at ring (c - j), position (p - t) — the intra
+        # offset accumulates across stages.
+        if j > 0:
+            t = j * (S - 1)
+            steps.append(Step(
+                edges=cross, width=L, tag="cross",
+                write=peel(
+                    lambda d, j=j, t=t: orders[(ring_of[d] - j) % K][
+                        (pos[d] - t) % S
+                    ]
+                ),
+            ))
+        for s in range(1, S):
+            t = j * (S - 1) + s
+            steps.append(Step(
+                edges=intra, width=L, tag="intra",
+                write=peel(
+                    lambda d, j=j, t=t: orders[(ring_of[d] - j) % K][
+                        (pos[d] - t) % S
+                    ]
+                ),
+            ))
+    return ChainProgram(
+        collective="all_to_all", kind="stepped", num_devices=L,
+        addr_shards=L, out_slots=L,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=orders,
+    ).validate()
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

@@ -13,19 +13,27 @@ same three P2MP mechanisms on the same NoC (2-D mesh, XY routing,
 * ``chainwrite_latency`` — Torrent: four-phase orchestration
   (cfg dispatch ∥, grant ⇠, pipelined frame store-and-forward data ⇢,
   finish ⇠).
+* ``program_latency`` / ``program_wire_bytes`` — the generic models
+  over the :mod:`repro.core.program` schedule IR: any
+  :class:`ChainProgram` gets the staggered-cfg/grant/finish machinery
+  (all groups' cfg packets serialize through the initiator's single
+  cfg-inject port) with a kind-aware data phase — one pipelined
+  store-and-forward stream per chain for ``kind="pipeline"``, the sum
+  of per-step (slowest-edge hops + fill + frame/BW) rounds for
+  ``kind="stepped"``. Every concrete model below is a thin
+  ``plan_* -> program_latency`` wrapper.
 * ``multi_chain_latency`` — K concurrent Chainwrite chains from one
-  initiator (``scheduling.partition_schedule``): per-chain four-phase
-  latency with all chains' cfg packets serialized through the single
-  cfg-inject port; completion = max over chains. Reduces exactly to
-  ``chainwrite_latency`` at K=1. ``choose_num_chains`` picks K by
-  argmin of this model.
+  initiator (``scheduling.partition_schedule``): ``program_latency``
+  of ``plan_broadcast``. Reduces exactly to ``chainwrite_latency`` at
+  K=1. ``choose_num_chains`` picks K by argmin of this model.
 * ``all_reduce_latency`` — algo-aware model of the K-sub-ring
-  all-reduce schedules (``multi_chain_all_reduce``): the same
-  staggered-cfg/grant/finish machinery with a data phase built from
-  the schedule's sequential rotation steps — full payloads for
+  all-reduce schedules (``multi_chain_all_reduce``):
+  ``program_latency`` of ``plan_all_reduce`` — full payloads for
   ``rotation``, 1/S shards for ``rs_ag`` — so
   ``choose_num_chains(collective="all_reduce")`` picks K from modeled
-  bytes *and* cycles.
+  bytes *and* cycles. ``choose_num_chains`` extends the same
+  byte/latency model to ``reduce_scatter`` / ``all_gather`` /
+  ``all_to_all`` via their planners.
 * ``chain_recovery_latency`` — failure/recovery extension: one chain
   member dies, the initiator times out (``fail_timeout_cc``), re-forms
   the orphaned suffix (``scheduling.reform_chain``) and re-dispatches
@@ -46,7 +54,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from .chainwrite_ref import ALL_REDUCE_ALGOS
+from . import program as prg
+from .program import ALL_REDUCE_ALGOS, ChainProgram, program_wire_bytes
 from .scheduling import (
     SCHEDULERS,
     chain_total_hops,
@@ -238,6 +247,88 @@ def chainwrite_latency(
     )
 
 
+def program_latency(
+    topo: MeshTopology,
+    src: int,
+    program: ChainProgram,
+    size_bytes: int,
+    p: SimParams = DEFAULT_PARAMS,
+    *,
+    detail: bool = False,
+) -> int | dict[str, object]:
+    """Four-phase latency of any :class:`ChainProgram` — the generic
+    model every per-collective wrapper is a thin planner around.
+
+    Shared machinery (``program.groups`` = the chains/rings): the
+    initiator serializes every group's cfg packets through its single
+    cfg-inject port in group order (group ``c`` becomes ready only
+    after groups ``0..c``'s cfgs), and each group pays its own
+    tail->head grant and finish forwarding. The data phase is
+    kind-aware:
+
+    * ``kind="pipeline"`` — one wormhole-pipelined store-and-forward
+      stream per chain (chain hops + per-member fill + payload at the
+      per-stream effective bandwidth: K concurrent streams share the
+      initiator's ``src_read_bw``);
+    * ``kind="stepped"``  — the schedule's rounds run lockstep: each
+      step costs its slowest edge's router hops + one
+      store-and-forward fill + frame bytes (``width/addr_shards`` of
+      the payload) over the link bandwidth; every device drives one
+      outgoing stream at a time (``streams=1``).
+
+    Completion = max over groups of the staggered-cfg four-phase sum.
+    With ``detail=True`` returns ``{"total", "per_chain", "per_phase"}``
+    (plus the program's modeled ``wire_bytes``).
+    """
+    groups = [list(c) for c in program.groups if len(c)]
+    empty = {
+        "total": 0, "per_chain": [], "per_phase": [],
+        "wire_bytes": 0,
+    }
+    if not groups:
+        return dict(empty) if detail else 0
+
+    per_chain: list[int] = []
+    per_phase: list[tuple[int, int, int, int]] = []
+    injected = 0  # cfg packets already serialized through the port
+
+    if program.kind == "pipeline":
+        for order in groups:
+            injected += len(order)
+            phases = _chain_phases(
+                topo, src, src, order, size_bytes, p,
+                injected=injected, streams=len(groups),
+            )
+            per_phase.append(phases)
+            per_chain.append(sum(phases))
+    else:  # stepped: lockstep rounds, shared by every ring
+        bw = _effective_bw(p, 1)  # one outgoing stream per device
+        data = sum(
+            _max_edge_hops(topo, step.edges) * p.router_cc
+            + p.sf_fill_cc
+            + _ceil_div(program.step_bytes(step, size_bytes), bw)
+            for step in program.steps
+        )
+        for order in groups:
+            injected += len(order)
+            cfg = _cfg_phase(topo, src, order, p, injected)
+            hops = _ring_hops(topo, order)
+            grant = hops * p.router_cc + len(order) * p.grant_fwd_cc
+            finish = hops * p.router_cc + len(order) * p.finish_fwd_cc
+            per_phase.append((cfg, grant, data, finish))
+            per_chain.append(cfg + grant + data + finish)
+
+    total = max(per_chain)
+    if detail:
+        return {
+            "total": total,
+            "per_chain": per_chain,
+            "per_phase": per_phase,
+            "wire_bytes": program.wire_bytes(size_bytes),
+        }
+    return total
+
+
 def multi_chain_latency(
     topo: MeshTopology,
     src: int,
@@ -247,7 +338,8 @@ def multi_chain_latency(
     *,
     detail: bool = False,
 ) -> int | dict[str, object]:
-    """K concurrent four-phase Chainwrites sharing one cfg-inject port.
+    """K concurrent four-phase Chainwrites sharing one cfg-inject port —
+    ``program_latency`` of the broadcast program.
 
     Contention model (the only coupling between chains): the initiator
     has a single cfg-inject port, so the cfg packets of **all** chains
@@ -267,26 +359,15 @@ def multi_chain_latency(
     "per_phase"}`` where ``per_phase`` holds each chain's
     ``(cfg, grant, data, finish)`` split.
     """
-    chains = [list(c) for c in chains if len(c)]
-    if not chains:
-        return {"total": 0, "per_chain": [], "per_phase": []} if detail else 0
-
-    per_chain: list[int] = []
-    per_phase: list[tuple[int, int, int, int]] = []
-    injected = 0  # cfg packets already serialized through the port
-    for order in chains:
-        injected += len(order)
-        phases = _chain_phases(
-            topo, src, src, order, size_bytes, p,
-            injected=injected, streams=len(chains),
+    clean = tuple(tuple(int(d) for d in c) for c in chains if len(c))
+    if not clean:
+        return (
+            {"total": 0, "per_chain": [], "per_phase": [], "wire_bytes": 0}
+            if detail
+            else 0
         )
-        per_phase.append(phases)
-        per_chain.append(sum(phases))
-
-    total = max(per_chain)
-    if detail:
-        return {"total": total, "per_chain": per_chain, "per_phase": per_phase}
-    return total
+    program = prg.plan_broadcast(topo.num_nodes, int(src), clean)
+    return program_latency(topo, src, program, size_bytes, p, detail=detail)
 
 
 def chain_recovery_latency(
@@ -374,12 +455,21 @@ def chain_recovery_latency(
     return total
 
 
+def _canonical_rings(ring_size: int, num_chains: int) -> tuple[tuple[int, ...], ...]:
+    S, K = int(ring_size), int(num_chains)
+    return tuple(
+        tuple(range(c * S, (c + 1) * S)) for c in range(K)
+    )
+
+
 def all_reduce_wire_bytes(
     ring_size: int, num_chains: int, size_bytes: int, algo: str = "rs_ag"
 ) -> int:
     """Per-device wire bytes of the K-sub-ring all-reduce schedules
     (``chainwrite.multi_chain_all_reduce``): S = ``ring_size`` members
-    per ring, K = ``num_chains`` rings.
+    per ring, K = ``num_chains`` rings — ``program_wire_bytes`` of the
+    planned schedule (ring membership does not change byte counts, so
+    canonical contiguous rings stand in):
 
     * ``rs_ag``:    (2·(S-1) + (K-1)) shard-sized frames, shard =
       ceil(payload / S) — ≈ (2·(S-1)+(K-1))/S · payload, the
@@ -394,9 +484,8 @@ def all_reduce_wire_bytes(
     S, K = int(ring_size), int(num_chains)
     if S < 1 or K < 1:
         raise ValueError("ring_size and num_chains must be >= 1")
-    if K == 1 or algo == "rs_ag":
-        return (2 * (S - 1) + (K - 1)) * _ceil_div(size_bytes, S)
-    return (S + K - 2) * size_bytes
+    program = prg.plan_all_reduce(S * K, _canonical_rings(S, K), algo)
+    return program.wire_bytes(size_bytes)
 
 
 def _ring_hops(topo: MeshTopology, order: Sequence[int]) -> int:
@@ -423,13 +512,14 @@ def all_reduce_latency(
     algo: str = "rs_ag",
     detail: bool = False,
 ) -> int | dict[str, object]:
-    """Analytical latency of the K-sub-ring all-reduce schedules.
+    """Analytical latency of the K-sub-ring all-reduce schedules —
+    ``program_latency`` of ``plan_all_reduce``.
 
-    Mirrors ``multi_chain_latency``'s four-phase structure — the same
-    cfg-port serialization (the initiator injects one cfg per ring
-    member, later rings start after earlier rings' cfgs) and the same
-    per-chain grant/finish forwarding — but with an algo-aware data
-    phase built from the schedule's sequential rotation steps:
+    Same cfg-port serialization as ``multi_chain_latency`` (the
+    initiator injects one cfg per ring member, later rings start after
+    earlier rings' cfgs) and the same per-chain grant/finish
+    forwarding, with the algo-aware data phase coming straight from the
+    planned schedule's steps:
 
     * ``rotation``:  (S-1) intra + (K-1) cross steps, each a
       full-payload fused ppermute;
@@ -449,74 +539,22 @@ def all_reduce_latency(
     """
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
-    orders = [list(c) for c in orders if len(c)]
-    if not orders:
+    clean = tuple(tuple(int(d) for d in c) for c in orders if len(c))
+    if not clean:
         return (
             {"total": 0, "per_chain": [], "per_phase": [],
              "algo": algo, "wire_bytes": 0}
             if detail
             else 0
         )
-    K = len(orders)
-    S = len(orders[0])
-    if any(len(c) != S for c in orders):
-        raise ValueError("sub-rings must have equal sizes")
-    if K == 1:
+    if len(clean) == 1:
         algo = "rs_ag"  # the K=1 delegation path: single-ring RS+AG
-
-    intra_edges = [
-        e
-        for c in orders
-        for e in zip(list(c) + [c[0]], (list(c) + [c[0]])[1:])
-    ] if S > 1 else []
-    cross_edges = (
-        [
-            (orders[c][r], orders[(c + 1) % K][r])
-            for c in range(K)
-            for r in range(S)
-        ]
-        if K > 1
-        else []
-    )
-    intra_hop = _max_edge_hops(topo, intra_edges)
-    cross_hop = _max_edge_hops(topo, cross_edges)
-    if algo == "rs_ag":
-        frame = _ceil_div(size_bytes, S)
-        intra_steps = 2 * (S - 1)
-    else:
-        frame = size_bytes
-        intra_steps = S - 1
-    cross_steps = K - 1
-    bw = _effective_bw(p, 1)  # one outgoing stream per device per step
-    step_payload_cc = _ceil_div(frame, bw)
-    data = intra_steps * (
-        intra_hop * p.router_cc + p.sf_fill_cc + step_payload_cc
-    ) + cross_steps * (
-        cross_hop * p.router_cc + p.sf_fill_cc + step_payload_cc
-    )
-
-    per_chain: list[int] = []
-    per_phase: list[tuple[int, int, int, int]] = []
-    injected = 0
-    for order in orders:
-        injected += len(order)
-        cfg = _cfg_phase(topo, src, order, p, injected)
-        hops = _ring_hops(topo, order)
-        grant = hops * p.router_cc + S * p.grant_fwd_cc
-        finish = hops * p.router_cc + S * p.finish_fwd_cc
-        per_phase.append((cfg, grant, data, finish))
-        per_chain.append(cfg + grant + data + finish)
-
-    total = max(per_chain)
+    program = prg.plan_all_reduce(topo.num_nodes, clean, algo)
+    out = program_latency(topo, src, program, size_bytes, p, detail=detail)
     if detail:
-        return {
-            "total": total,
-            "per_chain": per_chain,
-            "per_phase": per_phase,
-            "algo": algo,
-            "wire_bytes": all_reduce_wire_bytes(S, K, size_bytes, algo),
-        }
-    return total
+        assert isinstance(out, dict)
+        out["algo"] = algo
+    return out
 
 
 def choose_num_chains(
@@ -541,15 +579,16 @@ def choose_num_chains(
     single-chain schedule exactly, the returned partition's latency
     never exceeds the K=1 schedule's.
 
-    ``collective="all_reduce"`` schedules the closed ring
-    ``src -> dsts`` (the same snake construction as
-    ``parallel.collectives.ring_order_for_axis``), splits it into every
-    K ≤ max_chains that divides the group size, and scores the
-    candidate sub-ring sets with :func:`all_reduce_latency` for the
-    given ``algo`` — so K is chosen from modeled *bytes and cycles*
-    rather than the broadcast-only model. Returns the winning
-    ``(k, sub_rings)``; K=1 is always a candidate, so the result never
-    models worse than the single ring.
+    Every ring collective — ``"all_reduce"``, ``"reduce_scatter"``,
+    ``"all_gather"``, ``"all_to_all"`` — goes through the unified
+    program model: schedule the closed ring ``src -> dsts`` (the same
+    snake construction as ``parallel.collectives.ring_order_for_axis``),
+    split it into every K ≤ max_chains that divides the group size, and
+    score the candidate sub-ring sets with ``program_latency`` of that
+    collective's planner (``algo`` selects the all-reduce schedule and
+    is ignored otherwise) — so K is chosen from modeled *bytes and
+    cycles*. Returns the winning ``(k, sub_rings)``; K=1 is always a
+    candidate, so the result never models worse than the single ring.
     """
     dsts = list(dict.fromkeys(dsts))
     if collective == "broadcast":
@@ -562,8 +601,10 @@ def choose_num_chains(
             cost_fn=lambda cs: multi_chain_latency(topo, src, cs, size_bytes, p),
         )
         return len(chains), chains
-    if collective != "all_reduce":
+    if collective not in RING_COLLECTIVES:
         raise ValueError(f"unknown collective {collective!r}")
+    if collective == "all_reduce" and algo not in ALL_REDUCE_ALGOS:
+        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
 
     if not dsts:
         return 1, [[int(src)]]
@@ -575,12 +616,39 @@ def choose_num_chains(
             continue
         size = n // k
         rings = [ring[i * size : (i + 1) * size] for i in range(k)]
-        lat = all_reduce_latency(topo, src, rings, size_bytes, p, algo=algo)
+        program = plan_ring_collective(
+            collective, topo.num_nodes, rings, algo=algo
+        )
+        lat = program_latency(topo, src, program, size_bytes, p)
         assert isinstance(lat, int)
         if best is None or lat < best[0]:
             best = (lat, k, rings)
     assert best is not None  # k=1 always divides
     return best[1], best[2]
+
+
+RING_COLLECTIVES = ("all_reduce", "reduce_scatter", "all_gather", "all_to_all")
+
+
+def plan_ring_collective(
+    collective: str,
+    num_devices: int,
+    orders: Sequence[Sequence[int]],
+    *,
+    algo: str = "rs_ag",
+) -> ChainProgram:
+    """Planner dispatch for the ring collectives (the unified seam
+    ``choose_num_chains`` and the benchmarks score through)."""
+    rings = tuple(tuple(int(d) for d in c) for c in orders if len(c))
+    if collective == "all_reduce":
+        return prg.plan_all_reduce(num_devices, rings, algo)
+    if collective == "reduce_scatter":
+        return prg.plan_reduce_scatter(num_devices, rings)
+    if collective == "all_gather":
+        return prg.plan_all_gather(num_devices, rings)
+    if collective == "all_to_all":
+        return prg.plan_all_to_all(num_devices, rings)
+    raise ValueError(f"unknown collective {collective!r}")
 
 
 # ---------------------------------------------------------------------------

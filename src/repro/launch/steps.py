@@ -199,6 +199,15 @@ VARIANTS: dict[str, dict] = {
         "attn_impl": "chunked", "mla_absorb": True,
         "moe_bf16_wire": True, "bf16_norm": True, "moe_row_dispatch": True,
     },
+    # Torrent expert-parallel MoE: tokens stay DP-sharded, experts
+    # partition over the DP axes, dispatch/combine run as explicit
+    # scheduled chain all-to-alls (models.moe.moe_apply_ep via the
+    # ChainProgram planner) instead of GSPMD reshardings. Sweepable
+    # next to collectives=; falls back to the flat path when the DP
+    # group doesn't divide experts/batch.
+    "moe-ep": {"moe_ep_dispatch": True},
+    # moe-ep with the K=2 multi-chain all-to-all exchange.
+    "moe-ep-k2": {"moe_ep_dispatch": True, "moe_ep_chains": 2},
     # opt + query-sequence-sharded attention (heads ∤ TP archs).
     "opt-seq": {
         "attn_impl": "chunked", "mla_absorb": True,

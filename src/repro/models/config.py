@@ -104,6 +104,13 @@ class ModelConfig:
     # route/dispatch MoE per batch row: row-local scatter indices let
     # GSPMD shard expert flops over DP × EP (see moe_apply_rowwise).
     moe_row_dispatch: bool = False
+    # expert-parallel MoE over the DP axes with Torrent chain
+    # all-to-all dispatch/combine (see moe_apply_ep); requires the DP
+    # group size to divide num_experts and the batch, else falls back
+    # to the flat path.
+    moe_ep_dispatch: bool = False
+    # K sub-rings for the EP dispatch exchange (multi-chain all-to-all).
+    moe_ep_chains: int = 1
 
     # --- derived -------------------------------------------------------
     @property

@@ -13,6 +13,18 @@ tensors, so memory scales with T·k·d (the real dispatch traffic):
 5. gather-combine weighted by router probs (``mode='fill'`` zeroes
    dropped assignments).
 
+``moe_apply_ep`` is the *Torrent* expert-parallel formulation: tokens
+stay sharded over the DP axes, experts are partitioned over the same
+axes, and the dispatch/combine exchanges are explicit scheduled chain
+all-to-alls (``parallel.collectives.torrent_all_to_all`` — the
+ChainProgram IR's ``plan_all_to_all``), so the MoE token exchange is
+OURS instead of a GSPMD resharding. Enabled by
+``cfg.moe_ep_dispatch``: inside a Torrent ``shard_map`` region (e.g.
+under ``torrent_grad_reduce``) it runs directly on the manual DP axes;
+under GSPMD it opens its own nested subset ``shard_map`` over the DP
+axes when a concrete mesh is reachable (``hints.concrete_mesh``), and
+falls back to the flat path otherwise.
+
 The aux load-balancing loss (switch-style E·Σ f_i·P_i) is returned to
 the caller and folded into the training loss.
 """
@@ -23,6 +35,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from .config import ModelConfig
 from .layers import cast, swiglu, swiglu_init
@@ -54,8 +67,16 @@ def moe_apply(
     params: dict, x: jax.Array, cfg: ModelConfig
 ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (out, aux_loss)."""
+    if cfg.moe_ep_dispatch:
+        return _moe_apply_ep_auto(params, x, cfg)
     if cfg.moe_row_dispatch:
         return moe_apply_rowwise(params, x, cfg)
+    return _moe_apply_flat(params, x, cfg)
+
+
+def _moe_apply_flat(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.moe_top_k
     T = B * S
@@ -203,6 +224,209 @@ def moe_apply_rowwise(
     out = out.astype(x.dtype)
     out = maybe_shard(out, BATCH, None, None)
     return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Torrent expert-parallel dispatch (chain all-to-all over the DP axes)
+# ---------------------------------------------------------------------------
+
+
+def _bucket_capacity(assignments: int, buckets: int, factor: float) -> int:
+    """Static per-bucket capacity for ``assignments`` spread over
+    ``buckets`` (same rounding policy as :func:`capacity`)."""
+    c = int(math.ceil(assignments / buckets * factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_apply_ep(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    axis_name,
+    *,
+    num_chains: int = 1,
+    scheduler: str = "tsp",
+) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE — must run INSIDE ``shard_map`` over
+    ``axis_name``: ``x`` is this shard's local ``(B_loc, S, d)`` tokens
+    and the ``num_experts`` routed experts are partitioned contiguously
+    over the axis (device ``i`` owns experts ``[i·E/n, (i+1)·E/n)``).
+
+    Dispatch is two explicit Torrent chain all-to-alls
+    (``parallel.collectives.torrent_all_to_all``; ``num_chains > 1``
+    uses the K-ring schedule): tokens travel to their experts' owners,
+    outputs travel back, and combine happens at the source with the
+    router weights that never left. Capacity is enforced twice with the
+    standard drop policy — per (source, destination) pair on the wire
+    (``C_pair``) and per local expert at the receiver (``C_loc``) —
+    both with ``cfg.capacity_factor`` headroom.
+
+    The aux loss is the *global* load-balance loss: the per-shard
+    ``f_i``/``P_i`` statistics are ``pmean``-ed over the axis before
+    the product, so it matches the single-device computation exactly
+    (equal shard sizes).
+    """
+    from repro.core import chainwrite as cw
+    from repro.parallel.collectives import torrent_all_to_all
+
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.moe_top_k
+    n = cw._axis_size(axis_name)
+    me = cw._axis_index(axis_name)
+    if E % n:
+        raise ValueError(f"num_experts={E} not divisible by EP group size {n}")
+    E_loc = E // n
+    T = B * S
+    xf = x.reshape(T, d)
+
+    # -- routing (f32, local tokens; global aux via pmean'd stats) ------
+    logits = xf.astype(jnp.float32) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+
+    P_i = jax.lax.pmean(probs.mean(0), axis_name)
+    f_loc = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    f_i = jax.lax.pmean(f_loc, axis_name)
+    aux = cfg.router_aux_loss_coef * E * jnp.sum(f_i * P_i)
+
+    # -- dispatch: (n, C_pair, d) per-destination send buffers ----------
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    tok_id = jnp.arange(T * k) // k
+    dest = (flat_e // E_loc).astype(jnp.int32)  # owner device per assignment
+    sort_idx = jnp.argsort(dest, stable=True)
+    sorted_d = dest[sort_idx]
+    starts = jnp.searchsorted(sorted_d, jnp.arange(n), side="left")
+    pos_sorted = jnp.arange(T * k) - starts[sorted_d]
+    pos = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(
+        pos_sorted.astype(jnp.int32))
+
+    C_pair = _bucket_capacity(T * k, n, cfg.capacity_factor)
+    send = jnp.zeros((n, C_pair, d), x.dtype).at[dest, pos].set(
+        xf[tok_id], mode="drop")
+    send_e = jnp.full((n, C_pair), -1, jnp.int32).at[dest, pos].set(
+        flat_e.astype(jnp.int32), mode="drop")
+
+    # -- the wire: tokens (and their expert ids) to the expert owners --
+    recv = torrent_all_to_all(
+        send, axis_name, num_chains=num_chains, scheduler=scheduler)
+    recv_e = torrent_all_to_all(
+        send_e, axis_name, num_chains=num_chains, scheduler=scheduler)
+
+    # -- receiver-side dispatch into the (E_loc, C_loc, d) buffer -------
+    re = recv_e.reshape(-1)  # (n*C_pair,)
+    le = re - me * E_loc  # local expert index
+    valid = (re >= 0) & (le >= 0) & (le < E_loc)
+    C_loc = _bucket_capacity(n * C_pair, E_loc, cfg.capacity_factor)
+    key = jnp.where(valid, le, E_loc).astype(jnp.int32)
+    sort2 = jnp.argsort(key, stable=True)
+    sorted_k = key[sort2]
+    starts2 = jnp.searchsorted(sorted_k, jnp.arange(E_loc), side="left")
+    pos2_sorted = jnp.arange(n * C_pair) - starts2[
+        jnp.clip(sorted_k, 0, E_loc - 1)]
+    pos2 = jnp.zeros((n * C_pair,), jnp.int32).at[sort2].set(
+        pos2_sorted.astype(jnp.int32))
+    le_s = jnp.where(valid, le, E_loc).astype(jnp.int32)  # OOB -> dropped
+    pos2 = jnp.where(valid, pos2, C_loc)
+
+    rx = recv.reshape(n * C_pair, d)
+    buf = jnp.zeros((E_loc, C_loc, d), x.dtype).at[le_s, pos2].set(
+        rx, mode="drop")
+
+    # -- local expert FFN (params replicated; slice my expert block) ----
+    wg = lax.dynamic_slice_in_dim(cast(params["wg"]), me * E_loc, E_loc, 0)
+    wu = lax.dynamic_slice_in_dim(cast(params["wu"]), me * E_loc, E_loc, 0)
+    wd = lax.dynamic_slice_in_dim(cast(params["wd"]), me * E_loc, E_loc, 0)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, wg)
+    ) * jnp.einsum("ecd,edf->ecf", buf, wu)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd)
+
+    # -- results back to the token owners, combine at the source --------
+    back = out_buf.at[le_s, pos2].get(
+        mode="fill", fill_value=0).reshape(n, C_pair, d)
+    ret = torrent_all_to_all(
+        back, axis_name, num_chains=num_chains, scheduler=scheduler)
+    gathered = ret.at[dest, pos].get(mode="fill", fill_value=0)  # (T*k, d)
+    weighted = gathered.astype(jnp.float32) * flat_p[:, None]
+    out = weighted.reshape(T, k, d).sum(1)
+
+    if cfg.num_shared_experts:
+        out = out + swiglu(params["shared"], xf).astype(jnp.float32)
+    out = out.astype(x.dtype).reshape(B, S, d)
+    return out, aux
+
+
+def _moe_apply_ep_auto(
+    params: dict, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Route ``cfg.moe_ep_dispatch`` to the right execution context:
+
+    * DP axes already Manual (inside a Torrent subset ``shard_map``,
+      e.g. under ``torrent_grad_reduce``): call :func:`moe_apply_ep`
+      directly — ``x`` is already the local token shard;
+    * DP axes Auto under GSPMD with a reachable concrete mesh: open a
+      nested subset ``shard_map`` over the DP axes around
+      :func:`moe_apply_ep`;
+    * anything else (no mesh, no DP axes, indivisible experts/batch):
+      fall back to the GSPMD-managed paths.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import hints
+
+    def fallback():
+        if cfg.moe_row_dispatch:
+            return moe_apply_rowwise(params, x, cfg)
+        return _moe_apply_flat(params, x, cfg)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return fallback()
+    dp = hints.dp_axes(mesh.axis_names)
+    if not dp:
+        return fallback()
+    axis = dp if len(dp) > 1 else dp[0]
+    manual = set(hints.manual_axis_names())
+    def ep_chains(group: int) -> int:
+        # moe_ep_chains must divide the EP group; degrade to the
+        # single ring rather than crash at trace time.
+        k = cfg.moe_ep_chains
+        return k if k > 1 and group % k == 0 else 1
+
+    if all(a in manual for a in dp):
+        group = 1
+        for a in dp:
+            group *= mesh.shape.get(a, 1)
+        if cfg.num_experts % group:  # documented graceful fallback
+            return fallback()
+        return moe_apply_ep(
+            params, x, cfg, axis, num_chains=ep_chains(group))
+    if any(a in manual for a in dp):
+        return fallback()  # partially manual: no coherent EP axis
+
+    concrete = hints.concrete_mesh()
+    if concrete is None:
+        return fallback()
+    dp_size = 1
+    for a in dp:
+        dp_size *= concrete.shape[a]
+    if cfg.num_experts % dp_size or x.shape[0] % dp_size:
+        return fallback()
+
+    def inner(p, xs):
+        return moe_apply_ep(p, xs, cfg, axis, num_chains=ep_chains(dp_size))
+
+    xspec = P(dp if len(dp) > 1 else dp[0], None, None)
+    return jax.shard_map(
+        inner,
+        mesh=concrete,
+        in_specs=(P(), xspec),
+        out_specs=(xspec, P()),
+        axis_names=set(dp),
+        check_vma=False,
+    )(params, x)
 
 
 def moe_ref(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:

@@ -29,6 +29,13 @@ stays GSPMD-managed. Options mirror the paper's knobs:
 * ``compress`` — int8 error-feedback wire format (4× fewer bytes).
   ``compress`` keeps the single-ring schedule (the int8 wire format is
   defined per ring hop), so ``num_chains`` is ignored when set.
+
+Since the ChainProgram refactor the OTHER ring collectives are exposed
+through the same seam: ``torrent_all_to_all`` (the MoE expert-dispatch
+exchange — see ``models.moe.moe_apply_ep``), ``torrent_reduce_scatter``
+and ``torrent_all_gather`` each accept ``num_chains`` and route through
+``core.chainwrite.multi_chain_*`` (K disjoint sub-rings planned by
+``core.program``; K=1 is the classic scheduled ring).
 """
 
 from __future__ import annotations
@@ -44,6 +51,7 @@ from repro.core import chainwrite as cw
 from repro.core import simulator as sim
 from repro.core.scheduling import SCHEDULERS, partition_schedule, reform_chain
 from repro.core.topology import MeshTopology
+from repro.parallel import hints
 from repro.runtime.compression import compressed_chain_all_reduce
 
 PyTree = Any
@@ -157,7 +165,58 @@ def sub_ring_orders(
 
 
 def _dp_axes(mesh) -> tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return hints.dp_axes(mesh.axis_names)
+
+
+def _axis_orders(
+    axis_name, num_chains: int, scheduler: str
+) -> list[tuple[int, ...]]:
+    """Resolve the K sub-ring partition of a manual axis at trace time
+    (K=1 -> the single snake ring). Must run inside ``shard_map``."""
+    size = cw._axis_size(axis_name)
+    if num_chains <= 1 or size <= num_chains:
+        return [ring_order_for_axis(size, scheduler)]
+    return sub_ring_orders(size, num_chains, scheduler)
+
+
+def torrent_all_to_all(
+    x, axis_name, *, num_chains: int = 1, scheduler: str = "tsp"
+):
+    """Scheduled-ring all-to-all over a manual axis (the MoE
+    expert-dispatch exchange): ``x`` has leading dim = axis size, chunk
+    ``x[j]`` is destined to device ``j``; returns ``out[s]`` = the
+    chunk device ``s`` sent here. ``num_chains > 1`` uses the K-ring
+    schedule (same wire bytes — a chunk train cannot shrink — but
+    ring-local/position-paired hops). Must run inside ``shard_map``."""
+    orders = _axis_orders(axis_name, num_chains, scheduler)
+    if len(orders) == 1:
+        return cw.chain_all_to_all(x, axis_name, orders[0])
+    return cw.multi_chain_all_to_all(x, axis_name, orders)
+
+
+def torrent_reduce_scatter(
+    x, axis_name, *, num_chains: int = 1, scheduler: str = "tsp"
+):
+    """Scheduled-ring reduce-scatter over a manual axis: ``x`` has
+    leading dim = axis size; returns this device's fully reduced
+    chunk. Must run inside ``shard_map``."""
+    orders = _axis_orders(axis_name, num_chains, scheduler)
+    if len(orders) == 1:
+        return cw.chain_reduce_scatter(x, axis_name, orders[0])
+    return cw.multi_chain_reduce_scatter(x, axis_name, orders)
+
+
+def torrent_all_gather(
+    x, axis_name, *, num_chains: int = 1, scheduler: str = "tsp",
+    tiled: bool = False,
+):
+    """Scheduled-ring all-gather over a manual axis (device-id indexed
+    stack, or concatenation with ``tiled=True``). Must run inside
+    ``shard_map``."""
+    orders = _axis_orders(axis_name, num_chains, scheduler)
+    if len(orders) == 1:
+        return cw.chain_all_gather(x, axis_name, orders[0], tiled=tiled)
+    return cw.multi_chain_all_gather(x, axis_name, orders, tiled=tiled)
 
 
 @functools.lru_cache(maxsize=None)

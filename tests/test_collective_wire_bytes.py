@@ -1,0 +1,86 @@
+"""program_wire_bytes vs trip-count-aware HLO parses, collective × K.
+
+The ChainProgram byte model claims to predict the HLO
+``collective-permute`` wire attribution of the SPMD executor for EVERY
+collective and ring partition. This promotes the ``bench_collectives``
+byte assertions into the pytest suite: one 8-virtual-device subprocess
+compiles each collective × K ∈ {1, 2, 4}, parses the compiled HLO with
+``launch.hlo_cost`` and pins the parsed collective bytes against
+``ChainProgram.wire_bytes`` (and, for all-reduce, against
+``simulator.all_reduce_wire_bytes`` — the same number by construction).
+"""
+
+from __future__ import annotations
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+SNIPPET = """
+from repro.core import chainwrite as cw
+from repro.core import program as prg
+from repro.launch import hlo_cost
+
+L = 8
+mesh = jax.make_mesh((L,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+N = 1 << 12  # 4k f32 per device
+RINGS = {
+    1: ((0, 1, 2, 3, 4, 5, 6, 7),),
+    2: ((3, 1, 0, 2), (7, 5, 6, 4)),
+    4: ((0, 2), (4, 6), (1, 3), (5, 7)),
+}
+
+def coll_bytes(fn, x):
+    sm = jax.shard_map(fn, mesh=mesh, in_specs=P('x'), out_specs=P('x'))
+    jitted = jax.jit(sm)
+    return hlo_cost.analyze(jitted.lower(x).compile().as_text()).coll_bytes
+
+def pin(name, got, want):
+    assert want == 0 or 0.9 * want <= got <= 1.35 * want, (name, got, want)
+    print(f"{name}: hlo={got:.0f} modeled={want}")
+
+x1 = jnp.ones((L, N), jnp.float32)           # per-device (N,) payload
+x2 = jnp.ones((L, L, N // 8), jnp.float32)   # per-device (L, N/8) train
+
+for K, orders in RINGS.items():
+    S = L // K
+    for algo in ('rs_ag', 'rotation'):
+        prog = prg.plan_all_reduce(L, orders, 'rs_ag' if K == 1 else algo)
+        got = coll_bytes(
+            lambda v, o=orders, a=algo: cw.multi_chain_all_reduce(
+                v[0], 'x', o, algo=a)[None], x1)
+        pin(f"all_reduce k{K} {algo}", got, prog.wire_bytes(N * 4))
+        from repro.core.simulator import all_reduce_wire_bytes
+        assert prog.wire_bytes(N * 4) == all_reduce_wire_bytes(S, K, N * 4, algo)
+
+    prog = prg.plan_reduce_scatter(L, orders)
+    got = coll_bytes(
+        lambda v, o=orders: cw.multi_chain_reduce_scatter(v[0], 'x', o)[None],
+        x2)
+    pin(f"reduce_scatter k{K}", got, prog.wire_bytes(L * (N // 8) * 4))
+
+    prog = prg.plan_all_gather(L, orders)
+    got = coll_bytes(
+        lambda v, o=orders: cw.multi_chain_all_gather(
+            v[0], 'x', o, tiled=True)[None], x1)
+    pin(f"all_gather k{K}", got, prog.wire_bytes(N * 4))
+
+    prog = prg.plan_all_to_all(L, orders)
+    got = coll_bytes(
+        lambda v, o=orders: cw.multi_chain_all_to_all(v[0], 'x', o)[None], x2)
+    pin(f"all_to_all k{K}", got, prog.wire_bytes(L * (N // 8) * 4))
+
+# broadcast (non-pipelined stepped path, head fan-out double-counted
+# per the num_permutes accounting)
+chains = ((1, 2, 3), (4, 5, 6, 7))
+prog = prg.plan_broadcast(L, 0, chains)
+got = coll_bytes(
+    lambda v: cw.multi_chain_broadcast(v[0], 'x', 0, chains)[None], x1)
+pin("broadcast k2", got, prog.wire_bytes(N * 4))
+print("WIRE BYTES OK")
+"""
+
+
+def test_program_wire_bytes_pin_hlo_parses(run_multidevice):
+    out = run_multidevice(SNIPPET, timeout=1200)
+    assert "WIRE BYTES OK" in out

@@ -311,6 +311,174 @@ def test_multi_chain_all_reduce_k1_delegates_to_chain(run_multidevice):
     """, timeout=900)
 
 
+def test_degraded_broadcast_k4_matches_program_interpreter(run_multidevice):
+    """K=4 degraded broadcast (oracle previously pinned only for
+    K ∈ {1,2,3}): the SPMD collective must match BOTH the semantic
+    oracle and the ChainProgram interpreter replaying the exact
+    degraded schedule (``plan_broadcast`` over the spliced chains)."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+    from repro.core import program as prg
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    xs = jnp.arange(8 * 6 * 2, dtype=jnp.float32).reshape(8, 6, 2) + 1.0
+
+    cases = [
+        (0, [(1, 2), (3, 4), (5,), (6, 7)], 2),   # mid-chain
+        (0, [(1, 2), (3, 4), (5,), (6, 7)], 5),   # whole sub-chain dies
+        (0, [(1, 2), (3, 4), (5,), (6, 7)], 7),   # tail
+        (3, [(1, 0), (2,), (4, 5), (6, 7)], 4),   # non-zero head
+    ]
+    for head, chains, failed in cases:
+        for frames in (1, 2, 3):
+            def f(x, head=head, chains=chains, failed=failed, frames=frames):
+                return cw.degraded_multi_chain_broadcast(
+                    x[0], 'x', head, chains, failed, num_frames=frames)[None]
+            y = jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+            expect = ref.degraded_multi_broadcast_ref(
+                np.asarray(xs), head, chains, failed)
+            np.testing.assert_array_equal(
+                np.asarray(y), expect, err_msg=f"{head} {chains} {failed}")
+            # the program interpreter replays the degraded schedule
+            prog = prg.plan_broadcast(
+                8, head, tuple(cw.degraded_chains(chains, failed)))
+            replay = ref.run_program_ref(np.asarray(xs), prog)
+            np.testing.assert_array_equal(
+                np.asarray(y), replay, err_msg=f"replay {head} {failed}")
+            assert not np.asarray(y)[failed].any()  # dead node untouched
+    print("degraded K=4 OK")
+    """, timeout=900)
+
+
+def test_multi_ring_rs_ag_a2a_match_program_oracles(run_multidevice):
+    """The new K-ring reduce-scatter / all-gather / all-to-all SPMD
+    collectives, pinned BIT-exactly against the program interpreter
+    (and semantically against the schedule-free oracles)."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(11)
+    ring_sets = [
+        [(0, 1, 2, 3, 4, 5, 6, 7)],
+        [(3, 1, 0, 2), (7, 5, 6, 4)],
+        [(0, 2), (4, 6), (1, 3), (5, 7)],
+    ]
+    xs = jnp.asarray(rng.normal(size=(8, 4, 3)).astype(np.float32))
+    xs2 = jnp.asarray(rng.normal(size=(8, 8, 5)).astype(np.float32))
+    for orders in ring_sets:
+        def ag(x, o=orders):
+            return cw.multi_chain_all_gather(x[0], 'x', o)[None]
+        y = jax.jit(jax.shard_map(ag, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+        np.testing.assert_array_equal(
+            np.asarray(y), ref.multi_all_gather_ref(np.asarray(xs), orders))
+        np.testing.assert_allclose(
+            np.asarray(y), ref.all_gather_ref(np.asarray(xs)), rtol=1e-6)
+
+        def agt(x, o=orders):
+            return cw.multi_chain_all_gather(x[0], 'x', o, tiled=True)[None]
+        y = jax.jit(jax.shard_map(agt, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+        np.testing.assert_array_equal(
+            np.asarray(y),
+            ref.multi_all_gather_ref(np.asarray(xs), orders, tiled=True))
+
+        def rs(x, o=orders):
+            return cw.multi_chain_reduce_scatter(x[0], 'x', o)[None]
+        y = jax.jit(jax.shard_map(rs, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs2)
+        np.testing.assert_array_equal(
+            np.asarray(y), ref.multi_reduce_scatter_ref(np.asarray(xs2), orders))
+        np.testing.assert_allclose(
+            np.asarray(y), ref.reduce_scatter_ref(np.asarray(xs2)),
+            rtol=1e-5, atol=1e-5)
+
+        def a2a(x, o=orders):
+            return cw.multi_chain_all_to_all(x[0], 'x', o)[None]
+        y = jax.jit(jax.shard_map(a2a, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs2)
+        np.testing.assert_array_equal(
+            np.asarray(y), ref.all_to_all_ref(np.asarray(xs2)))
+
+    # K=1 wrappers and multi variants interpret the identical program
+    def single(x):
+        return cw.chain_reduce_scatter(x[0], 'x', (3, 1, 0, 2, 7, 5, 6, 4))[None]
+    def multi(x):
+        return cw.multi_chain_reduce_scatter(
+            x[0], 'x', [(3, 1, 0, 2, 7, 5, 6, 4)])[None]
+    ys = jax.jit(jax.shard_map(single, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs2)
+    ym = jax.jit(jax.shard_map(multi, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs2)
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(ym))
+
+    # validation parity: non-partitions raise
+    for bad in ([(0, 1, 2), (3, 4, 5, 6, 7)], [(0, 1), (2, 3)]):
+        for fn in (cw.multi_chain_reduce_scatter, cw.multi_chain_all_to_all):
+            try:
+                jax.jit(jax.shard_map(
+                    lambda x, b=bad, f=fn: f(x[0], 'x', b)[None],
+                    mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs2)
+                raise SystemExit("expected ValueError for " + str(bad))
+            except ValueError:
+                pass
+    print("multi-ring rs/ag/a2a OK")
+    """, timeout=900)
+
+
+def test_moe_ep_dispatch_end_to_end(run_multidevice):
+    """Torrent MoE expert parallelism: moe_apply_ep inside shard_map
+    over 8 devices — Torrent chain a2a dispatch/combine — matches the
+    dense per-token reference at generous capacity, for K ∈ {1, 2}
+    dispatch chains; and the cfg.moe_ep_dispatch auto path (nested
+    subset shard_map under GSPMD) produces the same result."""
+    run_multidevice("""
+    import dataclasses
+    from repro import configs as C
+    from repro.models import moe as M
+
+    cfg = C.get_smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    assert cfg.num_experts % 8 == 0
+    params = M.moe_init(jax.random.PRNGKey(0), cfg)
+    B, S, d = 8, 4, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32) * 0.5
+    mesh = jax.make_mesh((8,), ('data',), axis_types=(jax.sharding.AxisType.Auto,))
+    want = np.asarray(M.moe_ref(params, x, cfg))
+    flat_out, flat_aux = M.moe_apply(params, x, cfg)
+
+    outs = {}
+    for k in (1, 2):
+        def ep(p, xs, k=k):
+            return M.moe_apply_ep(p, xs, cfg, 'data', num_chains=k)
+        out, aux = jax.jit(jax.shard_map(
+            ep, mesh=mesh, in_specs=(P(), P('data')),
+            out_specs=(P('data'), P()), check_vma=False))(params, x)
+        np.testing.assert_allclose(np.asarray(out), want, rtol=2e-2, atol=2e-2)
+        np.testing.assert_allclose(
+            float(aux), float(flat_aux), rtol=1e-4, atol=1e-6)
+        outs[k] = np.asarray(out)
+    np.testing.assert_array_equal(outs[1], outs[2])
+
+    # the auto path: cfg.moe_ep_dispatch under GSPMD (jax.set_mesh)
+    cfg_ep = dataclasses.replace(cfg, moe_ep_dispatch=True)
+    with jax.set_mesh(mesh):
+        out_auto, aux_auto = jax.jit(
+            lambda p, xs: M.moe_apply(p, xs, cfg_ep))(params, x)
+    np.testing.assert_array_equal(np.asarray(out_auto), outs[1])
+
+    # gradients flow through the dispatch/combine exchanges
+    def loss(p, xs):
+        def inner(pp, xx):
+            return M.moe_apply_ep(pp, xx, cfg, 'data')
+        o, a = jax.shard_map(
+            inner, mesh=mesh, in_specs=(P(), P('data')),
+            out_specs=(P('data'), P()), check_vma=False)(p, xs)
+        return jnp.mean(o ** 2) + a
+    g = jax.jit(jax.grad(loss))(params, x)
+    assert all(np.isfinite(np.asarray(v)).all() for v in jax.tree.leaves(g))
+    print("moe ep OK")
+    """, timeout=900)
+
+
 def test_torrent_grad_reduce_num_chains(run_multidevice):
     """The num_chains/algo knobs: identical grads for K in {1, 2, 4,
     "auto"} under either all-reduce schedule."""

@@ -1,0 +1,318 @@
+"""Device-free ChainProgram golden-schedule tests (QUICK fast lane).
+
+Pins the schedule IR's invariants without touching a device:
+
+* golden step/edge/byte shapes for every planner × K (step counts,
+  per-step fused-ppermute structure, shard-fraction accounting);
+* :meth:`ChainProgram.validate` — edge-disjointness within a step,
+  table bounds, width transitions;
+* the numpy program interpreter against the *semantic* oracles for
+  every collective × random ring partitions (property-style via
+  _hypothesis_compat) — the planners compute the right thing for any
+  schedule;
+* the simulator re-expression: ``multi_chain_latency`` /
+  ``all_reduce_latency`` ARE ``program_latency`` of the planned
+  program, and ``program_wire_bytes`` matches the closed-form byte
+  predictions;
+* ``choose_num_chains`` extended to reduce_scatter / all_gather /
+  all_to_all through the unified model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core import chainwrite_ref as ref
+from repro.core import program as prg
+from repro.core.simulator import (
+    RING_COLLECTIVES,
+    all_reduce_latency,
+    all_reduce_wire_bytes,
+    choose_num_chains,
+    multi_chain_latency,
+    plan_ring_collective,
+    program_latency,
+)
+from repro.core.topology import MeshTopology
+
+L = 8
+KB = 1024
+RING_SETS = {
+    1: ((0, 1, 2, 3, 4, 5, 6, 7),),
+    2: ((3, 1, 0, 2), (7, 5, 6, 4)),
+    4: ((0, 2), (4, 6), (1, 3), (5, 7)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Golden schedules
+# ---------------------------------------------------------------------------
+
+
+def test_all_reduce_step_counts_and_fractions():
+    for K, orders in RING_SETS.items():
+        S = L // K
+        p = prg.plan_all_reduce(L, orders, "rs_ag")
+        if K == 1:
+            # single ring: device-id RS+AG, 1/L shards
+            assert p.num_steps == 2 * (L - 1)
+            assert p.addr_shards == L and p.out_slots == L
+        else:
+            assert p.num_steps == 2 * (S - 1) + (K - 1)
+            assert p.addr_shards == S and p.out_slots == S
+            assert sum(1 for s in p.steps if s.tag == "cross") == K - 1
+        assert all(s.width == 1 for s in p.steps)
+        assert all(s.num_permutes() == 1 for s in p.steps)
+
+        r = prg.plan_all_reduce(L, orders, "rotation")
+        if K > 1:
+            assert r.num_steps == S + K - 2
+            assert r.addr_shards == 1  # full payloads
+        else:
+            assert r.num_steps == 2 * (L - 1)  # K=1 delegation: RS+AG
+
+
+def test_ring_collective_step_counts():
+    B = 1 << 20
+    for K, orders in RING_SETS.items():
+        S = L // K
+        rs = prg.plan_reduce_scatter(L, orders)
+        assert rs.num_steps == L - 1 if K == 1 else (S - 1) + (K - 1)
+        ag = prg.plan_all_gather(L, orders)
+        assert ag.num_steps == (S - 1) + (K - 1)
+        a2a = prg.plan_all_to_all(L, orders)
+        assert a2a.num_steps == L - 1  # a chunk train cannot shrink
+        # byte accounting: every K matches the single ring
+        assert rs.wire_bytes(B) == (L - 1) * (B // L)
+        assert ag.wire_bytes(B) == (L - 1) * B
+        assert a2a.wire_bytes(B) == (L - 1) * B
+
+
+def test_broadcast_program_structure():
+    chains = ((1, 2, 3), (4, 5, 6, 7))
+    p = prg.plan_broadcast(L, 0, chains)
+    assert p.kind == "pipeline" and p.head == 0
+    assert p.num_steps == 4  # longest chain
+    # step 0 fans out from the head: 2 edges, 2 permutes
+    assert p.steps[0].edges == ((0, 1), (0, 4))
+    assert p.steps[0].num_permutes() == 2
+    # later steps are single fused hops per live chain
+    assert p.steps[1].num_permutes() == 1
+    assert p.steps[3].edges == ((6, 7),)
+    # every step has unique destinations (edge-disjointness)
+    for s in p.steps:
+        dsts = [e[1] for e in s.edges]
+        assert len(set(dsts)) == len(dsts)
+
+
+def test_stepped_programs_have_disjoint_edges():
+    for K, orders in RING_SETS.items():
+        for plan in (
+            prg.plan_all_reduce(L, orders, "rs_ag"),
+            prg.plan_all_reduce(L, orders, "rotation"),
+            prg.plan_reduce_scatter(L, orders),
+            prg.plan_all_gather(L, orders),
+            prg.plan_all_to_all(L, orders),
+        ):
+            for s in plan.steps:
+                srcs = [e[0] for e in s.edges]
+                dsts = [e[1] for e in s.edges]
+                assert len(set(srcs)) == len(srcs)
+                assert len(set(dsts)) == len(dsts)
+                assert s.num_permutes() <= 1
+
+
+def test_validate_rejects_malformed_programs():
+    p = prg.plan_all_reduce(L, RING_SETS[2], "rs_ag")
+    bad_step = dataclasses.replace(
+        p.steps[0], edges=p.steps[0].edges + (p.steps[0].edges[0],)
+    )
+    with pytest.raises(ValueError):
+        dataclasses.replace(p, steps=(bad_step,) + p.steps[1:]).validate()
+    # out-of-range table index
+    bad_tbl = tuple((99,) for _ in range(L))
+    with pytest.raises(ValueError):
+        dataclasses.replace(p, out_init=bad_tbl).validate()
+    # width change without a load
+    widened = dataclasses.replace(p.steps[1], width=3, load=None)
+    with pytest.raises(ValueError):
+        dataclasses.replace(p, steps=(p.steps[0], widened)).validate()
+
+
+def test_planner_validation_errors():
+    with pytest.raises(ValueError):
+        prg.plan_all_reduce(L, RING_SETS[2], "bogus")
+    with pytest.raises(ValueError):
+        prg.plan_all_reduce(L, ((0, 1, 2), (3, 4)))  # unequal
+    with pytest.raises(ValueError):
+        prg.plan_all_gather(L, ((0, 1), (1, 2)))  # overlap
+    with pytest.raises(ValueError):
+        prg.plan_all_to_all(L, ())
+    with pytest.raises(ValueError):
+        prg.plan_broadcast(L, 0, ((1, 2), (2, 3)))
+    with pytest.raises(ValueError):
+        prg.plan_broadcast(L, 0, ((1, 0),))
+
+
+# ---------------------------------------------------------------------------
+# Interpreter vs semantic oracles (property-style)
+# ---------------------------------------------------------------------------
+
+
+def _random_partition(rng, total, K):
+    perm = list(range(total))
+    rng.shuffle(perm)
+    S = total // K
+    return tuple(tuple(perm[i * S : (i + 1) * S]) for i in range(K))
+
+
+@settings(max_examples=30)
+@given(data=st.data())
+def test_planned_programs_compute_their_collectives(data):
+    K = data.draw(st.sampled_from([1, 2, 3, 4]), label="K")
+    S = data.draw(st.integers(min_value=1, max_value=4), label="S")
+    n = K * S
+    rng = random.Random(data.draw(st.integers(min_value=0, max_value=9999)))
+    orders = _random_partition(rng, n, K)
+    xs = np.random.default_rng(n * K + S).normal(size=(n, n, 3))
+    xs = xs.astype(np.float32)
+
+    got = ref.multi_reduce_scatter_ref(xs, orders)
+    np.testing.assert_allclose(
+        got, ref.reduce_scatter_ref(xs), rtol=2e-5, atol=2e-5,
+        err_msg=f"rs {orders}")
+    got = ref.multi_all_to_all_ref(xs, orders)
+    np.testing.assert_array_equal(got, ref.all_to_all_ref(xs))
+    shard = xs[:, 0]
+    got = ref.multi_all_gather_ref(shard, orders)
+    np.testing.assert_array_equal(got, ref.all_gather_ref(shard))
+    for algo in ("rs_ag", "rotation"):
+        got = ref.multi_all_reduce_ref(xs, orders, algo)
+        np.testing.assert_allclose(
+            got, ref.all_reduce_ref(xs), rtol=2e-5, atol=2e-5,
+            err_msg=f"ar {orders} {algo}")
+
+
+@settings(max_examples=20)
+@given(data=st.data())
+def test_broadcast_programs_deliver_everywhere(data):
+    n = data.draw(st.integers(min_value=2, max_value=10), label="n")
+    rng = random.Random(data.draw(st.integers(min_value=0, max_value=9999)))
+    head = rng.randrange(n)
+    dests = [d for d in range(n) if d != head]
+    rng.shuffle(dests)
+    cut = sorted(rng.sample(range(len(dests) + 1), min(2, len(dests))))
+    chains = tuple(
+        tuple(c)
+        for c in np.split(np.asarray(dests), cut)
+        if len(c)
+    )
+    xs = np.random.default_rng(n).normal(size=(n, 3)).astype(np.float32)
+    p = prg.plan_broadcast(n, head, chains)
+    got = ref.run_program_ref(xs, p)
+    np.testing.assert_array_equal(
+        got, ref.multi_broadcast_ref(xs, head, chains))
+
+
+# ---------------------------------------------------------------------------
+# Simulator re-expression
+# ---------------------------------------------------------------------------
+
+LINE8 = MeshTopology(8, 1)
+MESH = MeshTopology(4, 5)
+
+
+def test_models_are_program_latency_of_the_plans():
+    for K, orders in RING_SETS.items():
+        for algo in ("rs_ag", "rotation"):
+            plan_algo = "rs_ag" if K == 1 else algo
+            p = prg.plan_all_reduce(LINE8.num_nodes, orders, plan_algo)
+            for size in (KB, 64 * KB):
+                assert all_reduce_latency(
+                    LINE8, 0, orders, size, algo=algo
+                ) == program_latency(LINE8, 0, p, size)
+    chains = ((1, 2, 3), (4, 5, 6, 7))
+    p = prg.plan_broadcast(LINE8.num_nodes, 0, chains)
+    for size in (KB, 64 * KB):
+        assert multi_chain_latency(
+            LINE8, 0, chains, size
+        ) == program_latency(LINE8, 0, p, size)
+
+
+def test_program_wire_bytes_matches_closed_forms():
+    B = 256 * KB
+    for K, orders in RING_SETS.items():
+        S = L // K
+        for algo in ("rs_ag", "rotation"):
+            p = prg.plan_all_reduce(L, orders, "rs_ag" if K == 1 else algo)
+            assert p.wire_bytes(B) == all_reduce_wire_bytes(S, K, B, algo)
+        d = all_reduce_latency(LINE8, 0, orders, B, detail=True)
+        assert d["wire_bytes"] == all_reduce_wire_bytes(S, K, B, "rs_ag")
+
+
+def test_choose_num_chains_ring_collectives():
+    for collective in RING_COLLECTIVES:
+        for topo, n in ((LINE8, 8), (MESH, 20)):
+            k, rings = choose_num_chains(
+                topo, 0, list(range(1, n)), 256 * KB, collective=collective,
+            )
+            assert 1 <= k <= 4 and n % k == 0 and len(rings) == k
+            assert sorted(d for r in rings for d in r) == list(range(n))
+            p = plan_ring_collective(collective, topo.num_nodes, rings)
+            lat = program_latency(topo, 0, p, 256 * KB)
+            ring1 = choose_num_chains(
+                topo, 0, list(range(1, n)), 256 * KB,
+                collective=collective, max_chains=1,
+            )[1]
+            p1 = plan_ring_collective(collective, topo.num_nodes, ring1)
+            assert lat <= program_latency(topo, 0, p1, 256 * KB)
+    with pytest.raises(ValueError):
+        choose_num_chains(LINE8, 0, [1, 2], KB, collective="bogus")
+
+
+def test_subset_ring_all_reduce_prices_by_ring_size():
+    """Simulator-only subset rings (group ⊂ NoC nodes): the K=1 plan
+    must shard by the RING size, not the node count — otherwise
+    choose_num_chains underprices K=1 by num_nodes/S and always picks
+    it (regression: plan_all_reduce's device-id addressing leaked
+    addr_shards=num_devices into subset rings)."""
+    big = MeshTopology(8, 8)  # 64 nodes, 8-member group
+    ring = list(range(8))
+    B = 1 << 20
+    d = all_reduce_latency(big, 0, [ring], B, detail=True)
+    assert d["wire_bytes"] == all_reduce_wire_bytes(8, 1, B)  # 2·7·B/8
+    p = prg.plan_all_reduce(big.num_nodes, (tuple(ring),), "rs_ag")
+    assert p.addr_shards == 8
+    # and the subset-ring model stays comparable across K
+    k2 = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    d2 = all_reduce_latency(big, 0, k2, B, detail=True)
+    assert d2["wire_bytes"] == all_reduce_wire_bytes(4, 2, B)
+    # full-axis rings keep the historical device-id schedule
+    full = prg.plan_all_reduce(8, (tuple(range(8)),), "rs_ag")
+    assert full.addr_shards == 8 and full.out_slots == 8
+
+
+def test_pipelined_wire_bytes():
+    """The frame-pipelined broadcast byte model: F + L - 2 scan slots,
+    every chain edge applied per slot at 1/F frames (bench-pinned
+    against the HLO parse in BENCH_collectives.json)."""
+    B = 1 << 20
+    single = prg.plan_broadcast(L, 0, (tuple(range(1, L)),))
+    assert prg.pipelined_wire_bytes(single, B, 1) == single.wire_bytes(B)
+    assert prg.pipelined_wire_bytes(single, B, 4) == 10 * (B // 4)
+    multi = prg.plan_broadcast(L, 0, ((1, 2, 3), (4, 5, 6, 7)))
+    # 2 permutes per slot (head fan-out), 4 + 4 - 1 slots
+    assert prg.pipelined_wire_bytes(multi, B, 4) == 7 * 2 * (B // 4)
+
+
+def test_describe_emits_step_table():
+    p = prg.plan_all_reduce(L, RING_SETS[2], "rs_ag")
+    lines = list(p.describe(64 * KB))
+    assert len(lines) == p.num_steps + 2  # header + steps + total
+    assert "all_reduce" in lines[0]
+    assert "total wire bytes" in lines[-1]

@@ -105,6 +105,27 @@ def test_ar_algo_and_auto_variants_plumb_to_train_step(host_mesh, monkeypatch):
         )
 
 
+def test_moe_ep_variant_plumbs_and_compiles(host_mesh, monkeypatch):
+    """The 'moe-ep' VARIANTS bundle is a ModelConfig override (the
+    Torrent expert-parallel dispatch knob) that still lowers + compiles
+    — on a dp=1 mesh the EP path degenerates gracefully (single-member
+    exchange / flat fallback)."""
+    from repro.launch.steps import VARIANTS
+
+    shape = SMOKE_SHAPES["train"]
+    monkeypatch.setitem(C.SHAPES, shape.name, shape)
+    assert VARIANTS["moe-ep"] == {"moe_ep_dispatch": True}
+    assert VARIANTS["moe-ep-k2"] == {
+        "moe_ep_dispatch": True, "moe_ep_chains": 2}
+    cell = build_cell(
+        "deepseek-moe-16b", shape.name, host_mesh, smoke=True,
+        collectives="torrent", variant="moe-ep",
+    )
+    assert cell.cfg.moe_ep_dispatch
+    compiled = cell.lower().compile()
+    assert compiled.cost_analysis() is not None
+
+
 def test_dryrun_cell_suffix_and_num_chains_parse():
     """--num-chains accepts ints or 'auto'; the output-file suffix
     encodes the algo and K knobs so sweeps never collide."""
