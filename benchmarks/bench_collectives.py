@@ -20,7 +20,11 @@ parse) are the portable metric and must match the ChainProgram IR's
 Besides the CSV rows, ``main()`` writes ``BENCH_collectives.json`` at
 the repo root — per-benchmark ``{us, hlo_bytes, modeled_bytes,
 modeled_latency_cc}`` from the very same IR the executors run — so the
-perf trajectory is tracked across PRs.
+perf trajectory is tracked across PRs. Model-only ``recovery_k{K}_f{N}``
+entries (no HLO twin) record the ``plan_recovery`` program's wire bytes
+and ``chain_recovery_latency`` completion for K ∈ {2, 4} partitions
+with one and two concurrent failures, asserted self-consistent against
+the failure-free model.
 """
 
 from __future__ import annotations
@@ -224,6 +228,51 @@ def _modeled(name: str) -> dict:
     }
 
 
+def _recovery_metrics() -> dict[str, dict]:
+    """Modeled recovery cost (no HLO twin — recovery never executes as
+    one SPMD collective): for K ∈ {2, 4} partitions of 16 destinations
+    on the 8x8 NoC, one and two concurrent mid-chain failures, the
+    ``plan_recovery`` program's wire bytes and the
+    ``chain_recovery_latency`` completion — asserted self-consistent
+    against the failure-free model (BENCH=1 ci.sh runs this)."""
+    from repro.core import program as prg
+    from repro.core.scheduling import partition_schedule
+    from repro.core.simulator import (
+        DEFAULT_PARAMS,
+        chain_recovery_latency,
+        multi_chain_latency,
+    )
+    from repro.core.topology import MeshTopology
+
+    topo = MeshTopology(8, 8)
+    payload = N * 4
+    out: dict[str, dict] = {}
+    for k in (2, 4):
+        chains = partition_schedule(topo, list(range(1, 17)), 0, num_chains=k)
+        base = multi_chain_latency(topo, 0, chains, payload)
+        mid = [c[len(c) // 2] for c in chains]  # one mid-chain member each
+        for nf, failed in (("f1", {mid[0]}), ("f2", {mid[0], mid[1]})):
+            program = prg.plan_recovery(topo, 0, chains, frozenset(failed))
+            lat = chain_recovery_latency(topo, 0, chains, frozenset(failed), payload)
+            entry = {
+                "modeled_bytes": program.wire_bytes(payload),
+                "modeled_latency_cc": lat,
+                "failures": len(failed),
+                "num_chains": k,
+            }
+            out[f"recovery_k{k}_{nf}"] = entry
+        # the modeled invariants the JSON record is trusted for:
+        f1, f2 = out[f"recovery_k{k}_f1"], out[f"recovery_k{k}_f2"]
+        assert f1["modeled_bytes"] > 0, f1
+        assert f2["modeled_bytes"] >= f1["modeled_bytes"], (f1, f2)
+        for e in (f1, f2):
+            # recovery = detection timeout + a real re-send on top of
+            # the failure-free completion
+            assert e["modeled_latency_cc"] > base + DEFAULT_PARAMS.fail_timeout_cc, (
+                e, base)
+    return out
+
+
 def main() -> list[tuple[str, float, str]]:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -249,6 +298,14 @@ def main() -> list[tuple[str, float, str]]:
         # against their copies inside the subprocess snippet.
         assert m.get("modeled_bytes", m["hlo_bytes"]) == m["hlo_bytes"], (
             name, m)
+    # Model-only entries (no HLO twin): the recovery program's cost.
+    recovery = _recovery_metrics()
+    metrics.update(recovery)
+    for name, m in recovery.items():
+        rows.append((
+            f"collectives.{name}", float(m["modeled_latency_cc"]),
+            f"modeled_bytes={m['modeled_bytes']}",
+        ))
     with open(os.path.join(repo, "BENCH_collectives.json"), "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
         f.write("\n")

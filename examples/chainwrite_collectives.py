@@ -57,6 +57,16 @@ def show_programs():
         print(f"  modeled latency: "
               f"{program_latency(topo, 0, prog, payload)} CC\n")
 
+    # Recovery is a program too: two concurrent mid-chain failures of
+    # the K=2 broadcast — the detection window plus each re-formed
+    # suffix streaming from the member that banked the payload.
+    rec = prg.plan_recovery(topo, 0, ((1, 2, 3), (4, 5, 6, 7)), {2, 6})
+    for line in rec.describe(payload):
+        print(line)
+    print(f"  streams from banked members: {rec.group_heads}")
+    print(f"  modeled latency (incl. detection): "
+          f"{program_latency(topo, 0, rec, payload)} CC\n")
+
 
 def main():
     show_programs()

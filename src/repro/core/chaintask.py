@@ -17,14 +17,15 @@ multicast, elastic re-layout). This module is that application layer:
   (``scheduling.partition_schedule``) and drives one :class:`ChainTask`
   per sub-chain, with a merged per-phase ledger whose ``total`` is the
   concurrent critical path (``simulator.multi_chain_latency``), plus a
-  per-sub-chain ledger list (``per_chain_ledgers``). A failure
-  injected via :meth:`MultiChainTask.inject_failure` drives the
-  recovery path: the failed member's sub-chain is re-formed
-  (``scheduling.reform_chain``), the survivors still receive the
-  payload, and the recovery cycles
-  (``simulator.chain_recovery_latency``) are charged *only* to the
-  affected sub-chain's ledger — every other sub-chain's ledger is
-  CC-identical to the failure-free run.
+  per-sub-chain ledger list (``per_chain_ledgers``). Failures
+  injected via :meth:`MultiChainTask.inject_failure` accumulate a
+  failure *set* driving the recovery path: every affected sub-chain
+  is re-formed (``scheduling.reform_chain``), the survivors still
+  receive the payload, and the recovery cycles (one
+  ``core.program.plan_recovery`` schedule priced by
+  ``simulator.chain_recovery_latency``) are charged *only* to the
+  affected sub-chains' ledgers — every unaffected sub-chain's ledger
+  is CC-identical to the failure-free run.
 
 The DATA phase executes a real copy through a pluggable ``transport``
 (by default an in-process store-and-forward through per-node buffers —
@@ -273,11 +274,27 @@ class MultiChainTask:
             for chain in self.chains
         ]
         self.phase = Phase.IDLE
-        self.failed_node: int | None = None
+        self.failed_nodes: list[int] = []
         self.reformed_chains: list[list[int]] | None = None
         self.node_buffers: dict[int, np.ndarray] = {}
         self.cycle_ledger: dict[str, int] = {}
         self.per_chain_ledgers: list[dict[str, int]] = []
+
+    @property
+    def failed_node(self) -> int | None:
+        """The sole injected failure (pre-failure-set compatibility).
+
+        ``None`` before any injection; raises when several failures
+        have accumulated — use :attr:`failed_nodes` then.
+        """
+        if not self.failed_nodes:
+            return None
+        if len(self.failed_nodes) > 1:
+            raise RuntimeError(
+                f"multiple failures injected {self.failed_nodes}; "
+                "use failed_nodes"
+            )
+        return self.failed_nodes[0]
 
     def configs(self) -> list[ChainConfig]:
         """All chains' cfg frames in cfg-inject (serialization) order."""
@@ -287,28 +304,36 @@ class MultiChainTask:
     def inject_failure(self, node: int) -> None:
         """Mark chain member ``node`` as dead before :meth:`run`.
 
-        The run then takes the recovery path: ``node``'s sub-chain is
-        re-formed around it (``scheduling.reform_chain``), the payload
-        still reaches every survivor, and the recovery cycles are
-        charged only to that sub-chain's ledger.
+        May be called several times to accumulate a *set* of
+        concurrently dead members (the failure set the run recovers
+        from). The run then takes the recovery path: each affected
+        sub-chain is re-formed (``scheduling.reform_chain``), the
+        payload still reaches every survivor, and the recovery cycles
+        are charged only to the affected sub-chains' ledgers.
+
+        Injecting the same node twice, or a node that is no longer (or
+        never was) a chain member — e.g. one already spliced out of a
+        re-formed partition the task was built with — raises.
         """
         if self.phase is not Phase.IDLE:
             raise RuntimeError("failure must be injected before run()")
         node = int(node)
+        if node in self.failed_nodes:
+            raise ValueError(f"node {node} already injected as failed")
         if not any(node in chain for chain in self.chains):
             raise ValueError(f"node {node} is not a chain member")
-        self.failed_node = node
+        self.failed_nodes.append(node)
 
     def run(self, transport: Transport | None = None) -> dict[int, np.ndarray]:
         """Drive every sub-chain; returns the merged destination buffers.
 
-        With an injected failure the failed member's sub-chain is
-        re-formed and re-driven so every *surviving* destination still
-        receives the payload; the failed node gets no buffer.
+        With injected failures every affected sub-chain is re-formed
+        and re-driven so every *surviving* destination still receives
+        the payload; the failed nodes get no buffer.
         """
         self.phase = Phase.CFG_DISPATCH
-        recovery: dict[str, object] | None = None
-        if self.failed_node is None:
+        recoveries: list[dict[str, object]] = []
+        if not self.failed_nodes:
             detail = simulator.multi_chain_latency(
                 self.topo, self.source, self.chains, self.payload.nbytes,
                 self.sim_params, detail=True,
@@ -319,33 +344,34 @@ class MultiChainTask:
                 self.node_buffers.update(task.run(transport))
         else:
             rec_detail = simulator.chain_recovery_latency(
-                self.topo, self.source, self.chains, self.failed_node,
+                self.topo, self.source, self.chains, set(self.failed_nodes),
                 self.payload.nbytes, self.sim_params,
                 scheduler=self.scheduler, detail=True,
             )
-            recovery = rec_detail["recovery"]
+            recoveries = rec_detail["recoveries"]
             per_phase = rec_detail["per_phase"]  # failure-free split
             total = rec_detail["total"]  # already includes recovery
-            ci = recovery["chain"]
+            affected = {r["chain"]: r for r in recoveries}
             for i, task in enumerate(self.tasks):
-                if i != ci:
+                if i not in affected:
                     self.node_buffers.update(task.run(transport))
-            reformed = list(recovery["reformed"])
             self.reformed_chains = [
-                reformed if i == ci else list(c)
+                list(affected[i]["reformed"]) if i in affected else list(c)
                 for i, c in enumerate(self.chains)
             ]
-            if reformed:
-                degraded = ChainTask(
-                    self.topo, self.source, reformed, self.payload,
-                    order=reformed, pattern=self.pattern,
-                    sim_params=self.sim_params,
-                )
-                self.node_buffers.update(degraded.run(transport))
+            for rec in recoveries:
+                reformed = list(rec["reformed"])
+                if reformed:
+                    degraded = ChainTask(
+                        self.topo, self.source, reformed, self.payload,
+                        order=reformed, pattern=self.pattern,
+                        sim_params=self.sim_params,
+                    )
+                    self.node_buffers.update(degraded.run(transport))
         self.phase = Phase.DONE
 
         # Per-sub-chain ledgers: cfg includes the shared-port stagger;
-        # recovery cycles land only on the failed member's chain.
+        # recovery cycles land only on the failed members' chains.
         self.per_chain_ledgers = [
             {
                 "cfg": c, "grant": g, "data": d, "finish": f,
@@ -353,10 +379,10 @@ class MultiChainTask:
             }
             for (c, g, d, f) in per_phase
         ]
-        if recovery is not None:
-            lg = self.per_chain_ledgers[recovery["chain"]]
-            lg["recovery"] = recovery["recovery_cc"]
-            lg["total"] += recovery["recovery_cc"]
+        for rec in recoveries:
+            lg = self.per_chain_ledgers[rec["chain"]]
+            lg["recovery"] = rec["recovery_cc"]
+            lg["total"] += rec["recovery_cc"]
 
         # Merged ledger: the concurrent phases take the max over
         # chains; total is the true critical path.
@@ -368,8 +394,11 @@ class MultiChainTask:
             "finish": max(ph[3] for ph in phases),
             "total": total,
         }
-        if recovery is not None:
-            self.cycle_ledger["recovery"] = recovery["recovery_cc"]
+        if recoveries:
+            # concurrent per-chain recoveries: the critical-path charge
+            self.cycle_ledger["recovery"] = max(
+                r["recovery_cc"] for r in recoveries
+            )
         return self.node_buffers
 
     # -- cost predictions (runtime policy) ------------------------------

@@ -55,6 +55,7 @@ from jax import lax
 
 from . import program as prg
 from .program import ALL_REDUCE_ALGOS, ChainProgram, validate_ring_partition
+from .scheduling import FailureSpec, normalize_failed
 
 Axis = str | tuple[str, ...]
 
@@ -474,10 +475,12 @@ def multi_chain_broadcast(
 
 
 def degraded_chains(
-    chains: Sequence[Sequence[int]], failed: int
+    chains: Sequence[Sequence[int]], failed: FailureSpec
 ) -> list[tuple[int, ...]]:
-    """Splice ``failed`` out of its sub-chain (endpoint-only re-forming
-    at the SPMD layer: no topology knowledge, relative order kept).
+    """Splice the ``failed`` member(s) out of their sub-chains
+    (endpoint-only re-forming at the SPMD layer: no topology knowledge,
+    relative order kept). ``failed`` is one node id or a set of
+    concurrently dead members.
 
     Host-side callers that hold a :class:`~repro.core.topology.
     MeshTopology` should prefer ``scheduling.reform_chain`` per chain —
@@ -485,17 +488,16 @@ def degraded_chains(
     :func:`multi_chain_broadcast`; this helper is the schedule-free
     fallback. Chains emptied by the splice are dropped.
     """
-    failed = int(failed)
-    found = False
+    dead = set(normalize_failed(failed))
+    members = {int(d) for c in chains for d in c}
+    missing = sorted(dead - members)
+    if missing:
+        raise ValueError(f"failed node(s) {missing} are in no chain")
     out: list[tuple[int, ...]] = []
     for c in chains:
-        members = [int(d) for d in c]
-        kept = tuple(d for d in members if d != failed)
-        found = found or len(kept) != len(members)
+        kept = tuple(int(d) for d in c if int(d) not in dead)
         if kept:
             out.append(kept)
-    if not found:
-        raise ValueError(f"failed node {failed} is in no chain")
     return out
 
 
@@ -504,22 +506,23 @@ def degraded_multi_chain_broadcast(
     axis_name: Axis,
     head: int,
     chains: Sequence[Sequence[int]],
-    failed: int,
+    failed: FailureSpec,
     *,
     num_frames: int = 1,
 ) -> jax.Array:
-    """:func:`multi_chain_broadcast` with chain member ``failed``
-    dropped — the degraded collective a re-formed Chainwrite runs after
-    a node failure.
+    """:func:`multi_chain_broadcast` with the chain member(s) ``failed``
+    (one node id or a set of concurrently dead members) dropped — the
+    degraded collective a re-formed Chainwrite runs after node
+    failures.
 
     Every *surviving* chain member (and the head) still receives the
-    head's payload; the failed device — like any non-member — returns
+    head's payload; the failed devices — like any non-member — return
     zeros, so the paper's "nothing outside the chain is touched"
     property extends to dead nodes. K=1 with the failure in the middle
     of the single chain degrades to the spliced shorter chain.
     """
     head = int(head)
-    if int(failed) == head:
+    if head in set(normalize_failed(failed)):
         raise ValueError("the initiator (head) cannot be dropped")
     remaining = degraded_chains(chains, failed)
     if not remaining:  # every destination failed: head keeps its payload

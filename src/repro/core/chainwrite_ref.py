@@ -64,16 +64,22 @@ def multi_broadcast_ref(
 
 
 def degraded_multi_broadcast_ref(
-    xs: np.ndarray, head: int, chains: Sequence[Sequence[int]], failed: int
+    xs: np.ndarray, head: int, chains: Sequence[Sequence[int]], failed
 ) -> np.ndarray:
     """Oracle for ``degraded_multi_chain_broadcast``: the head and every
     *surviving* chain member end with the head's payload; the failed
-    node — like any non-member — ends with zeros."""
+    node(s) — like any non-member — end with zeros. ``failed`` is one
+    node id or a set of concurrently dead members."""
+    dead = (
+        {int(failed)}
+        if isinstance(failed, (int, np.integer))
+        else {int(f) for f in failed}
+    )
     out = np.zeros_like(xs)
     out[head] = xs[head]
     for chain in chains:
         for d in chain:
-            if d != failed:
+            if d not in dead:
                 out[d] = xs[head]
     return out
 

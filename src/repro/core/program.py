@@ -60,6 +60,13 @@ node count):
 
 * :func:`plan_broadcast`       — P2MP multicast down K disjoint chains
   (``kind="pipeline"``: the data phase streams, frames optional);
+* :func:`plan_recovery`        — the endpoint-side failure recovery of
+  a multi-chain broadcast as a program: one detection-window step
+  (``tag="detect"``, no edges) plus the re-formed orphaned suffix of
+  every affected sub-chain as ordered chain steps, each suffix
+  streaming from the surviving member that banked the payload
+  (``group_heads``); concurrent failures in distinct sub-chains share
+  the steps (and the initiator's cfg port, in the latency model);
 * :func:`plan_all_gather`      — per-ring all-gather, then a cross-ring
   block exchange for K > 1;
 * :func:`plan_reduce_scatter`  — per-ring reduce-scatter over K-chunk
@@ -81,7 +88,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterator, Sequence
+from typing import Iterable, Iterator, Sequence
 
 # Canonical multi-ring all-reduce schedule names — the single tuple the
 # SPMD layer, the simulator and the CLI validate against.
@@ -110,7 +117,10 @@ class Step:
     load: Table | None = None  # out slots loaded into buf BEFORE the hop
     write: Table | None = None  # out slot written per buf row after combine
     write_op: str = COPY  # copy | add
-    tag: str = "intra"  # intra | cross | chain (latency-model grouping)
+    # Latency-model grouping: "intra" | "cross" (ring rounds), "chain"
+    # (pipeline hop slots), "detect" (edge-free failure-timeout window —
+    # priced as SimParams.fail_timeout_cc per occurrence, zero bytes).
+    tag: str = "intra"
 
     def num_permutes(self) -> int:
         """ppermute ops the SPMD executor emits for this step: one fused
@@ -142,6 +152,11 @@ class ChainProgram:
     groups: tuple[tuple[int, ...], ...]
     head: int | None = None
     algo: str | None = None
+    # Per-group data-entry nodes for kind="pipeline" programs whose
+    # streams do NOT all start at the cfg initiator (recovery: each
+    # re-formed suffix streams from the member that banked the payload).
+    # None = every group streams from the initiator.
+    group_heads: tuple[int, ...] | None = None
 
     # -- accounting ---------------------------------------------------
     def step_bytes(self, step: Step, size_bytes: int) -> int:
@@ -191,6 +206,17 @@ class ChainProgram:
             raise ValueError("degenerate program dimensions")
         if self.kind not in ("pipeline", "stepped"):
             raise ValueError(f"unknown program kind {self.kind!r}")
+        if self.group_heads is not None:
+            if self.kind != "pipeline":
+                raise ValueError("group_heads only applies to pipeline programs")
+            if len(self.group_heads) != len(self.groups):
+                raise ValueError(
+                    f"group_heads has {len(self.group_heads)} entries, "
+                    f"expected one per group ({len(self.groups)})"
+                )
+            for h in self.group_heads:
+                if not 0 <= h < L:
+                    raise ValueError(f"group head {h} out of range")
         self._check_table(self.buf_init, None, self.addr_shards, "buf_init")
         self._check_table(self.out_init, self.out_slots, self.addr_shards, "out_init")
         width = len(self.buf_init[0]) if self.buf_init else 1
@@ -392,6 +418,116 @@ def plan_broadcast(
         addr_shards=1, out_slots=1,
         buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=chains, head=head,
+    ).validate()
+
+
+def plan_recovery(
+    topo,
+    src: int,
+    chains: Sequence[Sequence[int]],
+    failed: "int | Iterable[int]",
+    *,
+    scheduler: str = "tsp",
+) -> ChainProgram:
+    """Failure recovery of a multi-chain broadcast as a ChainProgram.
+
+    ``chains`` is the (failure-free) partition the broadcast ran with;
+    ``failed`` is one dead member or a set of concurrently dead members
+    (each must belong to some chain; the initiator ``src`` cannot be
+    recovered — raise before calling for that case). Per affected
+    sub-chain the orphaned suffix is re-formed by
+    ``scheduling.reform_chain`` (upstream prefix kept verbatim — the
+    payload is banked there by store-and-forward) and emitted as
+    ordered chain steps; the suffix streams from the last surviving
+    prefix member (``group_heads``), or from ``src`` when the failure
+    hit the chain head. Step 0 is the shared detection window
+    (``tag="detect"``, no edges — the initiator's finish timeout fires
+    once for every concurrent failure).
+
+    Sub-chains with no failed member do not appear: recovery never
+    perturbs them (the isolation invariant). A chain whose survivors
+    all sit upstream of its failures contributes no steps either —
+    nothing downstream is orphaned, only the detection window is paid
+    (priced by ``simulator.chain_recovery_latency``).
+
+    The returned program is consumed by ``simulator.program_latency`` /
+    ``program_wire_bytes`` (recovery priced through the same machinery
+    as every other schedule) and replays under
+    ``chainwrite_ref.interpret_program`` — seed the banked heads with
+    the payload and every re-sent survivor receives it.
+    """
+    chains_t = tuple(
+        tuple(int(d) for d in c) for c in chains if len(c)
+    )
+    from .scheduling import normalize_failed  # host-side only
+
+    return _plan_recovery_cached(
+        topo, int(src), chains_t, tuple(normalize_failed(failed)), scheduler
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_recovery_cached(
+    topo,
+    src: int,
+    chains: tuple[tuple[int, ...], ...],
+    failed: tuple[int, ...],
+    scheduler: str,
+) -> ChainProgram:
+    from .scheduling import reform_chain  # host-side only
+
+    dead = set(failed)
+    members = {d for c in chains for d in c}
+    missing = dead - members
+    if missing:
+        raise ValueError(f"failed node(s) {sorted(missing)} are in no chain")
+    L = int(topo.num_nodes)
+
+    groups: list[tuple[int, ...]] = []
+    heads: list[int] = []
+    for chain in chains:
+        chain_dead = [f for f in chain if f in dead]
+        if not chain_dead:
+            continue
+        first = min(chain.index(f) for f in chain_dead)
+        reformed = reform_chain(topo, chain, chain_dead, src, scheduler=scheduler)
+        prefix, resent = reformed[:first], reformed[first:]
+        if not resent:
+            continue  # tail failure: nothing downstream to re-send
+        groups.append(tuple(resent))
+        heads.append(prefix[-1] if prefix else src)
+
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, 1)
+    for h in heads:
+        buf_init[h][0] = 0
+        out_init[h][0] = 0
+    steps: list[Step] = [Step(edges=(), tag="detect")]
+    full = [(h,) + g for h, g in zip(heads, groups)]
+    max_len = max((len(f) for f in full), default=1)
+    for t in range(max_len - 1):
+        edges = tuple((f[t], f[t + 1]) for f in full if t + 1 < len(f))
+        write = _rows(L, 1)
+        for _, dst in edges:
+            write[dst][0] = 0
+        load = None
+        if t == 0:
+            # The banked members re-read the payload from local memory
+            # (the detection window cleared the transit registers).
+            load_rows = _rows(L, 1)
+            for h in heads:
+                load_rows[h][0] = 0
+            load = _table(load_rows)
+        steps.append(
+            Step(edges=edges, width=1, tag="chain", load=load,
+                 write=_table(write))
+        )
+    return ChainProgram(
+        collective="recovery", kind="pipeline", num_devices=L,
+        addr_shards=1, out_slots=1,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=tuple(groups), head=src,
+        group_heads=tuple(heads),
     ).validate()
 
 

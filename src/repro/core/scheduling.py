@@ -52,9 +52,13 @@ source->seed entry edge.
 from __future__ import annotations
 
 import itertools
-from typing import Callable, Sequence
+from typing import Callable, Iterable, Sequence
 
 from .topology import Coord, Link, MeshTopology
+
+# The failure-spec convention every fault-tolerance API shares: one
+# node id, or any iterable of ids (see normalize_failed).
+FailureSpec = int | Iterable[int]
 
 # ---------------------------------------------------------------------------
 # Paper Alg. 1 — greedy link-disjoint heuristic
@@ -483,25 +487,45 @@ def partition_total_hops(
 # ---------------------------------------------------------------------------
 
 
+def normalize_failed(failed: FailureSpec) -> list[int]:
+    """Canonicalize a failure spec (one node id or an iterable of ids)
+    into a sorted duplicate-free list — the failure-*set* convention
+    shared by ``reform_chain``, ``simulator.chain_recovery_latency``,
+    ``chainwrite.degraded_chains`` and ``MultiChainPlan.reform``."""
+    if isinstance(failed, (str, bytes)):
+        raise ValueError(f"failed must be a node id or a set of ids, got {failed!r}")
+    try:
+        it = iter(failed)
+    except TypeError:  # a single node id (python or numpy integer)
+        return [int(failed)]
+    nodes = sorted({int(f) for f in it})
+    if not nodes:
+        raise ValueError("empty failure set")
+    return nodes
+
+
 def reform_chain(
     topo: MeshTopology,
     order: Sequence[int],
-    failed: int,
+    failed: FailureSpec,
     source: int = 0,
     *,
     scheduler: str = "tsp",
 ) -> list[int]:
-    """Splice ``failed`` out of one sub-chain and re-order the orphaned
-    suffix — the endpoint-side half of Chainwrite fault recovery.
+    """Splice the ``failed`` member(s) out of one sub-chain and
+    re-order the orphaned suffix — the endpoint-side half of Chainwrite
+    fault recovery. ``failed`` is one node id or a set of concurrently
+    dead members of this chain.
 
-    Store-and-forward means every member *upstream* of the failure has
-    already banked the payload, so the prefix is kept verbatim and only
-    the downstream (orphaned) suffix is re-planned: it is re-scheduled
-    by the requested scheduler (exact TSP for <= 13 members) starting
-    from the surviving chain tail (the last prefix member, or the
-    source when the failure hit the chain head). The better of the
-    spliced original order and the re-scheduled suffix is kept, so
-    re-forming never costs more hops than the naive splice.
+    Store-and-forward means every member *upstream* of the earliest
+    failure has already banked the payload, so that prefix is kept
+    verbatim and only the downstream (orphaned) survivors are
+    re-planned: they are re-scheduled by the requested scheduler (exact
+    TSP for <= 13 members) starting from the surviving chain tail (the
+    last prefix member, or the source when a failure hit the chain
+    head). The better of the spliced original order and the
+    re-scheduled suffix is kept, so re-forming never costs more hops
+    than the naive splice.
 
     All scoring goes through :meth:`MeshTopology.distance`, so
     wrap-around links are exploited when ``topo.torus`` — the recovery
@@ -512,11 +536,15 @@ def reform_chain(
     survivors; nothing in the NoC changes.
     """
     order = [int(d) for d in order]
-    failed = int(failed)
-    if failed not in order:
-        raise ValueError(f"failed node {failed} is not a chain member")
-    i = order.index(failed)
-    prefix, suffix = order[:i], order[i + 1 :]
+    dead = set(normalize_failed(failed))
+    missing = dead - set(order)
+    if missing:
+        raise ValueError(
+            f"failed node(s) {sorted(missing)} are not chain members"
+        )
+    i = min(order.index(f) for f in dead)
+    prefix = order[:i]
+    suffix = [d for d in order[i + 1 :] if d not in dead]
     if not suffix:
         return prefix
     tail = prefix[-1] if prefix else source

@@ -34,14 +34,18 @@ same three P2MP mechanisms on the same NoC (2-D mesh, XY routing,
   bytes *and* cycles. ``choose_num_chains`` extends the same
   byte/latency model to ``reduce_scatter`` / ``all_gather`` /
   ``all_to_all`` via their planners.
-* ``chain_recovery_latency`` — failure/recovery extension: one chain
-  member dies, the initiator times out (``fail_timeout_cc``), re-forms
-  the orphaned suffix (``scheduling.reform_chain``) and re-dispatches
-  its cfgs through the same single cfg-inject port; the data is
-  re-sent from the last surviving upstream member (store-and-forward
-  banked the payload there). Isolation invariant: chains without a
-  failed member complete at *exactly* their ``multi_chain_latency``
-  per-chain time.
+* ``chain_recovery_latency`` — failure/recovery extension: one *or
+  several* chain members die concurrently, the initiator times out
+  (``fail_timeout_cc``), re-forms each orphaned suffix
+  (``scheduling.reform_chain``) and re-dispatches the cfgs through the
+  same single cfg-inject port; the data is re-sent from the last
+  surviving upstream member (store-and-forward banked the payload
+  there). The whole recovery schedule is a ``program.plan_recovery``
+  ChainProgram priced by ``program_latency`` — recovery bytes appear
+  in ``program_wire_bytes`` like any other collective's. Isolation
+  invariant: chains without a failed member complete at *exactly*
+  their ``multi_chain_latency`` per-chain time. A dead *initiator* is
+  unrecoverable: :class:`SourceFailedError`.
 
 Calibration: the model's per-destination marginal overhead for a
 1-hop-spaced chain is **82 cycles**, matching the paper's measured
@@ -58,11 +62,20 @@ from . import program as prg
 from .program import ALL_REDUCE_ALGOS, ChainProgram, program_wire_bytes
 from .scheduling import (
     SCHEDULERS,
+    FailureSpec,
     chain_total_hops,
+    normalize_failed,
     partition_schedule,
-    reform_chain,
 )
 from .topology import MeshTopology
+
+
+class SourceFailedError(ValueError):
+    """The failed node is the chain *initiator* — total loss, not a
+    recoverable member failure. Endpoint-side re-forming cannot help
+    (nobody upstream banked the payload, and the cfg port died with the
+    source); callers must fall back to checkpoint rollback
+    (``runtime.failure.resilient_loop`` does exactly that)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -267,40 +280,57 @@ def program_latency(
     kind-aware:
 
     * ``kind="pipeline"`` — one wormhole-pipelined store-and-forward
-      stream per chain (chain hops + per-member fill + payload at the
-      per-stream effective bandwidth: K concurrent streams share the
-      initiator's ``src_read_bw``);
+      stream per chain, entering at the group's data head
+      (``program.group_heads``, default: the initiator) — chain hops +
+      per-member fill + payload at the per-stream effective bandwidth:
+      streams sharing one data head (e.g. K broadcast chains all read
+      from the initiator) share its ``src_read_bw``;
     * ``kind="stepped"``  — the schedule's rounds run lockstep: each
       step costs its slowest edge's router hops + one
       store-and-forward fill + frame bytes (``width/addr_shards`` of
       the payload) over the link bandwidth; every device drives one
       outgoing stream at a time (``streams=1``).
 
+    Edge-free ``tag="detect"`` steps (the failure-detection window of a
+    recovery program) each charge ``p.fail_timeout_cc``, added to every
+    group's completion — they move no bytes.
+
     Completion = max over groups of the staggered-cfg four-phase sum.
-    With ``detail=True`` returns ``{"total", "per_chain", "per_phase"}``
-    (plus the program's modeled ``wire_bytes``).
+    With ``detail=True`` returns ``{"total", "per_chain", "per_phase",
+    "detect_cc"}`` (plus the program's modeled ``wire_bytes``).
     """
-    groups = [list(c) for c in program.groups if len(c)]
+    heads = program.group_heads or (src,) * len(program.groups)
+    pairs = [
+        (list(c), int(h))
+        for c, h in zip(program.groups, heads)
+        if len(c)
+    ]
+    detect = p.fail_timeout_cc * sum(
+        1 for s in program.steps if s.tag == "detect"
+    )
     empty = {
-        "total": 0, "per_chain": [], "per_phase": [],
-        "wire_bytes": 0,
+        "total": detect, "per_chain": [], "per_phase": [],
+        "detect_cc": detect, "wire_bytes": 0,
     }
-    if not groups:
-        return dict(empty) if detail else 0
+    if not pairs:
+        return dict(empty) if detail else detect
 
     per_chain: list[int] = []
     per_phase: list[tuple[int, int, int, int]] = []
     injected = 0  # cfg packets already serialized through the port
 
     if program.kind == "pipeline":
-        for order in groups:
+        streams_per_head: dict[int, int] = {}
+        for _, h in pairs:
+            streams_per_head[h] = streams_per_head.get(h, 0) + 1
+        for order, head in pairs:
             injected += len(order)
             phases = _chain_phases(
-                topo, src, src, order, size_bytes, p,
-                injected=injected, streams=len(groups),
+                topo, src, head, order, size_bytes, p,
+                injected=injected, streams=streams_per_head[head],
             )
             per_phase.append(phases)
-            per_chain.append(sum(phases))
+            per_chain.append(sum(phases) + detect)
     else:  # stepped: lockstep rounds, shared by every ring
         bw = _effective_bw(p, 1)  # one outgoing stream per device
         data = sum(
@@ -309,14 +339,14 @@ def program_latency(
             + _ceil_div(program.step_bytes(step, size_bytes), bw)
             for step in program.steps
         )
-        for order in groups:
+        for order, _ in pairs:
             injected += len(order)
             cfg = _cfg_phase(topo, src, order, p, injected)
             hops = _ring_hops(topo, order)
             grant = hops * p.router_cc + len(order) * p.grant_fwd_cc
             finish = hops * p.router_cc + len(order) * p.finish_fwd_cc
             per_phase.append((cfg, grant, data, finish))
-            per_chain.append(cfg + grant + data + finish)
+            per_chain.append(cfg + grant + data + finish + detect)
 
     total = max(per_chain)
     if detail:
@@ -324,6 +354,7 @@ def program_latency(
             "total": total,
             "per_chain": per_chain,
             "per_phase": per_phase,
+            "detect_cc": detect,
             "wire_bytes": program.wire_bytes(size_bytes),
         }
     return total
@@ -374,84 +405,131 @@ def chain_recovery_latency(
     topo: MeshTopology,
     src: int,
     chains: Sequence[Sequence[int]],
-    failed: int,
+    failed: FailureSpec,
     size_bytes: int,
     p: SimParams = DEFAULT_PARAMS,
     *,
     scheduler: str = "tsp",
     detail: bool = False,
 ) -> int | dict[str, object]:
-    """Multi-chain completion latency when chain member ``failed`` dies.
+    """Multi-chain completion latency when chain member(s) ``failed``
+    die — one node id or a set of concurrently dead members.
 
-    Composition (all endpoint-side — recovery is just a new cfg
-    dispatch, the NoC is untouched):
+    Since the recovery-as-a-program refactor this is a thin wrapper:
+    the whole recovery schedule is planned once by
+    :func:`repro.core.program.plan_recovery` (detection window +
+    re-formed suffix per affected chain, streaming from the member
+    that banked the payload) and priced by the generic
+    :func:`program_latency` — so recovery bytes also appear in
+    ``program_wire_bytes`` like any other collective's. Composition
+    (all endpoint-side — recovery is just a new cfg dispatch, the NoC
+    is untouched):
 
-    1. **Detection** — the failed chain runs its original four phases
-       but the finish never arrives; the initiator times out
-       ``fail_timeout_cc`` after the chain's expected completion.
-    2. **Re-cfg dispatch** — the orphaned suffix is re-formed
+    1. **Detection** — the failed chains run their original four phases
+       but the finishes never arrive; the initiator times out
+       ``fail_timeout_cc`` after the expected completion (one shared
+       window: concurrent failures are detected together).
+    2. **Re-cfg dispatch** — each orphaned suffix is re-formed
        (``scheduling.reform_chain``: splice + TSP re-order from the
        surviving tail, torus-aware) and its cfg packets are serialized
-       through the same single cfg-inject port (the staggered-cfg
-       machinery of :func:`multi_chain_latency`, now uncontended).
-    3. **Re-sent frames** — grant/data/finish for the re-formed suffix,
+       through the same single cfg-inject port — independent per-chain
+       recoveries contend only there, exactly like the original
+       chains' cfgs in :func:`multi_chain_latency`.
+    3. **Re-sent frames** — grant/data/finish per re-formed suffix,
        streamed from the last surviving upstream member (which banked
        the payload during store-and-forward), or from the initiator
        when the failure hit the chain head.
 
-    Isolation invariant (pinned by tests): every chain *without* the
+    Isolation invariant (pinned by tests): every chain *without* a
     failed member completes at exactly its ``multi_chain_latency``
-    per-chain time — a failure never perturbs other sub-chains.
+    per-chain time — failures never perturb other sub-chains. The
+    initiator itself cannot be recovered: ``failed`` containing ``src``
+    raises :class:`SourceFailedError` (total loss — roll back to a
+    checkpoint instead of re-forming).
 
     With ``detail=True`` returns the ``multi_chain_latency`` detail
-    dict extended with a ``recovery`` entry: ``{"chain", "reformed",
-    "resent", "detect_cc", "cfg_cc", "grant_cc", "data_cc",
-    "finish_cc", "recovery_cc"}``.
+    dict extended with ``failed`` (the sorted failure set),
+    ``recovery_wire_bytes`` (the planned program's modeled bytes) and
+    a ``recoveries`` list, one entry per affected chain: ``{"chain",
+    "failed", "reformed", "resent", "head", "detect_cc", "cfg_cc",
+    "grant_cc", "data_cc", "finish_cc", "recovery_cc"}``. When exactly
+    one chain is affected the entry is also exposed as ``recovery``
+    (the pre-refactor single-failure shape).
     """
     chains = [list(c) for c in chains if len(c)]
-    failed = int(failed)
-    ci = next((i for i, c in enumerate(chains) if failed in c), None)
-    if ci is None:
-        raise ValueError(f"failed node {failed} is in no chain")
+    dead = normalize_failed(failed)
+    if src in dead:
+        raise SourceFailedError(
+            f"node {src} is the chain initiator: total loss, "
+            "re-forming cannot recover the source"
+        )
+    members = {d for c in chains for d in c}
+    missing = [f for f in dead if f not in members]
+    if missing:
+        raise ValueError(f"failed node(s) {missing} are in no chain")
 
     base = multi_chain_latency(topo, src, chains, size_bytes, p, detail=True)
     assert isinstance(base, dict)
-    order = chains[ci]
-    i = order.index(failed)
-    prefix = order[:i]
-    reformed = reform_chain(topo, order, failed, src, scheduler=scheduler)
-    resent = reformed[len(prefix):]
 
-    if resent:
-        head = prefix[-1] if prefix else src
-        cfg, grant, data, finish = _chain_phases(
-            topo, src, head, resent, size_bytes, p,
-            injected=len(resent), streams=1,
-        )
-    else:  # tail failure: nothing downstream to re-send
-        cfg = grant = data = finish = 0
-    recovery_cc = p.fail_timeout_cc + cfg + grant + data + finish
+    program = prg.plan_recovery(
+        topo, src, [tuple(c) for c in chains], dead, scheduler=scheduler
+    )
+    rec = program_latency(topo, src, program, size_bytes, p, detail=True)
+    assert isinstance(rec, dict)
 
     per_chain = list(base["per_chain"])
-    per_chain[ci] += recovery_cc
+    recoveries: list[dict[str, object]] = []
+    gi = 0  # index into the program's (non-empty resent) groups
+    for ci, order in enumerate(chains):
+        chain_dead = [d for d in order if d in dead]
+        if not chain_dead:
+            continue
+        # The geometry comes straight from the planned program (the
+        # prefix before the earliest failure is kept verbatim; the
+        # program's group is the re-scheduled resent suffix) — the
+        # exact-TSP re-schedule runs once, inside plan_recovery.
+        first = order.index(chain_dead[0])
+        prefix = order[:first]
+        orphaned = any(d not in dead for d in order[first + 1 :])
+        if orphaned:
+            resent = list(program.groups[gi])
+            head = program.group_heads[gi]
+            cfg, grant, data, finish = rec["per_phase"][gi]
+            recovery_cc = rec["per_chain"][gi]  # includes the detection
+            gi += 1
+        else:  # tail failure: nothing downstream to re-send
+            resent = []
+            head = prefix[-1] if prefix else src
+            cfg = grant = data = finish = 0
+            recovery_cc = p.fail_timeout_cc
+        reformed = prefix + resent
+        per_chain[ci] += recovery_cc
+        recoveries.append({
+            "chain": ci,
+            "failed": chain_dead,
+            "reformed": reformed,
+            "resent": resent,
+            "head": head,
+            "detect_cc": p.fail_timeout_cc,
+            "cfg_cc": cfg,
+            "grant_cc": grant,
+            "data_cc": data,
+            "finish_cc": finish,
+            "recovery_cc": recovery_cc,
+        })
     total = max(per_chain)
     if detail:
-        return {
+        out: dict[str, object] = {
             "total": total,
             "per_chain": per_chain,
             "per_phase": list(base["per_phase"]),
-            "recovery": {
-                "chain": ci,
-                "reformed": reformed,
-                "resent": resent,
-                "detect_cc": p.fail_timeout_cc,
-                "cfg_cc": cfg,
-                "grant_cc": grant,
-                "data_cc": data,
-                "finish_cc": finish,
-                "recovery_cc": recovery_cc,
-            },
+            "failed": dead,
+            "recoveries": recoveries,
+            "recovery_wire_bytes": program.wire_bytes(size_bytes),
         }
+        if len(recoveries) == 1:
+            out["recovery"] = recoveries[0]
+        return out
     return total
 
 

@@ -1,11 +1,21 @@
 """Batched serving driver: continuous-batching decode loop with a
-ChainTask-orchestrated KV/weight multicast between steps.
+Torrent-orchestrated weight multicast between steps.
 
 The serving runtime is where the paper's *dynamic* four-phase protocol
 survives compilation (DESIGN.md §2): requests arrive asynchronously, and
 host-side P2MP movement (broadcasting freshly-prefilled KV blocks or
-refreshed weights to the replica set) is driven as Torrent ChainTasks
+refreshed weights to the replica set) is driven as Torrent chain tasks
 with real predicted-cycle accounting.
+
+Elastic serving: the server holds ONE persistent
+``parallel.collectives.MultiChainPlan`` for the replica set.
+``broadcast_weights`` streams the *entire* flattened parameter tree
+(chunked, byte-exact — the logged byte count is asserted against the
+params' true nbytes) down the plan's sub-chains, and
+``Server.scale_down`` handles replica loss by *re-forming* that live
+plan around the lost members (``runtime.elastic.scale_down_plan`` →
+``MultiChainPlan.reform``) instead of rebuilding it — the Torrent
+recovery machinery doing elastic scale-down.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
         --requests 16 --max-new 32
@@ -24,10 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as C
-from repro.core.chaintask import ChainTask
+from repro.core.chaintask import MultiChainTask
 from repro.core.topology import MeshTopology
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import transformer as T
+from repro.parallel.collectives import MultiChainPlan
+from repro.runtime.elastic import scale_down_plan
 
 log = logging.getLogger("repro.serve")
 
@@ -71,27 +83,81 @@ class Server:
         self.cache = None
         self.steps = 0
         # weight-multicast bookkeeping (paper Fig. 4 host orchestration):
+        # ONE persistent multi-chain plan for the replica set — elastic
+        # scale-down re-forms it (endpoint-side) instead of rebuilding.
+        self.replicas = sc.replicas
         self.topo = MeshTopology(max(2, sc.replicas), 1)
+        self.plan = MultiChainPlan(
+            self.topo, 0, list(range(1, sc.replicas)), scheduler="tsp"
+        )
         self.multicast_log: list[dict] = []
+        self.last_delivery: dict[int, np.ndarray] = {}
 
     # -- the paper's host-side P2MP: weight refresh to replicas ----------
-    def broadcast_weights(self, scheduler: str = "tsp") -> dict:
+    def broadcast_weights(self, chunk_bytes: int = 1 << 20) -> dict:
+        """Multicast the FULL parameter tree to every surviving replica
+        down the persistent plan's sub-chains, ``chunk_bytes`` at a
+        time. The logged ``bytes`` is asserted against the params' true
+        nbytes — the record describes a real weight refresh."""
         flat, _ = jax.tree_util.tree_flatten(self.params)
-        payload = np.concatenate(
-            [np.asarray(x, np.float32).reshape(-1) for x in flat[:4]]
+        true_nbytes = sum(int(np.asarray(x).nbytes) for x in flat)
+        # dtype-agnostic byte stream: the wire moves bytes, not floats
+        payload = (
+            np.concatenate(
+                [np.ascontiguousarray(x).reshape(-1).view(np.uint8) for x in flat]
+            )
+            if flat
+            else np.zeros(0, np.uint8)
         )
-        task = ChainTask(
-            self.topo, 0, list(range(1, self.sc.replicas)), payload,
-            scheduler=scheduler,
-        )
-        task.run()
+        dests = self.plan.survivors
+        cycles = unicast = chunks = 0
+        parts: dict[int, list[np.ndarray]] = {d: [] for d in dests}
+        for off in range(0, payload.size, max(1, int(chunk_bytes))):
+            chunk = payload[off : off + max(1, int(chunk_bytes))]
+            if not dests:
+                break
+            task = MultiChainTask(
+                self.topo, 0, dests, chunk,
+                chains=[list(c) for c in self.plan.chains],
+            )
+            bufs = task.run()
+            for d, buf in bufs.items():
+                parts[d].append(buf)
+            cycles += task.cycle_ledger["total"]
+            unicast += task.unicast_cycles()
+            chunks += 1
+        self.last_delivery = {
+            d: np.concatenate(p) if p else np.zeros(0, np.uint8)
+            for d, p in parts.items()
+        }
         rec = {
             "bytes": int(payload.nbytes),
-            "cycles": task.cycle_ledger["total"],
-            "speedup_vs_unicast": task.speedup_vs_unicast(),
+            "chunks": chunks,
+            "replicas": len(dests) + 1,
+            "cycles": cycles,
+            "speedup_vs_unicast": unicast / cycles if cycles else 1.0,
         }
+        if rec["bytes"] != true_nbytes:
+            raise AssertionError(
+                f"weight refresh logged {rec['bytes']} B but params hold "
+                f"{true_nbytes} B"
+            )
         self.multicast_log.append(rec)
         return rec
+
+    # -- elastic scale-down: re-form the live plan, never rebuild it -----
+    def scale_down(self, replicas: int) -> tuple[int, ...]:
+        """Shrink the replica set to ``replicas`` (keeping replica 0,
+        the plan head). The lost members are spliced out of the live
+        ``MultiChainPlan`` as a concurrent failure set — surviving
+        sub-chains keep their schedules verbatim and the next
+        :meth:`broadcast_weights` still delivers full weights to every
+        survivor. Returns the lost replica ids."""
+        lost = scale_down_plan(self.plan, self.replicas, replicas)
+        if lost:
+            log.info("scale-down: lost replicas %s, plan re-formed", list(lost))
+        self.replicas = int(replicas)
+        return lost
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int) -> Request:

@@ -49,7 +49,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import chainwrite as cw
 from repro.core import simulator as sim
-from repro.core.scheduling import SCHEDULERS, partition_schedule, reform_chain
+from repro.core.scheduling import (
+    SCHEDULERS,
+    FailureSpec,
+    normalize_failed,
+    partition_schedule,
+    reform_chain,
+)
+from repro.core.simulator import SourceFailedError
 from repro.core.topology import MeshTopology
 from repro.parallel import hints
 from repro.runtime.compression import compressed_chain_all_reduce
@@ -64,8 +71,9 @@ class MultiChainPlan:
 
     The destination set is partitioned into K link-disjoint-preferring
     sub-chains (``core.scheduling.partition_schedule``). On a node
-    failure, :meth:`reform` splices the dead member out of its
-    sub-chain and re-orders the orphaned suffix
+    failure, :meth:`reform` splices the dead member(s) — one node or a
+    concurrent failure *set* — out of their sub-chains and re-orders
+    each orphaned suffix
     (``core.scheduling.reform_chain`` — torus-aware), so the next
     :meth:`broadcast` is the degraded collective over the survivors:
     recovery is just a new chain schedule (the XDMA property — no NoC
@@ -101,29 +109,45 @@ class MultiChainPlan:
     def survivors(self) -> list[int]:
         return [d for c in self.chains for d in c]
 
-    def reform(self, node: int) -> bool:
-        """Re-form around dead member ``node``; True when handled.
+    def reform(self, node: FailureSpec) -> bool:
+        """Re-form around the dead member(s) ``node`` — one node id or
+        a set of concurrently dead members; True when handled.
 
-        Only the sub-chain containing ``node`` changes (its orphaned
-        suffix is re-scheduled from the surviving tail); every other
-        sub-chain keeps its schedule verbatim. Unknown nodes (already
-        failed, the head, or never a member) return False so the
-        caller can fall back to checkpoint restart.
+        Only the sub-chains containing dead members change (each
+        orphaned suffix is re-scheduled from its surviving tail, one
+        ``reform_chain`` per affected chain — exactly the schedule
+        ``core.program.plan_recovery`` prices); every other sub-chain
+        keeps its schedule verbatim. The *head* dying is total loss —
+        no survivor banked the payload — and raises
+        :class:`~repro.core.simulator.SourceFailedError` so
+        ``resilient_loop`` falls back to checkpoint rollback. Unknown
+        nodes (already failed or never a member) return False, without
+        touching the plan, so the caller can fall back too.
         """
-        node = int(node)
-        for i, chain in enumerate(self.chains):
-            if node in chain:
-                new = reform_chain(
-                    self.topo, chain, node, self.head,
-                    scheduler=self.scheduler,
-                )
-                if new:
-                    self.chains[i] = new
-                else:
-                    del self.chains[i]
-                self.failed.append(node)
-                return True
-        return False
+        dead = set(normalize_failed(node))
+        if self.head in dead:
+            raise SourceFailedError(
+                f"node {self.head} is the plan head: total loss, "
+                "re-forming cannot recover the source"
+            )
+        live = {d for c in self.chains for d in c}
+        if dead - live:  # unknown/already-failed: leave the plan alone
+            return False
+        reformed: list[list[int]] = []
+        for chain in self.chains:
+            chain_dead = [d for d in chain if d in dead]
+            if not chain_dead:
+                reformed.append(chain)
+                continue
+            new = reform_chain(
+                self.topo, chain, chain_dead, self.head,
+                scheduler=self.scheduler,
+            )
+            if new:
+                reformed.append(new)
+        self.chains = reformed
+        self.failed.extend(sorted(dead))
+        return True
 
     def broadcast(self, x, axis_name, *, num_frames: int = 1):
         """The (possibly degraded) multi-chain broadcast over the

@@ -1,4 +1,15 @@
 from .compression import ErrorFeedback, compressed_chain_all_reduce, dequantize, quantize
-from .elastic import choose_mesh_shape, make_elastic_mesh, reshard_state
-from .failure import FaultInjector, LoopResult, SimulatedNodeFailure, resilient_loop
+from .elastic import (
+    choose_mesh_shape,
+    make_elastic_mesh,
+    reshard_state,
+    scale_down_plan,
+)
+from .failure import (
+    FaultInjector,
+    LoopResult,
+    SimulatedNodeFailure,
+    SourceFailedError,
+    resilient_loop,
+)
 from .monitor import Heartbeat, StepMonitor, StragglerEvent

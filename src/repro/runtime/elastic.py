@@ -5,12 +5,44 @@ Policy: keep the model (TP) axis fixed when the new device count allows
 (TP size is dictated by memory, not availability); absorb changes in
 the data axis. When devices < tp, fall back to the largest power-of-two
 TP that fits.
+
+Serving-side elasticity (:func:`scale_down_plan`): replica loss does
+NOT rebuild the weight-multicast plan — the highest-numbered replicas
+are treated as a concurrent failure *set* and the live
+``parallel.collectives.MultiChainPlan`` re-forms around them
+(endpoint-side only, the same ``reform_chain`` machinery the failure
+runtime uses), so in-flight schedule state and the surviving
+sub-chains' orders are preserved verbatim.
 """
 
 from __future__ import annotations
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def scale_down_plan(plan, old_replicas: int, new_replicas: int) -> tuple[int, ...]:
+    """Shrink a replica set [0, old) to [0, new) by re-forming the live
+    multicast ``plan`` (any object with ``MultiChainPlan.reform``
+    semantics) around the lost replica ids — never by rebuilding it.
+
+    Returns the lost ids ``(new, ..., old-1)``. ``new_replicas`` must
+    keep at least the plan head (replica 0). Raises ``RuntimeError``
+    when the plan declines (a lost id was already spliced out — the
+    caller's replica accounting is stale).
+    """
+    old, new = int(old_replicas), int(new_replicas)
+    if not 0 < new <= old:
+        raise ValueError(f"cannot scale {old} replicas down to {new}")
+    lost = tuple(range(new, old))
+    if not lost:
+        return lost
+    spec = lost[0] if len(lost) == 1 else lost
+    if not plan.reform(spec):
+        raise RuntimeError(
+            f"plan declined to re-form around lost replicas {list(lost)}"
+        )
+    return lost
 
 
 def choose_mesh_shape(num_devices: int, preferred_tp: int) -> tuple[int, int]:

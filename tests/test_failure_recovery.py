@@ -37,6 +37,7 @@ from repro.core.scheduling import (
 from repro.core.simulator import (
     DEFAULT_PARAMS,
     SimParams,
+    SourceFailedError,
     chain_recovery_latency,
     chainwrite_latency,
     config_overhead_per_destination,
@@ -173,6 +174,69 @@ def test_recovery_tail_failure_costs_only_the_timeout():
 def test_recovery_unknown_node_raises():
     with pytest.raises(ValueError):
         chain_recovery_latency(BIG, 0, [[1, 2]], 5, SIZE)
+    with pytest.raises(ValueError):  # one unknown poisons the whole set
+        chain_recovery_latency(BIG, 0, [[1, 2]], {2, 5}, SIZE)
+    with pytest.raises(ValueError):  # empty failure set
+        chain_recovery_latency(BIG, 0, [[1, 2]], set(), SIZE)
+
+
+def test_recovery_source_death_is_typed():
+    """Losing the initiator is total loss, not a member failure: a
+    typed SourceFailedError (still a ValueError for old callers)."""
+    with pytest.raises(SourceFailedError):
+        chain_recovery_latency(BIG, 0, [[0, 1, 2]], 0, SIZE)
+    with pytest.raises(SourceFailedError):
+        chain_recovery_latency(BIG, 0, [[0, 1, 2]], {0, 1}, SIZE)
+    assert issubclass(SourceFailedError, ValueError)
+
+
+def test_concurrent_failures_isolate_and_serialize_cfg():
+    """Two failures in distinct sub-chains: unaffected chains stay
+    CC-exact, each affected chain pays detection + its own re-send,
+    and the recovery cfgs serialize through the one inject port (the
+    second recovery's cfg phase sees the first's injections)."""
+    chains = partition_schedule(BIG, list(range(1, 13)), 0, num_chains=3)
+    f0, f1 = chains[0][1], chains[1][1]
+    base = multi_chain_latency(BIG, 0, chains, SIZE, detail=True)
+    both = chain_recovery_latency(BIG, 0, chains, {f0, f1}, SIZE, detail=True)
+    assert both["failed"] == sorted({f0, f1})
+    assert [r["chain"] for r in both["recoveries"]] == [0, 1]
+    assert "recovery" not in both  # >1 affected chain: no single alias
+    for i, (b, r) in enumerate(zip(base["per_chain"], both["per_chain"])):
+        if i == 2:
+            assert r == b  # isolation: untouched sub-chain is CC-exact
+        else:
+            rec = next(x for x in both["recoveries"] if x["chain"] == i)
+            assert r == b + rec["recovery_cc"]
+    # cfg-port serialization: recovering chain 1 alone (port otherwise
+    # free) costs no more cfg cycles than recovering it after chain 0's
+    # cfgs went through the shared port.
+    alone = chain_recovery_latency(BIG, 0, chains, f1, SIZE, detail=True)
+    rec1 = next(x for x in both["recoveries"] if x["chain"] == 1)
+    extra = len(both["recoveries"][0]["resent"]) * DEFAULT_PARAMS.cfg_inject_cc
+    assert rec1["cfg_cc"] == alone["recovery"]["cfg_cc"] + extra
+    # and each single-failure recovery is unchanged by the other chain
+    alone0 = chain_recovery_latency(BIG, 0, chains, f0, SIZE, detail=True)
+    assert both["recoveries"][0]["recovery_cc"] == (
+        alone0["recovery"]["recovery_cc"]
+    )
+
+
+def test_concurrent_failures_same_chain_single_reform():
+    """Two dead members of the SAME chain recover as one re-formed
+    suffix from the earliest failure's prefix."""
+    chains = [[1, 2, 10, 9, 8], [5, 6, 7]]
+    dead = {10, 8}
+    d = chain_recovery_latency(BIG, 0, chains, dead, SIZE, detail=True)
+    assert len(d["recoveries"]) == 1 and "recovery" in d
+    rec = d["recoveries"][0]
+    assert rec["chain"] == 0 and rec["failed"] == [10, 8]
+    assert rec["reformed"][:2] == [1, 2]  # prefix before first failure
+    assert sorted(rec["reformed"]) == [1, 2, 9]
+    assert rec["recovery_cc"] >= DEFAULT_PARAMS.fail_timeout_cc
+    assert d["per_chain"][1] == multi_chain_latency(
+        BIG, 0, chains, SIZE, detail=True
+    )["per_chain"][1]
 
 
 # ---------------------------------------------------------------------------
@@ -322,6 +386,70 @@ def test_multichain_task_explicit_chains_and_validation():
         task.inject_failure(3)
 
 
+def test_inject_failure_twice_raises_regression():
+    """Regression (ISSUE-5 satellite): injecting a second failure used
+    to silently overwrite the first. Now failures accumulate into a
+    set; re-injecting the same node — or a node already spliced out of
+    the partition the task was built with — raises."""
+    payload = np.zeros(64, np.uint8)
+    task = MultiChainTask(TOPO, 0, [3, 7, 12, 14], payload, num_chains=2)
+    task.inject_failure(7)
+    with pytest.raises(ValueError):  # same node twice
+        task.inject_failure(7)
+    task.inject_failure(12)  # a second, distinct failure ACCUMULATES
+    assert task.failed_nodes == [7, 12]
+    with pytest.raises(RuntimeError):  # ambiguous single-failure alias
+        task.failed_node
+    # a node already spliced out of a re-formed plan is not a member
+    plan = MultiChainPlan(TOPO, 0, [3, 7, 12, 14], num_chains=2)
+    assert plan.reform(12) is True
+    stale = MultiChainTask(
+        TOPO, 0, plan.survivors, payload,
+        chains=[list(c) for c in plan.chains],
+    )
+    with pytest.raises(ValueError):
+        stale.inject_failure(12)
+
+
+def test_multichain_task_concurrent_failures_deliver_and_charge():
+    """Two failures in distinct sub-chains: every survivor still gets
+    the payload, both affected ledgers are charged their own recovery,
+    and unaffected ledgers stay CC-exact."""
+    payload = np.arange(1024, dtype=np.float32)
+    dests = list(range(1, 13))
+    clean = MultiChainTask(BIG, 0, dests, payload, num_chains=3)
+    faulty = MultiChainTask(BIG, 0, dests, payload, num_chains=3)
+    assert clean.chains == faulty.chains
+    dead = {faulty.chains[0][1], faulty.chains[2][0]}
+    for n in dead:
+        faulty.inject_failure(n)
+    clean.run()
+    bufs = faulty.run()
+    assert set(bufs) == set(dests) - dead
+    expect = _oracle_rows(BIG.num_nodes, payload, 0, clean.chains, dead)
+    for d in bufs:
+        np.testing.assert_array_equal(bufs[d], expect[d])
+    affected = {
+        i for i, c in enumerate(faulty.chains) if any(n in c for n in dead)
+    }
+    assert affected == {0, 2}
+    for i, (a, b) in enumerate(
+        zip(clean.per_chain_ledgers, faulty.per_chain_ledgers)
+    ):
+        if i in affected:
+            assert b["recovery"] >= DEFAULT_PARAMS.fail_timeout_cc
+            assert b["total"] == a["total"] + b["recovery"]
+        else:
+            assert a == b  # CC-exact isolation
+    assert faulty.cycle_ledger["recovery"] == max(
+        faulty.per_chain_ledgers[i]["recovery"] for i in affected
+    )
+    # the reformed partition drops exactly the failed members
+    assert sorted(d for c in faulty.reformed_chains for d in c) == sorted(
+        d for d in dests if d not in dead
+    )
+
+
 # ---------------------------------------------------------------------------
 # resilient_loop + MultiChainPlan (the acceptance-criterion test)
 # ---------------------------------------------------------------------------
@@ -436,10 +564,79 @@ def test_anonymous_failure_still_restarts(tmp_ckpt_dir):
     assert res.restarts == 1 and res.reforms == 0
 
 
+def test_source_death_falls_back_to_rollback(tmp_ckpt_dir):
+    """A SimulatedNodeFailure naming the plan HEAD cannot be re-formed
+    around (SourceFailedError): the loop must take the checkpoint
+    rollback path, not retry-with-reform, and the plan stays intact."""
+    plan = MultiChainPlan(TOPO, 0, [3, 7, 12], num_chains=2)
+    before = [list(c) for c in plan.chains]
+    ckpt = CheckpointManager(tmp_ckpt_dir, keep_last_k=2)
+    injector = FaultInjector(fail_at=(1,), node=0)  # the head dies
+
+    def step_fn(state, i):
+        injector.maybe_fail(i)
+        return {"count": state["count"] + 1}, {}
+
+    state, res = resilient_loop(
+        state={"count": 0}, step_fn=step_fn, num_steps=3, ckpt=ckpt,
+        ckpt_every=100, max_restarts=2, reform_fn=plan.reform,
+    )
+    ckpt.close()
+    assert res.restarts == 1 and res.reforms == 0
+    assert [list(c) for c in plan.chains] == before and plan.failed == []
+
+
+def test_resilient_loop_concurrent_failure_event(tmp_ckpt_dir):
+    """One SimulatedNodeFailure naming TWO dead members re-forms both
+    sub-chains in a single reform_fn call — no rollback."""
+    plan = MultiChainPlan(TOPO, 0, [3, 7, 12, 14, 9, 18], num_chains=3)
+    dead = (plan.chains[0][-1], plan.chains[1][-1])
+    ckpt = CheckpointManager(tmp_ckpt_dir, keep_last_k=2)
+    injector = FaultInjector(fail_at=(1,), nodes=dead)
+    calls = []
+
+    def reform(nodes):
+        calls.append(nodes)
+        return plan.reform(nodes)
+
+    def step_fn(state, i):
+        injector.maybe_fail(i)
+        return {"count": state["count"] + 1}, {}
+
+    state, res = resilient_loop(
+        state={"count": 0}, step_fn=step_fn, num_steps=3, ckpt=ckpt,
+        ckpt_every=100, max_restarts=2, reform_fn=reform,
+    )
+    ckpt.close()
+    assert res.reforms == 1 and res.restarts == 0
+    assert calls == [dead]  # the whole set in ONE event
+    assert sorted(plan.failed) == sorted(dead)
+    assert not set(dead) & set(plan.survivors)
+
+
 def test_plan_reform_unknown_node_returns_false():
     plan = MultiChainPlan(TOPO, 0, [3, 7, 12], num_chains=2)
-    assert plan.reform(0) is False  # the head cannot be a member
+    with pytest.raises(SourceFailedError):  # head death = total loss
+        plan.reform(0)
     assert plan.reform(11) is False  # never a member
     assert plan.reform(7) is True
     assert plan.reform(7) is False  # already failed
     assert 7 not in plan.survivors
+
+
+def test_plan_reform_failure_sets():
+    plan = MultiChainPlan(TOPO, 0, [3, 7, 12, 14, 9, 18], num_chains=3)
+    before = [list(c) for c in plan.chains]
+    dead = {before[0][-1], before[1][0]}
+    assert plan.reform(dead) is True
+    assert sorted(plan.failed) == sorted(dead)
+    assert sorted(plan.survivors) == sorted(
+        d for c in before for d in c if d not in dead
+    )
+    # a set containing an already-failed node declines without mutating
+    snapshot = [list(c) for c in plan.chains]
+    assert plan.reform({before[0][-1], before[2][0]}) is False
+    assert [list(c) for c in plan.chains] == snapshot
+    # a set containing the head is total loss even if others are live
+    with pytest.raises(SourceFailedError):
+        plan.reform({0, before[2][0]})

@@ -352,6 +352,60 @@ def test_degraded_broadcast_k4_matches_program_interpreter(run_multidevice):
     """, timeout=900)
 
 
+def test_degraded_broadcast_two_dead_nodes_k3(run_multidevice):
+    """ISSUE-5 concurrent failures: TWO dead members dropped in one
+    degraded K=3 broadcast must be bit-exact against the failure-set
+    oracle AND against the program interpreter replaying the spliced
+    schedule — dead nodes, like non-members, stay untouched."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+    from repro.core import program as prg
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    xs = jnp.arange(8 * 6 * 2, dtype=jnp.float32).reshape(8, 6, 2) + 1.0
+
+    cases = [
+        (0, [(1, 2, 3), (4, 5), (6, 7)], {2, 5}),   # two distinct chains
+        (0, [(1, 2, 3), (4, 5), (6, 7)], {1, 3}),   # same chain twice
+        (0, [(1, 2, 3), (4, 5), (6, 7)], {6, 7}),   # a whole chain dies
+        (4, [(5, 6, 7), (3, 2), (1, 0)], {5, 2}),   # non-zero head
+    ]
+    for head, chains, failed in cases:
+        for frames in (1, 2):
+            def f(x, head=head, chains=chains, failed=failed, frames=frames):
+                return cw.degraded_multi_chain_broadcast(
+                    x[0], 'x', head, chains, frozenset(failed),
+                    num_frames=frames)[None]
+            y = jax.jit(jax.shard_map(
+                f, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+            expect = ref.degraded_multi_broadcast_ref(
+                np.asarray(xs), head, chains, failed)
+            np.testing.assert_array_equal(
+                np.asarray(y), expect, err_msg=f"{head} {chains} {failed}")
+            prog = prg.plan_broadcast(
+                8, head, tuple(cw.degraded_chains(chains, failed)))
+            replay = ref.run_program_ref(np.asarray(xs), prog)
+            np.testing.assert_array_equal(
+                np.asarray(y), replay, err_msg=f"replay {head} {failed}")
+            for dead in failed:
+                assert not np.asarray(y)[dead].any()
+
+    # validation: a set containing the head, or any non-member, raises
+    def expect_value_error(fn):
+        try:
+            jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P('x'), out_specs=P('x')))(xs)
+        except ValueError:
+            return
+        raise SystemExit("expected ValueError")
+    expect_value_error(lambda x: cw.degraded_multi_chain_broadcast(
+        x[0], 'x', 0, [(1, 2)], frozenset({0, 1}))[None])
+    expect_value_error(lambda x: cw.degraded_multi_chain_broadcast(
+        x[0], 'x', 0, [(1, 2)], frozenset({1, 5}))[None])
+    print("degraded two-dead K=3 OK")
+    """, timeout=900)
+
+
 def test_multi_ring_rs_ag_a2a_match_program_oracles(run_multidevice):
     """The new K-ring reduce-scatter / all-gather / all-to-all SPMD
     collectives, pinned BIT-exactly against the program interpreter

@@ -1,0 +1,273 @@
+"""Recovery-as-a-program (ISSUE-5 tentpole): ``plan_recovery`` emits
+the detection window + re-formed suffixes of a failed multi-chain
+broadcast as a ChainProgram, and ``chain_recovery_latency`` is a thin
+wrapper pricing it through the generic ``program_latency``.
+
+Pins the acceptance matrix:
+
+* **CC-exact regression** — single-failure ``chain_recovery_latency``
+  values are IDENTICAL to the pre-refactor model (the pin table below
+  was captured before the rewrite), with and without ``src_read_bw``
+  contention.
+* **Structure** — the planned program validates; detection is an
+  edge-free ``tag="detect"`` step; each re-formed suffix streams from
+  the member that banked the payload (``group_heads``); the numpy
+  program interpreter replays it and delivers the payload to every
+  re-sent survivor.
+* **Concurrent failures** — for random meshes/partitions and 2–3
+  failures in distinct sub-chains: unaffected chains are CC-exact
+  (isolation), the program validates, and the multi-failure program's
+  wire bytes are >= every constituent single-failure program's.
+* **Accounting** — recovery bytes appear in ``program_wire_bytes`` /
+  the ``recovery_wire_bytes`` detail entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import chainwrite_ref as ref
+from repro.core import program as prg
+from repro.core.program import plan_recovery, program_wire_bytes
+from repro.core.scheduling import partition_schedule, reform_chain
+from repro.core.simulator import (
+    DEFAULT_PARAMS,
+    chain_recovery_latency,
+    multi_chain_latency,
+    program_latency,
+)
+from repro.core.topology import MeshTopology
+
+BIG = MeshTopology(8, 8)
+TOPO = MeshTopology(4, 5)
+SIZE = 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# CC-exact regression: the pre-refactor single-failure values
+# ---------------------------------------------------------------------------
+
+# Captured from the pre-IR chain_recovery_latency (direct _chain_phases
+# pricing) at 64 KiB payloads; "contended" = src_read_bw=48. The
+# refactored path (plan_recovery -> program_latency) must reproduce
+# every value EXACTLY.
+_PIN_CASES = {
+    "big_k3_mid": (BIG, list(range(1, 13)), 3),
+    "big_k2_16": (BIG, list(range(1, 17)), 2),
+    "soc_k2": (TOPO, [3, 7, 12, 14, 9, 18], 2),
+    "soc_k1": (TOPO, [3, 7, 12, 14, 9, 18], 1),
+}
+_PINS = {
+    "big_k3_mid.default": {1: 1985, 2: 3131, 3: 3263, 4: 1943, 5: 3103,
+                           6: 3009, 7: 1857, 8: 3376, 9: 3297, 10: 3211,
+                           11: 3172, 12: 3092},
+    "big_k3_mid.contended": {1: 5057, 2: 6545, 3: 6677, 4: 5015, 5: 6517,
+                             6: 6423, 7: 4929, 8: 6790, 9: 6711, 10: 6625,
+                             11: 6586, 12: 6506},
+    "big_k2_16.default": {1: 3543, 2: 3461, 3: 4245, 4: 3990, 5: 3911,
+                          6: 3662, 7: 3583, 8: 3214, 9: 3296, 10: 3378,
+                          11: 4154, 12: 4075, 13: 3826, 14: 3747,
+                          15: 2430, 16: 2067},
+    "big_k2_16.contended": {1: 5592, 2: 5510, 3: 6294, 4: 6039, 5: 5960,
+                            6: 5711, 7: 5632, 8: 5263, 9: 5345, 10: 5427,
+                            11: 6203, 12: 6124, 13: 5875, 14: 5796,
+                            15: 4137, 16: 3774},
+    "soc_k2.default": {3: 2901, 7: 1746, 9: 3247, 12: 3159, 14: 3080,
+                       18: 1926},
+    "soc_k2.contended": {3: 4950, 7: 3453, 9: 5296, 12: 5208, 14: 5129,
+                         18: 3633},
+    "soc_k1.default": {3: 3585, 7: 3497, 9: 3412, 12: 3321, 14: 3242,
+                       18: 2088},
+    "soc_k1.contended": {3: 4269, 7: 4181, 9: 4096, 12: 4005, 14: 3926,
+                         18: 2430},
+}
+
+
+def test_single_failure_latency_is_cc_identical_to_pre_refactor():
+    contended = dataclasses.replace(DEFAULT_PARAMS, src_read_bw=48)
+    for name, (topo, dests, k) in _PIN_CASES.items():
+        chains = partition_schedule(topo, dests, 0, num_chains=k)
+        for pname, p in (("default", DEFAULT_PARAMS), ("contended", contended)):
+            pins = _PINS[f"{name}.{pname}"]
+            for failed, want in pins.items():
+                got = chain_recovery_latency(topo, 0, chains, failed, SIZE, p)
+                assert got == want, (name, pname, failed, got, want)
+
+
+def test_single_failure_is_priced_through_the_program():
+    """The wrapper's numbers ARE the program model's: detection + the
+    program's per-group four phases, nothing else."""
+    chains = partition_schedule(BIG, list(range(1, 13)), 0, num_chains=3)
+    failed = chains[0][1]
+    program = plan_recovery(BIG, 0, chains, failed)
+    d = chain_recovery_latency(BIG, 0, chains, failed, SIZE, detail=True)
+    rec = d["recovery"]
+    pl = program_latency(BIG, 0, program, SIZE, DEFAULT_PARAMS, detail=True)
+    assert rec["recovery_cc"] == pl["per_chain"][0]
+    assert pl["detect_cc"] == DEFAULT_PARAMS.fail_timeout_cc
+    assert (rec["cfg_cc"], rec["grant_cc"], rec["data_cc"],
+            rec["finish_cc"]) == tuple(pl["per_phase"][0])
+    assert d["recovery_wire_bytes"] == program_wire_bytes(program, SIZE)
+    assert d["recovery_wire_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Program structure (golden, device-free)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_recovery_golden_structure():
+    chains = [[1, 2, 3], [9, 17]]
+    prog = plan_recovery(BIG, 0, chains, {2, 9})
+    prog.validate()
+    assert prog.collective == "recovery" and prog.kind == "pipeline"
+    # chain 0: prefix [1] banked the payload -> resent [3] from head 1;
+    # chain 1: head-of-chain failure -> resent [17] from the source.
+    assert prog.groups == ((3,), (17,))
+    assert prog.group_heads == (1, 0)
+    assert prog.head == 0
+    # step 0 is the shared edge-free detection window
+    assert prog.steps[0].tag == "detect" and prog.steps[0].edges == ()
+    assert prog.steps[0].num_permutes() == 0
+    # then the re-formed suffixes' hop slots, one edge per group
+    assert prog.steps[1].tag == "chain"
+    assert set(prog.steps[1].edges) == {(1, 3), (0, 17)}
+    # both resends are depth-1 with distinct sources: one fused permute
+    assert program_wire_bytes(prog, SIZE) == SIZE
+
+
+def test_plan_recovery_tail_failures_emit_no_groups():
+    """A pure tail failure orphans nothing: the program is just the
+    detection window (zero bytes) and program_latency prices exactly
+    the timeout."""
+    prog = plan_recovery(BIG, 0, [[1, 2, 3], [9, 17]], 3)
+    assert prog.groups == () and prog.group_heads == ()
+    assert [s.tag for s in prog.steps] == ["detect"]
+    assert program_wire_bytes(prog, SIZE) == 0
+    assert program_latency(BIG, 0, prog, SIZE) == DEFAULT_PARAMS.fail_timeout_cc
+
+
+def test_plan_recovery_validates_failures():
+    with pytest.raises(ValueError):
+        plan_recovery(BIG, 0, [[1, 2]], 7)  # not a member
+    with pytest.raises(ValueError):
+        plan_recovery(BIG, 0, [[1, 2]], set())  # empty failure set
+
+
+def test_interpret_program_replays_recovery_delivery():
+    """Seed the banked heads with the payload and the numpy program
+    interpreter delivers it to every re-sent survivor — recovery is
+    replayable like any other collective's program."""
+    chains = [[1, 2, 10, 9], [5, 6, 7]]
+    dead = {10, 6}
+    prog = plan_recovery(BIG, 0, chains, dead)
+    resent = {d for g in prog.groups for d in g}
+    payload = np.arange(4.0, dtype=np.float32) + 1.0
+    shards = np.zeros((prog.num_devices, 1, 4), np.float32)
+    for h in prog.group_heads:
+        shards[h, 0] = payload
+    out = ref.interpret_program(shards, prog)
+    for d in range(prog.num_devices):
+        if d in resent or d in prog.group_heads:
+            np.testing.assert_array_equal(out[d, 0], payload)
+        else:
+            assert not out[d, 0].any()
+    # the failed members are never touched
+    assert not out[10, 0].any() and not out[6, 0].any()
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-failure properties (random meshes — exact-TSP heavy: slow)
+# ---------------------------------------------------------------------------
+
+
+def _draw_partitioned_failures(data, topo, max_failures=3):
+    n = topo.num_nodes
+    dests = data.draw(
+        st.lists(
+            st.integers(1, n - 1), min_size=6, max_size=14, unique=True
+        )
+    )
+    k = data.draw(st.integers(2, 3))
+    chains = partition_schedule(topo, dests, 0, num_chains=k)
+    multi = [c for c in chains if len(c)]
+    nf = min(data.draw(st.integers(2, max_failures)), len(multi))
+    failed = {
+        data.draw(st.sampled_from(c), label=f"f{i}")
+        for i, c in enumerate(multi[:nf])
+    }
+    return chains, failed
+
+
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_concurrent_failures_preserve_isolation_invariant(data):
+    nx = data.draw(st.integers(4, 8))
+    ny = data.draw(st.integers(4, 8))
+    torus = data.draw(st.booleans())
+    topo = MeshTopology(nx, ny, torus=torus)
+    chains, failed = _draw_partitioned_failures(data, topo)
+    base = multi_chain_latency(topo, 0, chains, SIZE, detail=True)
+    rec = chain_recovery_latency(topo, 0, chains, failed, SIZE, detail=True)
+    affected = {r["chain"] for r in rec["recoveries"]}
+    assert affected == {
+        i for i, c in enumerate(chains) if any(f in c for f in failed)
+    }
+    for i, (b, r) in enumerate(zip(base["per_chain"], rec["per_chain"])):
+        if i in affected:
+            entry = next(x for x in rec["recoveries"] if x["chain"] == i)
+            assert r == b + entry["recovery_cc"]
+            assert entry["recovery_cc"] >= DEFAULT_PARAMS.fail_timeout_cc
+        else:
+            assert r == b  # CC-exact isolation
+    assert rec["per_phase"] == base["per_phase"]
+    assert rec["total"] == max(rec["per_chain"])
+    # every affected chain's reform covers exactly its survivors
+    for entry in rec["recoveries"]:
+        chain = chains[entry["chain"]]
+        assert sorted(entry["reformed"]) == sorted(
+            d for d in chain if d not in failed
+        )
+
+
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_concurrent_failure_program_validates_and_dominates_bytes(data):
+    """plan_recovery validates for random concurrent failures, and its
+    wire bytes are >= every constituent single failure's program."""
+    nx = data.draw(st.integers(4, 8))
+    ny = data.draw(st.integers(4, 8))
+    topo = MeshTopology(nx, ny)
+    chains, failed = _draw_partitioned_failures(data, topo)
+    prog = plan_recovery(topo, 0, chains, failed)
+    prog.validate()  # idempotent, raises on any invariant breach
+    assert prog.collective == "recovery"
+    assert len(prog.group_heads) == len(prog.groups)
+    multi_bytes = program_wire_bytes(prog, SIZE)
+    for f in failed:
+        single = program_wire_bytes(plan_recovery(topo, 0, chains, f), SIZE)
+        assert multi_bytes >= single, (failed, f, multi_bytes, single)
+    # groups = the re-formed resent suffixes, one per affected chain
+    for g, h in zip(prog.groups, prog.group_heads):
+        assert g  # never empty
+        assert h == 0 or any(h in c for c in chains)
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_concurrent_failures_quick_smoke(data):
+    """QUICK-lane twin of the slow property suites on the 20-node SoC."""
+    chains, failed = _draw_partitioned_failures(data, TOPO, max_failures=2)
+    base = multi_chain_latency(TOPO, 0, chains, SIZE, detail=True)
+    rec = chain_recovery_latency(TOPO, 0, chains, failed, SIZE, detail=True)
+    prog = plan_recovery(TOPO, 0, chains, failed)
+    affected = {r["chain"] for r in rec["recoveries"]}
+    for i, (b, r) in enumerate(zip(base["per_chain"], rec["per_chain"])):
+        assert (r == b) == (i not in affected)
+    assert rec["recovery_wire_bytes"] == program_wire_bytes(prog, SIZE)

@@ -102,6 +102,45 @@ def test_server_continuous_batching():
     assert wm is not None and wm["speedup_vs_unicast"] > 1.0
 
 
+def test_server_weight_refresh_is_full_tree_and_elastic():
+    """ISSUE-5 elastic serving: broadcast_weights streams the WHOLE
+    flattened parameter tree (logged bytes == the params' true nbytes),
+    every replica receives it bit-exactly, and Server.scale_down
+    re-forms the live MultiChainPlan (same object, no rebuild) so the
+    survivors still get full weights after replica loss."""
+    import jax
+
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                     max_seq=48, replicas=6)
+    server = Server(sc)
+    flat, _ = jax.tree_util.tree_flatten(server.params)
+    true_nbytes = sum(int(np.asarray(x).nbytes) for x in flat)
+    payload = np.concatenate(
+        [np.ascontiguousarray(x).reshape(-1).view(np.uint8) for x in flat]
+    )
+
+    rec = server.broadcast_weights(chunk_bytes=64 * 1024)
+    assert rec["bytes"] == true_nbytes  # a REAL weight refresh
+    assert rec["chunks"] == -(-true_nbytes // (64 * 1024))
+    assert rec["speedup_vs_unicast"] > 1.0
+    assert sorted(server.last_delivery) == [1, 2, 3, 4, 5]
+    for buf in server.last_delivery.values():
+        np.testing.assert_array_equal(buf, payload)
+
+    plan_before = server.plan
+    lost = server.scale_down(4)
+    assert lost == (4, 5)
+    assert server.plan is plan_before  # re-formed, never rebuilt
+    assert sorted(server.plan.failed) == [4, 5]
+    rec2 = server.broadcast_weights(chunk_bytes=64 * 1024)
+    assert rec2["bytes"] == true_nbytes
+    assert sorted(server.last_delivery) == [1, 2, 3]
+    for buf in server.last_delivery.values():
+        np.testing.assert_array_equal(buf, payload)  # still bit-exact
+    with pytest.raises(ValueError):  # cannot drop the plan head
+        server.scale_down(0)
+
+
 def test_server_greedy_is_deterministic():
     sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
                      max_seq=48)
