@@ -15,6 +15,10 @@ parse) are the portable metric and must match the ChainProgram IR's
 * reduce-scatter / all-gather / all-to-all — the K-ring schedules must
   match the single ring's bytes exactly (the planner redistributes
   hops, not bytes);
+* int8-wire all-reduce (``ar_int8_k{1,2,4}``) — the same rs_ag
+  schedules with ``wire_dtype="int8"``: int8 frames plus one f32 scale
+  per hop (~4x fewer payload bytes), matched exactly by the IR's
+  int8-aware ``Step.bytes`` model;
 * multi-chain broadcast (K=2) is timed against the single chain.
 
 Besides the CSV rows, ``main()`` writes ``BENCH_collectives.json`` at
@@ -106,6 +110,15 @@ def multi_a2a(k):
         return out.reshape(N)[None]
     return fn
 
+def int8_ar(k):
+    def fn(x):
+        out = (cw.multi_chain_all_reduce(
+                   x[0], "x", RINGS[k], algo="rs_ag", wire_dtype="int8")
+               if k > 1
+               else cw.chain_all_reduce(x[0], "x", wire_dtype="int8"))
+        return out[None]
+    return fn
+
 results = {}
 cases = [
     ("chain_all_reduce", chain_ar),
@@ -121,6 +134,10 @@ for k in (1, 2, 4):
         (f"multi_chain_all_gather_k{k}", multi_ag(k)),
         (f"multi_chain_all_to_all_k{k}", multi_a2a(k)),
     ]
+for k in (1, 2, 4):
+    # name deliberately avoids the "all_reduce" substring: the int8 wire
+    # is lossy, so the exact sums-to-L check below must not apply.
+    cases.append((f"ar_int8_k{k}", int8_ar(k)))
 for name, fn in cases:
     sm = jax.shard_map(fn, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
     jitted = jax.jit(sm)
@@ -130,6 +147,12 @@ for name, fn in cases:
     if "all_reduce" in name:  # correctness: every element sums to L
         np.testing.assert_allclose(
             np.asarray(jitted(x))[0], np.full((N,), L, np.float32))
+    elif name.startswith("ar_int8"):
+        # lossy wire: per-hop requantization bounds the error relative
+        # to the tensor max, not element-wise
+        got = np.asarray(jitted(x))[0]
+        err = float(np.max(np.abs(got - L)) / L)
+        assert err < 0.08, (name, err)
 
 payload = N * 4
 ring_pred = 2 * (L - 1) / L * payload
@@ -147,6 +170,20 @@ for K in (2, 4):
     rsag_bytes = results[f"multi_chain_all_reduce_k{K}_rs_ag"][1]
     assert 0.9 * rsag_pred <= rsag_bytes <= 1.35 * rsag_pred, (K, rsag_bytes, rsag_pred)
     assert rsag_bytes < rot_bytes, (K, rsag_bytes, rot_bytes)
+
+# int8 wire: each rs_ag step ships its f32 shard as int8 plus one f32
+# scale, so per-device bytes = steps * (shard_elems + 4) exactly —
+# ~4x below the f32 twin (which ships steps * shard_elems * 4).
+SHARDS = {1: N // 8, 2: N // 4, 4: N // 2}
+for K in (1, 2, 4):
+    S = L // K
+    steps = 2 * (S - 1) + (K - 1)
+    pred = steps * (SHARDS[K] + 4)
+    got = results[f"ar_int8_k{K}"][1]
+    assert got == pred, (K, got, pred)
+    f32_twin = results["chain_all_reduce" if K == 1
+                       else f"multi_chain_all_reduce_k{K}_rs_ag"][1]
+    assert got < f32_twin / 3.5, (K, got, f32_twin)
 
 # The K-ring reduce-scatter / all-gather / all-to-all redistribute hops,
 # not bytes: every K must land on the single ring's byte count.
@@ -206,7 +243,10 @@ def _modeled(name: str) -> dict:
             "modeled_bytes": prg.pipelined_wire_bytes(prog, payload, 4),
             "modeled_latency_cc": program_latency(topo, 0, prog, payload),
         }
-    if name.startswith("multi_chain_all_reduce") or name == "chain_all_reduce":
+    if name.startswith("ar_int8_k"):
+        k = int(name[len("ar_int8_k"):])
+        prog = prg.plan_all_reduce(L, RINGS[k], "rs_ag", wire_dtype="int8")
+    elif name.startswith("multi_chain_all_reduce") or name == "chain_all_reduce":
         if name == "chain_all_reduce":
             k, algo = 1, "rs_ag"
         else:

@@ -57,6 +57,9 @@ from . import program as prg
 from .program import ALL_REDUCE_ALGOS, ChainProgram, validate_ring_partition
 from .scheduling import FailureSpec, normalize_failed
 
+# Wire-dtype numerics (safe: repro.runtime never imports this module).
+from repro.runtime.compression import dequantize, quantize
+
 Axis = str | tuple[str, ...]
 
 # When True, ring/chain scans are fully unrolled. The dry-run sets this
@@ -144,12 +147,30 @@ def _rows_from(table, idx, source, keep=None):
     return jnp.where(mask, rows, jnp.zeros_like(rows))
 
 
-def _one_step(buf, out, shards, axis_name, idx, step):
+def _hop(buf, axis_name, edges, idx, wire):
+    """Ship ``buf`` over one step's edges. ``wire="int8"`` quantizes
+    before the hop and dequantizes after: the int8 frame and its f32
+    scale travel as two ppermutes (the scale is the 4-byte sideband
+    :meth:`ChainProgram.step_bytes` prices); non-target devices receive
+    zeros for both, so dequantize reproduces the uncompressed zeros."""
+    if wire == "int8":
+        q, scale = quantize(buf)
+        q = _fanout(q, axis_name, edges, idx)
+        scale = _fanout(scale, axis_name, edges, idx)
+        # No contraction barrier needed: quantize() truncates the scale
+        # mantissa so q * scale is exact in f32, which makes an FMA of
+        # dequantize-mul + accumulate-add bitwise equal to separate
+        # rounding — the oracle replay stays exact either way.
+        return dequantize(q, scale)
+    return _fanout(buf, axis_name, edges, idx)
+
+
+def _one_step(buf, out, shards, axis_name, idx, step, wire=None):
     """One program step (the machine model of :mod:`repro.core.program`
     verbatim): load -> hop -> combine -> write."""
     if step.load is not None:
         buf = _rows_from(step.load, idx, out, keep=buf)
-    buf = _fanout(buf, axis_name, step.edges, idx)
+    buf = _hop(buf, axis_name, step.edges, idx, wire)
     if step.combine == prg.ADD:
         src = shards if step.add_from == "input" else out
         buf = buf + _rows_from(step.add_src, idx, src)
@@ -210,26 +231,29 @@ def _write_dense(buf, out, slots, width, write_op):
     return out
 
 
-def _uniform_runs(steps):
+def _uniform_runs(steps, wires=None):
     """Group consecutive steps that share edges/width/combine/write
-    structure (differing only in their addressing tables) so the
-    executor can roll each group into one ``lax.scan`` — keeping the
-    compiled HLO ring-length-independent as the pre-IR collectives
-    were. Steps with a ``load`` (phase boundaries) run standalone."""
-    runs: list[list] = []
+    structure AND wire dtype (differing only in their addressing
+    tables) so the executor can roll each group into one ``lax.scan``
+    — keeping the compiled HLO ring-length-independent as the pre-IR
+    collectives were. Steps with a ``load`` (phase boundaries) run
+    standalone. Returns ``[(wire, [steps...]), ...]``."""
+    if wires is None:
+        wires = [None] * len(steps)
+    runs: list[tuple] = []
     key_prev = None
-    for s in steps:
+    for s, w in zip(steps, wires):
         key = (s.edges, s.width, s.combine, s.add_from,
-               s.add_src is None, s.write is None, s.write_op)
+               s.add_src is None, s.write is None, s.write_op, w)
         if s.load is None and runs and key_prev == key:
-            runs[-1].append(s)
+            runs[-1][1].append(s)
         else:
-            runs.append([s])
+            runs.append((w, [s]))
         key_prev = key if s.load is None else None
     return runs
 
 
-def _scan_run(buf, out, shards, axis_name, idx, run):
+def _scan_run(buf, out, shards, axis_name, idx, run, wire=None):
     """Rolled execution of a uniform step run: the per-step addressing
     tables stack into the scan's ``xs`` (pre-gathered to this device's
     rows), the step structure lives in the body."""
@@ -255,7 +279,7 @@ def _scan_run(buf, out, shards, axis_name, idx, run):
     def body(carry, xs):
         buf, out = carry
         add_t, write_t, row_t, slot_t = xs
-        buf = _fanout(buf, axis_name, s0.edges, idx)
+        buf = _hop(buf, axis_name, s0.edges, idx, wire)
         if s0.combine == prg.ADD:
             src = shards if s0.add_from == "input" else out
             safe = jnp.clip(add_t, 0, src.shape[0] - 1)
@@ -290,15 +314,28 @@ def _run_stepped(shards: jax.Array, axis_name: Axis, prog: ChainProgram) -> jax.
     HLO-byte-parsing mode) unrolls every step into its own ppermute.
     """
     idx = _axis_index(axis_name)
+    wires = [prog.step_wire_dtype(s) for s in prog.steps]
+    orig_dtype = shards.dtype
+    if any(w is not None for w in wires):
+        # The compressed wire accumulates in f32 (quantize/dequantize
+        # are f32 numerics); integer payloads cannot round-trip.
+        if not jnp.issubdtype(shards.dtype, jnp.floating):
+            raise ValueError(
+                f"wire_dtype='int8' requires a floating payload, "
+                f"got {shards.dtype}"
+            )
+        shards = shards.astype(jnp.float32)
     buf = _rows_from(prog.buf_init, idx, shards)
     out = _rows_from(prog.out_init, idx, shards)
-    for run in _uniform_runs(prog.steps):
+    for wire, run in _uniform_runs(prog.steps, wires):
         if len(run) == 1 or _STATIC_UNROLL:
             for step in run:
-                buf, out = _one_step(buf, out, shards, axis_name, idx, step)
+                buf, out = _one_step(
+                    buf, out, shards, axis_name, idx, step, wire
+                )
         else:
-            buf, out = _scan_run(buf, out, shards, axis_name, idx, run)
-    return out
+            buf, out = _scan_run(buf, out, shards, axis_name, idx, run, wire)
+    return out.astype(orig_dtype)
 
 
 def _execute_pipeline(
@@ -628,11 +665,15 @@ def chain_all_reduce(
     x: jax.Array,
     axis_name: Axis,
     order: Sequence[int] | None = None,
+    *,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """Ring all-reduce = reduce-scatter + all-gather on the scheduled
-    ring (bandwidth-optimal: 2·(L-1)/L of the payload per link)."""
+    ring (bandwidth-optimal: 2·(L-1)/L of the payload per link).
+    ``wire_dtype="int8"`` ships every hop quantized (per-hop int8 frame
+    + f32 scale; f32 accumulation)."""
     L, order = _ring_args(axis_name, order)
-    prog = prg.plan_all_reduce(L, (order,))
+    prog = prg.plan_all_reduce(L, (order,), wire_dtype=wire_dtype)
     return execute_program(x, axis_name, prog)
 
 
@@ -642,6 +683,7 @@ def multi_chain_all_reduce(
     orders: Sequence[Sequence[int]],
     *,
     algo: str = "rs_ag",
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """All-reduce over K disjoint equal-size sub-rings of the axis.
 
@@ -674,7 +716,7 @@ def multi_chain_all_reduce(
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
     L, orders = _ring_partition(axis_name, orders)
-    prog = prg.plan_all_reduce(L, orders, algo)
+    prog = prg.plan_all_reduce(L, orders, algo, wire_dtype=wire_dtype)
     return execute_program(x, axis_name, prog)
 
 
@@ -682,6 +724,8 @@ def chain_all_to_all(
     x: jax.Array,
     axis_name: Axis,
     order: Sequence[int] | None = None,
+    *,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """Ring all-to-all (MoE dispatch): ``x`` has leading dim L, chunk
     ``x[d]`` is destined to device ``d``. Returns stacked chunks
@@ -693,7 +737,7 @@ def chain_all_to_all(
     ring distance, the chain analogue of per-pair P2P transfers.
     """
     L, order = _ring_args(axis_name, order)
-    prog = prg.plan_all_to_all(L, (order,))
+    prog = prg.plan_all_to_all(L, (order,), wire_dtype=wire_dtype)
     return execute_program(x, axis_name, prog)
 
 
@@ -701,6 +745,8 @@ def multi_chain_all_to_all(
     x: jax.Array,
     axis_name: Axis,
     orders: Sequence[Sequence[int]],
+    *,
+    wire_dtype: str | None = None,
 ) -> jax.Array:
     """All-to-all over K disjoint equal-size sub-rings: intra-ring
     rotations interleaved with cross-ring hops (K·(S-1) + (K-1) = L-1
@@ -708,7 +754,7 @@ def multi_chain_all_to_all(
     match the single ring; every hop is ring-local or position-paired).
     K=1 delegates to :func:`chain_all_to_all`'s schedule."""
     L, orders = _ring_partition(axis_name, orders)
-    prog = prg.plan_all_to_all(L, orders)
+    prog = prg.plan_all_to_all(L, orders, wire_dtype=wire_dtype)
     return execute_program(x, axis_name, prog)
 
 

@@ -117,6 +117,45 @@ def all_to_all_ref(xs: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _is_float_dtype(dt) -> bool:
+    """True for numpy floats AND the ml_dtypes extension floats
+    (bfloat16, float8_*) that ``np.issubdtype`` does not classify."""
+    dt = np.dtype(dt)
+    if np.issubdtype(dt, np.floating):
+        return True
+    try:
+        import ml_dtypes
+
+        ml_dtypes.finfo(dt)
+        return True
+    except (ImportError, ValueError):
+        return False
+
+
+def _quantize_ref(x: np.ndarray) -> tuple[np.ndarray, np.float32]:
+    """Numpy twin of ``repro.runtime.compression.quantize``: identical
+    f32 arithmetic (f32 max, power-of-two divisor, round-half-to-even,
+    17-bit scale mantissa), so the wire replay is bit-exact against the
+    SPMD executor: the /128 divisor makes XLA's divide-by-constant →
+    multiply-by-reciprocal rewrite exact, and the truncated scale makes
+    every dequantize product exact in f32, which neutralises FMA
+    contraction of dequantize-mul + accumulate-add."""
+    x = np.asarray(x, np.float32)
+    scale = np.float32(
+        np.max(np.abs(x)) / np.float32(128.0) + np.float32(1e-12)
+    )
+    scale = np.float32(
+        (np.asarray(scale, np.float32).view(np.uint32) & np.uint32(0xFFFFFF80))
+        .view(np.float32)
+    )
+    q = np.clip(np.round(x / scale), -127.0, 127.0).astype(np.int8)
+    return q, scale
+
+
+def _dequantize_ref(q: np.ndarray, scale: np.float32) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
 def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
     """Replay ``prog`` on the global pre-blocked view ``shards``
     (``(L, addr_shards, m, ...)``); returns the global out slots
@@ -130,6 +169,16 @@ def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
             f"(L={L}, addr_shards={prog.addr_shards})"
         )
     inner = shards.shape[2:]
+    wires = [prog.step_wire_dtype(s) for s in prog.steps]
+    orig_dtype = shards.dtype
+    if any(w is not None for w in wires):
+        # Mirror the executor: the compressed wire computes in f32.
+        if not _is_float_dtype(shards.dtype):
+            raise ValueError(
+                f"wire_dtype='int8' requires a floating payload, "
+                f"got {shards.dtype}"
+            )
+        shards = shards.astype(np.float32)
 
     def rows(table, source, keep=None):
         width = len(table[0])
@@ -145,12 +194,20 @@ def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
 
     buf = rows(prog.buf_init, shards)
     out = rows(prog.out_init, shards)
-    for step in prog.steps:
+    for step, wire in zip(prog.steps, wires):
         if step.load is not None:
             buf = rows(step.load, out, keep=buf)
         new = np.zeros((L, step.width) + inner, shards.dtype)
-        for src, dst in step.edges:
-            new[dst] = buf[src]
+        if wire == "int8":
+            # Per-hop quantized wire: every device quantizes its whole
+            # buf with one f32 scale; the destination dequantizes.
+            # Non-targets keep zeros — dequantize(0, 0) = 0 in SPMD.
+            qs = [_quantize_ref(buf[d]) for d in range(L)]
+            for src, dst in step.edges:
+                new[dst] = _dequantize_ref(*qs[src])
+        else:
+            for src, dst in step.edges:
+                new[dst] = buf[src]
         buf = new
         if step.combine == prg.ADD:
             source = shards if step.add_from == "input" else out
@@ -164,7 +221,7 @@ def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
                             out[d, slot] = buf[d, j]
                         else:
                             out[d, slot] = out[d, slot] + buf[d, j]
-    return out
+    return out.astype(orig_dtype)
 
 
 def run_program_ref(
@@ -209,11 +266,13 @@ def run_program_ref(
 
 
 def multi_all_reduce_ref(
-    xs: np.ndarray, orders, algo: str = "rs_ag"
+    xs: np.ndarray, orders, algo: str = "rs_ag",
+    wire_dtype: str | None = None,
 ) -> np.ndarray:
     """Oracle for ``multi_chain_all_reduce``: plans the same
     :class:`ChainProgram` the SPMD collective executes and replays it
-    with :func:`run_program_ref`, so the result matches bit-exactly.
+    with :func:`run_program_ref`, so the result matches bit-exactly —
+    including every per-hop quantization when ``wire_dtype="int8"``.
     ``xs`` is the (L, n, ...) global view. K=1 is — like the SPMD
     implementation — the single-ring reduce-scatter + all-gather with
     device-id chunk addressing, for either ``algo``.
@@ -223,7 +282,7 @@ def multi_all_reduce_ref(
         raise ValueError("empty ring set")
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
-    prog = prg.plan_all_reduce(xs.shape[0], orders, algo)
+    prog = prg.plan_all_reduce(xs.shape[0], orders, algo, wire_dtype=wire_dtype)
     return run_program_ref(xs, prog)
 
 
@@ -243,8 +302,10 @@ def multi_all_gather_ref(
     return run_program_ref(xs, prog, tiled=tiled)
 
 
-def multi_all_to_all_ref(xs: np.ndarray, orders) -> np.ndarray:
+def multi_all_to_all_ref(
+    xs: np.ndarray, orders, wire_dtype: str | None = None
+) -> np.ndarray:
     """Schedule-replaying oracle for ``multi_chain_all_to_all``."""
     orders = tuple(tuple(int(d) for d in c) for c in orders if len(c))
-    prog = prg.plan_all_to_all(xs.shape[0], orders)
+    prog = prg.plan_all_to_all(xs.shape[0], orders, wire_dtype=wire_dtype)
     return run_program_ref(xs, prog)

@@ -80,6 +80,13 @@ node count):
   interleaves intra-ring rotations with cross-ring hops (same total
   wire, shorter per-step distances).
 
+Every :class:`Step` (and the program as a default) carries a
+``wire_dtype``: ``None`` ships frames in the payload dtype; ``"int8"``
+quantizes each hop's frame to int8 with one f32 scale riding alongside
+(per-hop quantize → ship → dequantize → f32 combine). Compression is
+therefore an ordinary IR dimension — the same executor, oracle replay,
+byte/latency accounting and (K, algo, wire_dtype) selection apply.
+
 This module is dependency-light (stdlib only) so the SPMD layer, the
 numpy oracle, the simulator and the CLI all share ONE schedule source.
 """
@@ -93,6 +100,35 @@ from typing import Iterable, Iterator, Sequence
 # Canonical multi-ring all-reduce schedule names — the single tuple the
 # SPMD layer, the simulator and the CLI validate against.
 ALL_REDUCE_ALGOS = ("rs_ag", "rotation")
+
+# Wire dtypes a step may ship. None = payload dtype unchanged; "int8" =
+# per-hop symmetric quantization: an int8 frame plus one f32 scale.
+WIRE_DTYPES = ("int8",)
+_WIRE_SCALE_BYTES = 4  # the f32 scale shipped alongside each int8 frame
+
+
+def normalize_wire_dtype(wire_dtype) -> str | None:
+    """Canonical IR form of a wire dtype: ``None`` (ship the payload
+    dtype) or a name from :data:`WIRE_DTYPES`. Accepts the string form
+    or any numpy/jax dtype object whose name matches — keeping this
+    module stdlib-only while letting callers pass ``jnp.int8``."""
+    if wire_dtype is None:
+        return None
+    if isinstance(wire_dtype, str):
+        name = wire_dtype
+    else:
+        name = (
+            getattr(wire_dtype, "__name__", None)
+            or getattr(wire_dtype, "name", None)
+            or str(wire_dtype)
+        )
+    if name not in WIRE_DTYPES:
+        raise ValueError(
+            f"unknown wire dtype {wire_dtype!r}; "
+            f"expected None or one of {WIRE_DTYPES}"
+        )
+    return name
+
 
 Edge = tuple[int, int]
 Table = tuple[tuple[int, ...], ...]  # (num_devices, width); -1 = none
@@ -121,6 +157,8 @@ class Step:
     # (pipeline hop slots), "detect" (edge-free failure-timeout window —
     # priced as SimParams.fail_timeout_cc per occurrence, zero bytes).
     tag: str = "intra"
+    # Per-step wire dtype override; None defers to the program default.
+    wire_dtype: str | None = None
 
     def num_permutes(self) -> int:
         """ppermute ops the SPMD executor emits for this step: one fused
@@ -157,12 +195,26 @@ class ChainProgram:
     # re-formed suffix streams from the member that banked the payload).
     # None = every group streams from the initiator.
     group_heads: tuple[int, ...] | None = None
+    # Program-default wire dtype (``Step.wire_dtype`` overrides per
+    # step); None = frames ship in the payload dtype.
+    wire_dtype: str | None = None
 
     # -- accounting ---------------------------------------------------
+    def step_wire_dtype(self, step: Step) -> str | None:
+        """Resolved wire dtype of ``step``: its own override, else the
+        program default; ``None`` = payload dtype."""
+        return step.wire_dtype if step.wire_dtype is not None else self.wire_dtype
+
     def step_bytes(self, step: Step, size_bytes: int) -> int:
         """Frame bytes one edge of ``step`` carries, for a per-device
-        input payload of ``size_bytes``."""
-        return step.width * _ceil_div(size_bytes, self.addr_shards)
+        input payload of ``size_bytes``. An int8-wire step ships a
+        quarter-size frame (the byte model assumes a 4-byte payload
+        dtype, matching the executor's f32 wire arithmetic) plus one
+        f32 scale scalar per frame."""
+        frame = step.width * _ceil_div(size_bytes, self.addr_shards)
+        if self.step_wire_dtype(step) == "int8":
+            return _ceil_div(frame, 4) + _WIRE_SCALE_BYTES
+        return frame
 
     def wire_bytes(self, size_bytes: int) -> int:
         """Modeled collective wire bytes of the whole program — the
@@ -184,6 +236,7 @@ class ChainProgram:
         yield (
             f"{self.collective} [{self.kind}"
             + (f", algo={self.algo}" if self.algo else "")
+            + (f", wire={self.wire_dtype}" if self.wire_dtype else "")
             + f"] devices={self.num_devices} shards=1/{self.addr_shards}"
             f" out_slots={self.out_slots} groups={list(self.groups)}"
         )
@@ -193,6 +246,9 @@ class ChainProgram:
                 f" permutes={s.num_permutes()} frac={s.width}/{self.addr_shards}"
                 f" combine={s.combine} {list(s.edges)}"
             )
+            wd = self.step_wire_dtype(s)
+            if wd is not None:
+                line += f" wire={wd}"
             if size_bytes is not None:
                 line += f" bytes/edge={self.step_bytes(s, size_bytes)}"
             yield line
@@ -206,6 +262,11 @@ class ChainProgram:
             raise ValueError("degenerate program dimensions")
         if self.kind not in ("pipeline", "stepped"):
             raise ValueError(f"unknown program kind {self.kind!r}")
+        if normalize_wire_dtype(self.wire_dtype) is not None and self.kind != "stepped":
+            raise ValueError(
+                "wire_dtype is only supported on stepped programs "
+                "(the frame-pipelined executor ships payload-dtype frames)"
+            )
         if self.group_heads is not None:
             if self.kind != "pipeline":
                 raise ValueError("group_heads only applies to pipeline programs")
@@ -223,6 +284,8 @@ class ChainProgram:
         for i, s in enumerate(self.steps):
             if s.width < 1:
                 raise ValueError(f"step {i}: width < 1")
+            if normalize_wire_dtype(s.wire_dtype) is not None and self.kind != "stepped":
+                raise ValueError(f"step {i}: wire_dtype on a {self.kind} program")
             dsts = [e[1] for e in s.edges]
             if len(set(dsts)) != len(dsts):
                 raise ValueError(f"step {i}: duplicate edge destinations")
@@ -678,17 +741,31 @@ def plan_reduce_scatter(
     ).validate()
 
 
-@functools.lru_cache(maxsize=None)
 def plan_all_reduce(
     num_devices: int,
     orders: tuple[tuple[int, ...], ...],
     algo: str = "rs_ag",
+    wire_dtype: str | None = None,
 ) -> ChainProgram:
     """All-reduce over K sub-rings (see module docstring for the two
     schedules). K=1 is the single-ring reduce-scatter + all-gather
     with *device-id* chunk addressing for either ``algo`` — the
     historical ``chain_all_reduce`` schedule, kept so its fold order
-    (and therefore every bit-exactness pin) is unchanged."""
+    (and therefore every bit-exactness pin) is unchanged.
+    ``wire_dtype="int8"`` ships every hop quantized (per-hop int8 frame
+    + f32 scale); it composes with any (K, algo)."""
+    return _plan_all_reduce(
+        num_devices, orders, algo, normalize_wire_dtype(wire_dtype)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_all_reduce(
+    num_devices: int,
+    orders: tuple[tuple[int, ...], ...],
+    algo: str,
+    wire_dtype: str | None,
+) -> ChainProgram:
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
     L = int(num_devices)
@@ -736,6 +813,7 @@ def plan_all_reduce(
             addr_shards=L, out_slots=L,
             buf_init=_table(buf_init), out_init=_table(out_init),
             steps=tuple(steps), groups=orders, algo=algo,
+            wire_dtype=wire_dtype,
         ).validate()
 
     if algo == "rotation" or S == 1:
@@ -766,6 +844,7 @@ def plan_all_reduce(
             addr_shards=1, out_slots=1,
             buf_init=_table(buf_init), out_init=_table(out_init),
             steps=tuple(steps), groups=orders, algo=algo,
+            wire_dtype=wire_dtype,
         ).validate()
 
     # rs_ag, K > 1, S > 1: shards addressed by ring position.
@@ -809,19 +888,33 @@ def plan_all_reduce(
         addr_shards=S, out_slots=S,
         buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=orders, algo=algo,
+        wire_dtype=wire_dtype,
     ).validate()
 
 
-@functools.lru_cache(maxsize=None)
 def plan_all_to_all(
-    num_devices: int, orders: tuple[tuple[int, ...], ...]
+    num_devices: int,
+    orders: tuple[tuple[int, ...], ...],
+    wire_dtype: str | None = None,
 ) -> ChainProgram:
     """All-to-all (MoE dispatch): chunk ``j`` of each device's train is
     destined to device ``j``. The train rotates whole; each device
     peels the chunk addressed to it every step. K > 1 interleaves
     intra-ring rotations with cross-ring hops — (K·(S-1) + (K-1)) =
     L-1 steps either way (a chunk train cannot shrink), but every hop
-    stays ring-local/position-paired."""
+    stays ring-local/position-paired. ``wire_dtype="int8"`` ships the
+    rotating train quantized (per-hop int8 frame + f32 scale)."""
+    return _plan_all_to_all(
+        num_devices, orders, normalize_wire_dtype(wire_dtype)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_all_to_all(
+    num_devices: int,
+    orders: tuple[tuple[int, ...], ...],
+    wire_dtype: str | None,
+) -> ChainProgram:
     L = int(num_devices)
     orders = _check_rings(L, orders)
     K, S = len(orders), len(orders[0])
@@ -868,7 +961,7 @@ def plan_all_to_all(
         collective="all_to_all", kind="stepped", num_devices=L,
         addr_shards=L, out_slots=L,
         buf_init=_table(buf_init), out_init=_table(out_init),
-        steps=tuple(steps), groups=orders,
+        steps=tuple(steps), groups=orders, wire_dtype=wire_dtype,
     ).validate()
 
 

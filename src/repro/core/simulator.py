@@ -541,7 +541,8 @@ def _canonical_rings(ring_size: int, num_chains: int) -> tuple[tuple[int, ...], 
 
 
 def all_reduce_wire_bytes(
-    ring_size: int, num_chains: int, size_bytes: int, algo: str = "rs_ag"
+    ring_size: int, num_chains: int, size_bytes: int, algo: str = "rs_ag",
+    wire_dtype: str | None = None,
 ) -> int:
     """Per-device wire bytes of the K-sub-ring all-reduce schedules
     (``chainwrite.multi_chain_all_reduce``): S = ``ring_size`` members
@@ -556,13 +557,17 @@ def all_reduce_wire_bytes(
 
     K=1 always delegates to the single-ring reduce-scatter +
     all-gather, so the ``rs_ag`` formula applies for either ``algo``.
+    ``wire_dtype="int8"`` prices quarter-size frames plus the per-frame
+    f32 scale sideband.
     """
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
     S, K = int(ring_size), int(num_chains)
     if S < 1 or K < 1:
         raise ValueError("ring_size and num_chains must be >= 1")
-    program = prg.plan_all_reduce(S * K, _canonical_rings(S, K), algo)
+    program = prg.plan_all_reduce(
+        S * K, _canonical_rings(S, K), algo, wire_dtype=wire_dtype
+    )
     return program.wire_bytes(size_bytes)
 
 
@@ -588,6 +593,7 @@ def all_reduce_latency(
     p: SimParams = DEFAULT_PARAMS,
     *,
     algo: str = "rs_ag",
+    wire_dtype: str | None = None,
     detail: bool = False,
 ) -> int | dict[str, object]:
     """Analytical latency of the K-sub-ring all-reduce schedules —
@@ -627,7 +633,9 @@ def all_reduce_latency(
         )
     if len(clean) == 1:
         algo = "rs_ag"  # the K=1 delegation path: single-ring RS+AG
-    program = prg.plan_all_reduce(topo.num_nodes, clean, algo)
+    program = prg.plan_all_reduce(
+        topo.num_nodes, clean, algo, wire_dtype=wire_dtype
+    )
     out = program_latency(topo, src, program, size_bytes, p, detail=detail)
     if detail:
         assert isinstance(out, dict)
@@ -646,9 +654,13 @@ def choose_num_chains(
     p: SimParams = DEFAULT_PARAMS,
     collective: str = "broadcast",
     algo: str = "rs_ag",
-) -> tuple[int, list[list[int]]]:
+    wire_dtype: str | None = None,
+    detail: bool = False,
+) -> tuple[int, list[list[int]]] | dict[str, object]:
     """Pick K (1..max_chains) minimizing the calibrated model; ties go
-    to fewer chains. Returns ``(k, chains)``.
+    to fewer chains. Returns ``(k, chains)``; with ``detail=True``
+    returns ``{"num_chains", "rings", "algo", "wire_dtype",
+    "latency_cc"}`` instead (the extra selected dimensions).
 
     ``collective="broadcast"`` (default) partitions ``dsts`` into K
     sub-chains scored by ``multi_chain_latency`` (PR 1 behaviour;
@@ -663,10 +675,17 @@ def choose_num_chains(
     snake construction as ``parallel.collectives.ring_order_for_axis``),
     split it into every K ≤ max_chains that divides the group size, and
     score the candidate sub-ring sets with ``program_latency`` of that
-    collective's planner (``algo`` selects the all-reduce schedule and
-    is ignored otherwise) — so K is chosen from modeled *bytes and
+    collective's planner — so K is chosen from modeled *bytes and
     cycles*. Returns the winning ``(k, sub_rings)``; K=1 is always a
     candidate, so the result never models worse than the single ring.
+
+    The all-reduce selection is JOINT over (K, algo, wire_dtype):
+    ``algo="auto"`` scores both :data:`ALL_REDUCE_ALGOS` and
+    ``wire_dtype="auto"`` scores the payload dtype against the int8
+    wire (whose fixed f32-scale sideband makes tiny payloads prefer
+    uncompressed frames). A concrete ``algo``/``wire_dtype`` pins that
+    dimension. Ties keep the earlier candidate: fewer chains, then
+    ``rs_ag``, then the uncompressed wire.
     """
     dsts = list(dict.fromkeys(dsts))
     if collective == "broadcast":
@@ -678,30 +697,64 @@ def choose_num_chains(
             max_chains=max_chains,
             cost_fn=lambda cs: multi_chain_latency(topo, src, cs, size_bytes, p),
         )
+        if detail:
+            return {
+                "num_chains": len(chains), "rings": chains, "algo": None,
+                "wire_dtype": None,
+                "latency_cc": multi_chain_latency(topo, src, chains, size_bytes, p),
+            }
         return len(chains), chains
     if collective not in RING_COLLECTIVES:
         raise ValueError(f"unknown collective {collective!r}")
-    if collective == "all_reduce" and algo not in ALL_REDUCE_ALGOS:
-        raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
+    if collective == "all_reduce":
+        algos = ALL_REDUCE_ALGOS if algo == "auto" else (algo,)
+        for a in algos:
+            if a not in ALL_REDUCE_ALGOS:
+                raise ValueError(
+                    f"unknown algo {a!r}; expected {ALL_REDUCE_ALGOS}"
+                )
+    else:
+        algos = (algo,)
+    if wire_dtype == "auto":
+        wire_opts: tuple[str | None, ...] = (None, "int8")
+    else:
+        wire_opts = (prg.normalize_wire_dtype(wire_dtype),)
+    if any(w is not None for w in wire_opts) and collective not in (
+        "all_reduce", "all_to_all"
+    ):
+        raise ValueError(
+            f"wire_dtype is not supported for collective={collective!r}"
+        )
 
     if not dsts:
+        if detail:
+            return {"num_chains": 1, "rings": [[int(src)]], "algo": None,
+                    "wire_dtype": None, "latency_cc": 0}
         return 1, [[int(src)]]
     ring = [int(src)] + [int(d) for d in SCHEDULERS[scheduler](topo, dsts, src)]
     n = len(ring)
-    best: tuple[int, int, list[list[int]]] | None = None
+    best: tuple | None = None
     for k in range(1, max_chains + 1):
         if n % k:
             continue
         size = n // k
         rings = [ring[i * size : (i + 1) * size] for i in range(k)]
-        program = plan_ring_collective(
-            collective, topo.num_nodes, rings, algo=algo
-        )
-        lat = program_latency(topo, src, program, size_bytes, p)
-        assert isinstance(lat, int)
-        if best is None or lat < best[0]:
-            best = (lat, k, rings)
+        for a in algos:
+            for w in wire_opts:
+                program = plan_ring_collective(
+                    collective, topo.num_nodes, rings, algo=a, wire_dtype=w
+                )
+                lat = program_latency(topo, src, program, size_bytes, p)
+                assert isinstance(lat, int)
+                if best is None or lat < best[0]:
+                    best = (lat, k, rings, a, w)
     assert best is not None  # k=1 always divides
+    if detail:
+        return {
+            "num_chains": best[1], "rings": best[2],
+            "algo": best[3] if collective == "all_reduce" else None,
+            "wire_dtype": best[4], "latency_cc": best[0],
+        }
     return best[1], best[2]
 
 
@@ -714,18 +767,23 @@ def plan_ring_collective(
     orders: Sequence[Sequence[int]],
     *,
     algo: str = "rs_ag",
+    wire_dtype: str | None = None,
 ) -> ChainProgram:
     """Planner dispatch for the ring collectives (the unified seam
     ``choose_num_chains`` and the benchmarks score through)."""
     rings = tuple(tuple(int(d) for d in c) for c in orders if len(c))
     if collective == "all_reduce":
-        return prg.plan_all_reduce(num_devices, rings, algo)
+        return prg.plan_all_reduce(num_devices, rings, algo, wire_dtype=wire_dtype)
     if collective == "reduce_scatter":
+        if wire_dtype is not None:
+            raise ValueError("wire_dtype is not supported for reduce_scatter")
         return prg.plan_reduce_scatter(num_devices, rings)
     if collective == "all_gather":
+        if wire_dtype is not None:
+            raise ValueError("wire_dtype is not supported for all_gather")
         return prg.plan_all_gather(num_devices, rings)
     if collective == "all_to_all":
-        return prg.plan_all_to_all(num_devices, rings)
+        return prg.plan_all_to_all(num_devices, rings, wire_dtype=wire_dtype)
     raise ValueError(f"unknown collective {collective!r}")
 
 

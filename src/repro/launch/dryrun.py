@@ -33,7 +33,7 @@ import traceback
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              collectives: str = "xla", remat: str = "dots",
              variant: str = "baseline", num_chains: int | str = 1,
-             ar_algo: str = "rs_ag") -> dict:
+             ar_algo: str = "rs_ag", compress_grads: bool = False) -> dict:
     import jax
 
     from repro import configs as C
@@ -46,6 +46,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "collectives": collectives, "remat": remat, "variant": variant,
         "num_chains": num_chains, "ar_algo": ar_algo,
+        "compress_grads": compress_grads,
     }
     if not ok:
         rec.update(status="skipped", reason=reason)
@@ -55,9 +56,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     t0 = time.time()
     cell = build_cell(arch, shape_name, mesh, collectives=collectives,
                       num_chains=num_chains, ar_algo=ar_algo,
-                      remat=remat, variant=variant)
+                      remat=remat, variant=variant,
+                      compress_grads=compress_grads)
     rec["num_chains"] = cell.num_chains  # effective K (VARIANTS resolved)
     rec["ar_algo"] = cell.ar_algo
+    rec["compress_grads"] = cell.compress_grads
     lowered = cell.lower()
     t1 = time.time()
     compiled = lowered.compile()
@@ -148,6 +151,9 @@ def main() -> None:
                    help="multi-ring all-reduce schedule: fused "
                         "reduce-scatter/all-gather (bandwidth-optimal "
                         "default) or full-payload rotation")
+    p.add_argument("--compress-grads", action="store_true", default=False,
+                   help="int8 wire for the DP gradient all-reduce "
+                        "(requires --collectives torrent)")
     p.add_argument("--out", default="experiments/dryrun")
     p.add_argument("--all", action="store_true")
     p.add_argument("--meshes", default="single,multi")
@@ -180,7 +186,7 @@ def main() -> None:
             args.arch, args.shape, args.mesh, out_dir,
             collectives=args.collectives, remat=args.remat,
             variant=args.variant, num_chains=args.num_chains,
-            ar_algo=args.ar_algo,
+            ar_algo=args.ar_algo, compress_grads=args.compress_grads,
         )
     except Exception:
         rec = {
@@ -221,6 +227,8 @@ def _cell_suffix(args) -> str:
         suffix += f"__k{args.num_chains}"
     if args.ar_algo != "rs_ag":
         suffix += f"__{args.ar_algo}"
+    if args.compress_grads:
+        suffix += "__int8"
     if args.variant != "baseline":
         suffix += f"__{args.variant}"
     if args.remat != "dots":
@@ -243,6 +251,8 @@ def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
         "--num-chains", str(args.num_chains), "--ar-algo", args.ar_algo,
         "--variant", args.variant, "--out", args.out,
     ]
+    if args.compress_grads:
+        cmd.append("--compress-grads")
     print("::", " ".join(cmd[3:]), flush=True)
     try:
         r = subprocess.run(cmd, timeout=args.timeout)

@@ -42,6 +42,7 @@ class Cell:
     donate_argnums: tuple[int, ...] = ()
     num_chains: int | str = 1  # effective K after VARIANTS resolution ("auto" = model-picked)
     ar_algo: str = "rs_ag"  # multi-ring all-reduce schedule (rs_ag | rotation)
+    compress_grads: bool = False  # int8 wire on the DP grad reduction
 
     def lower(self):
         jitted = jax.jit(
@@ -89,6 +90,8 @@ def make_train_step(
     collectives: str = "xla",
     num_chains: int | str = 1,
     ar_algo: str = "rs_ag",
+    compress_grads: bool = False,
+    error_feedback: bool = False,
     mesh=None,
     batch_specs=None,
     loss_chunks: int = 8,
@@ -110,7 +113,33 @@ def make_train_step(
     bandwidth-optimal default, or ``"rotation"``). Both are sweepable
     next to ``collectives=`` from the dry-run CLI (``--num-chains``,
     ``--ar-algo``) and via ``VARIANTS`` bundles.
+
+    ``compress_grads`` ships the DP gradient reduction int8-quantized
+    per wire hop (``torrent_grad_reduce(wire_dtype="int8")``) — it
+    composes with ``num_chains``/``ar_algo`` and requires
+    ``collectives="torrent"``. ``error_feedback`` (requires
+    ``compress_grads``) changes the signature to ``(params, opt_state,
+    ef_state, batch) -> (params, opt_state, ef_state, metrics)``,
+    carrying each DP rank's quantization residual across steps
+    (EF-SGD; state from ``parallel.collectives.ef_residual_init``).
     """
+    if compress_grads and collectives != "torrent":
+        raise ValueError(
+            'compress_grads=True requires collectives="torrent" '
+            "(the int8 wire is a property of the Chainwrite schedule; "
+            "the XLA backend has no compressed all-reduce)"
+        )
+    if error_feedback and not compress_grads:
+        raise ValueError(
+            "error_feedback=True requires compress_grads=True: with an "
+            "exact wire there is no quantization residual to feed back"
+        )
+    if error_feedback and microbatches > 1:
+        raise ValueError(
+            "error_feedback with microbatches > 1 is not supported: the "
+            "residual is per wire reduction, not per accumulation step"
+        )
+    wire_dtype = "int8" if compress_grads else None
 
     def grad_fn_local(params, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -124,8 +153,25 @@ def make_train_step(
             return torrent_grad_reduce(
                 grad_fn_local, mesh, batch_specs,
                 num_chains=num_chains, algo=ar_algo,
+                wire_dtype=wire_dtype,
             )(params, batch)
         return grad_fn_local(params, batch)
+
+    if error_feedback:
+        reduce_ef = torrent_grad_reduce(
+            grad_fn_local, mesh, batch_specs,
+            num_chains=num_chains, algo=ar_algo,
+            wire_dtype=wire_dtype, error_feedback=True,
+        )
+
+        def train_step_ef(params, opt_state, ef_state, batch):
+            grads, metrics, new_ef = reduce_ef(params, batch, ef_state)
+            new_params, new_opt, om = adamw.update(
+                opt_cfg, grads, opt_state, params
+            )
+            return new_params, new_opt, new_ef, {**metrics, **om}
+
+        return train_step_ef
 
     def train_step(params, opt_state, batch):
         if microbatches > 1:
@@ -208,6 +254,15 @@ VARIANTS: dict[str, dict] = {
     "moe-ep": {"moe_ep_dispatch": True},
     # moe-ep with the K=2 multi-chain all-to-all exchange.
     "moe-ep-k2": {"moe_ep_dispatch": True, "moe_ep_chains": 2},
+    # int8-compressed DP gradient reduction (wire_dtype="int8" through
+    # torrent_grad_reduce — per-hop quantized frames + f32 scale
+    # sideband, 4× fewer payload bytes); collectives="torrent" only.
+    "int8-ar": {"compress_grads": True},
+    # int8 wire on the K=2 multi-chain schedule — compression and
+    # multi-chain compose since the wire became an IR dimension.
+    "int8-ar-k2": {"compress_grads": True, "num_chains": 2},
+    # Torrent EP MoE with int8-quantized token dispatch/return.
+    "moe-ep-int8": {"moe_ep_dispatch": True, "moe_ep_int8_wire": True},
     # opt + query-sequence-sharded attention (heads ∤ TP archs).
     "opt-seq": {
         "attn_impl": "chunked", "mla_absorb": True,
@@ -225,6 +280,7 @@ def build_cell(
     collectives: str = "xla",
     num_chains: int | str = 1,
     ar_algo: str = "rs_ag",
+    compress_grads: bool = False,
     remat: str = "dots",
     smoke: bool = False,
     variant: str = "baseline",
@@ -247,6 +303,14 @@ def build_cell(
                 f"ar_algo={ar_algo!r} was passed explicitly"
             )
         ar_algo = variant_algo
+    variant_cg = overrides.pop("compress_grads", None)
+    if variant_cg is not None:
+        if compress_grads not in (False, variant_cg):
+            raise ValueError(
+                f"variant {variant!r} sets compress_grads={variant_cg} but "
+                f"compress_grads={compress_grads} was passed explicitly"
+            )
+        compress_grads = variant_cg
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = C.SHAPES[shape_name]
@@ -271,6 +335,7 @@ def build_cell(
         step = make_train_step(
             cfg, opt_cfg, remat=remat, collectives=collectives,
             num_chains=num_chains, ar_algo=ar_algo,
+            compress_grads=compress_grads,
             mesh=mesh, batch_specs=bspecs_clean,
         )
         return Cell(
@@ -285,6 +350,7 @@ def build_cell(
             donate_argnums=(0, 1),
             num_chains=num_chains,
             ar_algo=ar_algo,
+            compress_grads=compress_grads,
         )
 
     if shape.kind == "prefill":

@@ -32,6 +32,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import _named, _sanitize, make_train_step
 from repro.models import transformer as T
 from repro.optim import adamw
+from repro.parallel import ef_residual_init, ef_residual_specs
 from repro.parallel import sharding as shd
 from repro.runtime.failure import FaultInjector, resilient_loop
 from repro.runtime.monitor import StepMonitor
@@ -107,6 +108,18 @@ class Trainer:
                 lambda: adamw.init(params), out_shardings=self.opt_sh
             )()
         self.state = {"params": params, "opt": opt}
+        if tc.compress_grads:
+            # Error-feedback residual rides in the training state so it
+            # survives checkpoint/restart like the optimizer moments do.
+            dp_size = int(np.prod(
+                [mesh.shape[a] for a in mesh.axis_names if a != "model"]
+            ))
+            self.ef_sh = _named(mesh, ef_residual_specs(mesh, params_shape))
+            with jax.set_mesh(mesh):
+                self.state["ef"] = jax.jit(
+                    lambda: ef_residual_init(params_shape, dp_size),
+                    out_shardings=self.ef_sh,
+                )()
 
         bspecs = {"tokens": self.batch_spec, "labels": self.batch_spec}
         step = make_train_step(
@@ -114,6 +127,8 @@ class Trainer:
             self.opt_cfg,
             remat=tc.remat,
             collectives=tc.collectives,
+            compress_grads=tc.compress_grads,
+            error_feedback=tc.compress_grads,
             mesh=mesh,
             batch_specs={
                 k: _sanitize(v, mesh) for k, v in bspecs.items()
@@ -121,14 +136,25 @@ class Trainer:
             loss_chunks=tc.loss_chunks,
             microbatches=tc.microbatches,
         )
-        self.step_fn = jax.jit(
-            step,
-            in_shardings=(self.param_sh, self.opt_sh, {
-                "tokens": self.batch_sh, "labels": self.batch_sh
-            }),
-            out_shardings=(self.param_sh, self.opt_sh, None),
-            donate_argnums=(0, 1),
-        )
+        batch_sh = {"tokens": self.batch_sh, "labels": self.batch_sh}
+        if tc.compress_grads:
+            self.step_fn = jax.jit(
+                step,
+                in_shardings=(
+                    self.param_sh, self.opt_sh, self.ef_sh, batch_sh
+                ),
+                out_shardings=(
+                    self.param_sh, self.opt_sh, self.ef_sh, None
+                ),
+                donate_argnums=(0, 1, 2),
+            )
+        else:
+            self.step_fn = jax.jit(
+                step,
+                in_shardings=(self.param_sh, self.opt_sh, batch_sh),
+                out_shardings=(self.param_sh, self.opt_sh, None),
+                donate_argnums=(0, 1),
+            )
 
     def _device_batch(self, step: int) -> dict:
         host = self.source.batch(step)
@@ -148,9 +174,15 @@ class Trainer:
             self.monitor.start_step()
             batch = self._device_batch(i)
             with jax.set_mesh(self.mesh):
-                params, opt, metrics = self.step_fn(
-                    state["params"], state["opt"], batch
-                )
+                if "ef" in state:
+                    params, opt, ef, metrics = self.step_fn(
+                        state["params"], state["opt"], state["ef"], batch
+                    )
+                else:
+                    params, opt, metrics = self.step_fn(
+                        state["params"], state["opt"], batch
+                    )
+                    ef = None
             loss = float(metrics["loss"])
             ev = self.monitor.end_step(i)
             if ev is not None:
@@ -162,7 +194,10 @@ class Trainer:
                 log.info("step %5d loss %.4f lr %.2e", i, loss,
                          float(metrics["lr"]))
             losses.append(loss)
-            return {"params": params, "opt": opt}, {"loss": loss}
+            new_state = {"params": params, "opt": opt}
+            if ef is not None:
+                new_state["ef"] = ef
+            return new_state, {"loss": loss}
 
         t0 = time.time()
         state, result = resilient_loop(
@@ -199,6 +234,10 @@ def main(argv=None) -> dict:
     p.add_argument("--seq", type=int, default=128)
     p.add_argument("--lr", type=float, default=1e-3)
     p.add_argument("--collectives", choices=("xla", "torrent"), default="xla")
+    p.add_argument("--compress-grads", action="store_true", default=False,
+                   help="int8 wire for the DP gradient all-reduce with "
+                        "error-feedback residuals (requires --collectives "
+                        "torrent)")
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--remat", default="dots")
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -211,7 +250,8 @@ def main(argv=None) -> dict:
     tc = TrainConfig(
         arch=args.arch, smoke=args.smoke, steps=args.steps,
         global_batch=args.batch, seq_len=args.seq, peak_lr=args.lr,
-        collectives=args.collectives, tp=args.tp, remat=args.remat,
+        collectives=args.collectives, compress_grads=args.compress_grads,
+        tp=args.tp, remat=args.remat,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         fail_at=tuple(int(s) for s in args.fail_at.split(",") if s),
     )

@@ -111,6 +111,10 @@ class ModelConfig:
     moe_ep_dispatch: bool = False
     # K sub-rings for the EP dispatch exchange (multi-chain all-to-all).
     moe_ep_chains: int = 1
+    # ship the EP dispatch/return token payloads int8-quantized per hop
+    # (wire_dtype="int8" through torrent_all_to_all); expert-id
+    # metadata always travels exact.
+    moe_ep_int8_wire: bool = False
 
     # --- derived -------------------------------------------------------
     @property

@@ -246,6 +246,7 @@ def moe_apply_ep(
     *,
     num_chains: int = 1,
     scheduler: str = "tsp",
+    wire_dtype: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Expert-parallel MoE — must run INSIDE ``shard_map`` over
     ``axis_name``: ``x`` is this shard's local ``(B_loc, S, d)`` tokens
@@ -260,6 +261,11 @@ def moe_apply_ep(
     standard drop policy — per (source, destination) pair on the wire
     (``C_pair``) and per local expert at the receiver (``C_loc``) —
     both with ``cfg.capacity_factor`` headroom.
+
+    ``wire_dtype="int8"`` ships the token payloads of BOTH exchanges
+    (dispatch and return) quantized per hop — 4× fewer activation bytes
+    on the wire; the ``send_e`` expert-id exchange is integer metadata
+    and always travels exact.
 
     The aux loss is the *global* load-balance loss: the per-shard
     ``f_i``/``P_i`` statistics are ``pmean``-ed over the axis before
@@ -310,7 +316,8 @@ def moe_apply_ep(
 
     # -- the wire: tokens (and their expert ids) to the expert owners --
     recv = torrent_all_to_all(
-        send, axis_name, num_chains=num_chains, scheduler=scheduler)
+        send, axis_name, num_chains=num_chains, scheduler=scheduler,
+        wire_dtype=wire_dtype)
     recv_e = torrent_all_to_all(
         send_e, axis_name, num_chains=num_chains, scheduler=scheduler)
 
@@ -347,7 +354,8 @@ def moe_apply_ep(
     back = out_buf.at[le_s, pos2].get(
         mode="fill", fill_value=0).reshape(n, C_pair, d)
     ret = torrent_all_to_all(
-        back, axis_name, num_chains=num_chains, scheduler=scheduler)
+        back, axis_name, num_chains=num_chains, scheduler=scheduler,
+        wire_dtype=wire_dtype)
     gathered = ret.at[dest, pos].get(mode="fill", fill_value=0)  # (T*k, d)
     weighted = gathered.astype(jnp.float32) * flat_p[:, None]
     out = weighted.reshape(T, k, d).sum(1)
@@ -395,6 +403,8 @@ def _moe_apply_ep_auto(
         k = cfg.moe_ep_chains
         return k if k > 1 and group % k == 0 else 1
 
+    ep_wire = "int8" if cfg.moe_ep_int8_wire else None
+
     if all(a in manual for a in dp):
         group = 1
         for a in dp:
@@ -402,7 +412,8 @@ def _moe_apply_ep_auto(
         if cfg.num_experts % group:  # documented graceful fallback
             return fallback()
         return moe_apply_ep(
-            params, x, cfg, axis, num_chains=ep_chains(group))
+            params, x, cfg, axis, num_chains=ep_chains(group),
+            wire_dtype=ep_wire)
     if any(a in manual for a in dp):
         return fallback()  # partially manual: no coherent EP axis
 
@@ -416,7 +427,9 @@ def _moe_apply_ep_auto(
         return fallback()
 
     def inner(p, xs):
-        return moe_apply_ep(p, xs, cfg, axis, num_chains=ep_chains(dp_size))
+        return moe_apply_ep(
+            p, xs, cfg, axis, num_chains=ep_chains(dp_size),
+            wire_dtype=ep_wire)
 
     xspec = P(dp if len(dp) > 1 else dp[0], None, None)
     return jax.shard_map(

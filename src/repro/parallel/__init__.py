@@ -2,7 +2,12 @@
 (DP/TP/EP/ZeRO-1/SP), and the collectives backend seam
 ("xla" vs "torrent" Chainwrite rings)."""
 
-from .collectives import ring_order_for_axis, torrent_grad_reduce
+from .collectives import (
+    ef_residual_init,
+    ef_residual_specs,
+    ring_order_for_axis,
+    torrent_grad_reduce,
+)
 from .hints import BATCH, SEQ, TP, maybe_shard, resolve_spec
 from .sharding import (
     batch_pspecs,

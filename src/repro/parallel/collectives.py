@@ -26,9 +26,17 @@ stays GSPMD-managed. Options mirror the paper's knobs:
   rotation — ≈ (2·(S-1)+(K-1))/S payloads of wire per device) or
   ``"rotation"`` (PR 1's full-payload rotations — fewer steps,
   (S+K-2) payloads of wire; only wins for tiny payloads);
-* ``compress`` — int8 error-feedback wire format (4× fewer bytes).
-  ``compress`` keeps the single-ring schedule (the int8 wire format is
-  defined per ring hop), so ``num_chains`` is ignored when set.
+* ``wire_dtype`` — lossy wire compression as an IR dimension:
+  ``wire_dtype="int8"`` plans the SAME multi-chain schedules with every
+  hop shipped as an int8 frame + f32 scale (4× fewer payload bytes;
+  per-hop quantize → dequantize → f32 accumulate in the executor), so
+  compression composes with ``num_chains``, ``algo``, ``hierarchical``
+  and the recovery pricing instead of overriding them;
+* ``error_feedback`` — EF-SGD (Seide et al.): each DP rank keeps the
+  local residual of the lossy wire and adds it back into the next
+  step's gradient before compression, restoring convergence. Requires
+  a lossy ``wire_dtype``; state rides as an explicit residual pytree
+  (``ef_residual_init`` / ``ef_residual_specs``).
 
 Since the ChainProgram refactor the OTHER ring collectives are exposed
 through the same seam: ``torrent_all_to_all`` (the MoE expert-dispatch
@@ -58,8 +66,9 @@ from repro.core.scheduling import (
 )
 from repro.core.simulator import SourceFailedError
 from repro.core.topology import MeshTopology
+from repro.core import program as prg
 from repro.parallel import hints
-from repro.runtime.compression import compressed_chain_all_reduce
+from repro.runtime.compression import dequantize, quantize
 
 PyTree = Any
 
@@ -204,18 +213,21 @@ def _axis_orders(
 
 
 def torrent_all_to_all(
-    x, axis_name, *, num_chains: int = 1, scheduler: str = "tsp"
+    x, axis_name, *, num_chains: int = 1, scheduler: str = "tsp",
+    wire_dtype: str | None = None,
 ):
     """Scheduled-ring all-to-all over a manual axis (the MoE
     expert-dispatch exchange): ``x`` has leading dim = axis size, chunk
     ``x[j]`` is destined to device ``j``; returns ``out[s]`` = the
     chunk device ``s`` sent here. ``num_chains > 1`` uses the K-ring
     schedule (same wire bytes — a chunk train cannot shrink — but
-    ring-local/position-paired hops). Must run inside ``shard_map``."""
+    ring-local/position-paired hops). ``wire_dtype="int8"`` ships every
+    hop of the chunk train quantized (int8 frame + f32 scale). Must run
+    inside ``shard_map``."""
     orders = _axis_orders(axis_name, num_chains, scheduler)
     if len(orders) == 1:
-        return cw.chain_all_to_all(x, axis_name, orders[0])
-    return cw.multi_chain_all_to_all(x, axis_name, orders)
+        return cw.chain_all_to_all(x, axis_name, orders[0], wire_dtype=wire_dtype)
+    return cw.multi_chain_all_to_all(x, axis_name, orders, wire_dtype=wire_dtype)
 
 
 def torrent_reduce_scatter(
@@ -249,6 +261,7 @@ def auto_ring_chains(
     size_bytes: int,
     scheduler: str = "tsp",
     algo: str = "rs_ag",
+    wire_dtype: str | None = None,
     max_chains: int = 4,
 ) -> tuple[int, tuple[tuple[int, ...], ...]]:
     """Model-driven (K, sub_rings) for one DP reduction of
@@ -257,6 +270,9 @@ def auto_ring_chains(
     ``core.simulator.choose_num_chains(collective="all_reduce")`` on
     the 1-D ring topology (the same snake construction as
     ``ring_order_for_axis``, so intra-ring hops stay 1 physical link).
+    ``wire_dtype`` prices the candidate schedules with the compressed
+    frame bytes (int8 payload + f32 scale sideband), so the chosen K
+    matches what actually goes over the wire.
     Cached: the choice is static per (shape, axis) and runs at trace
     time for every gradient leaf.
     """
@@ -266,9 +282,28 @@ def auto_ring_chains(
     k, rings = sim.choose_num_chains(
         topo, 0, list(range(1, axis_size)), int(size_bytes),
         scheduler=scheduler, max_chains=max_chains,
-        collective="all_reduce", algo=algo,
+        collective="all_reduce", algo=algo, wire_dtype=wire_dtype,
     )
     return k, tuple(tuple(r) for r in rings)
+
+
+def ef_residual_init(params: PyTree, dp_size: int) -> PyTree:
+    """Zero error-feedback residual state for
+    ``torrent_grad_reduce(error_feedback=True)``: one f32 residual per
+    gradient leaf PER DP RANK, carried as a global ``(dp_size, *shape)``
+    array whose leading dim is sharded over the DP axes
+    (:func:`ef_residual_specs`)."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((int(dp_size),) + tuple(p.shape), jnp.float32),
+        params,
+    )
+
+
+def ef_residual_specs(mesh, params: PyTree) -> PyTree:
+    """PartitionSpecs for :func:`ef_residual_init` state: dim 0 manual
+    over the DP axes (each rank owns its own residual row)."""
+    dp = _dp_axes(mesh)
+    return jax.tree.map(lambda _: P(dp), params)
 
 
 def torrent_grad_reduce(
@@ -280,7 +315,8 @@ def torrent_grad_reduce(
     hierarchical: bool = True,
     num_chains: int | str = 1,
     algo: str = "rs_ag",
-    compress: bool = False,
+    wire_dtype: str | None = None,
+    error_feedback: bool = False,
 ) -> Callable[..., tuple[PyTree, PyTree]]:
     """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` (grads LOCAL
     to the batch shard) so grads come back chain-all-reduced over the DP
@@ -290,42 +326,70 @@ def torrent_grad_reduce(
     schedule (K concurrent sub-rings; see module docstring). It must
     divide the group size being reduced. ``num_chains="auto"`` picks K
     per gradient leaf from the ``all_reduce_latency`` model for the
-    chosen ``algo`` (modeled bytes and cycles). ``compress`` overrides
-    either back to the single ring."""
+    chosen ``algo`` and ``wire_dtype`` (modeled bytes and cycles).
+
+    ``wire_dtype="int8"`` runs the SAME schedules with each hop shipped
+    quantized — it composes with ``num_chains``, ``algo`` and
+    ``hierarchical`` (a 2-axis hierarchical reduction quantizes once
+    per wire hop, never a second whole-payload pass on the outer ring).
+
+    ``error_feedback=True`` (requires a lossy ``wire_dtype``) changes
+    the wrapped signature to ``wrapped(params, batch, residual) ->
+    (grads, metrics, new_residual)``: each DP rank adds its carried
+    residual into the local gradient before the compressed reduction
+    and banks the new local quantization error — the Seide-style local
+    proxy for the distributed wire error (the per-hop errors inside the
+    ring are not recoverable per rank; the first-quantization residual
+    is the standard EF-SGD approximation). Residual state comes from
+    :func:`ef_residual_init` / :func:`ef_residual_specs` and should be
+    checkpointed alongside the optimizer state."""
     if algo not in cw.ALL_REDUCE_ALGOS:
         raise ValueError(
             f"unknown algo {algo!r}; expected {cw.ALL_REDUCE_ALGOS}"
         )
     if num_chains != "auto" and not isinstance(num_chains, int):
         raise ValueError(f'num_chains must be an int or "auto", got {num_chains!r}')
+    wire_dtype = prg.normalize_wire_dtype(wire_dtype)
+    if error_feedback and wire_dtype is None:
+        raise ValueError(
+            "error_feedback=True requires a lossy wire_dtype "
+            '(e.g. wire_dtype="int8"): with an exact wire there is no '
+            "quantization residual to feed back"
+        )
     dp = _dp_axes(mesh)
 
     dp_size = 1
     for a in dp:
         dp_size *= mesh.shape[a]
 
-    def reduce_one(g):
+    def reduce_one(g, r=None):
         flat = g.reshape(-1)
+        new_r = None
+        if r is not None:
+            flat = flat.astype(jnp.float32) + r.reshape(-1)
+            q, s = quantize(flat)
+            new_r = (flat - dequantize(q, s)).reshape(g.shape)
 
         def ar(x, axis):
             size = 1
             for a in (axis if isinstance(axis, tuple) else (axis,)):
                 size *= mesh.shape[a]
             order = ring_order_for_axis(size, scheduler)
-            if compress:
-                return compressed_chain_all_reduce(x, axis, order)
             if num_chains == "auto":
                 k, rings = auto_ring_chains(
-                    size, x.size * x.dtype.itemsize, scheduler, algo
+                    size, x.size * x.dtype.itemsize, scheduler, algo,
+                    wire_dtype,
                 )
                 if k > 1:
-                    return cw.multi_chain_all_reduce(x, axis, rings, algo=algo)
+                    return cw.multi_chain_all_reduce(
+                        x, axis, rings, algo=algo, wire_dtype=wire_dtype
+                    )
             elif num_chains > 1 and size > num_chains:
                 return cw.multi_chain_all_reduce(
                     x, axis, sub_ring_orders(size, num_chains, scheduler),
-                    algo=algo,
+                    algo=algo, wire_dtype=wire_dtype,
                 )
-            return cw.chain_all_reduce(x, axis, order)
+            return cw.chain_all_reduce(x, axis, order, wire_dtype=wire_dtype)
 
         if hierarchical and len(dp) == 2:
             flat = ar(flat, dp[1])  # within pod ("data")
@@ -335,30 +399,61 @@ def torrent_grad_reduce(
         # shards hold grads of their LOCAL mean loss; the chain sums them,
         # so divide by the DP group size to recover the global-mean grad
         # (drop-in parity with the "xla" backend).
-        return (flat / dp_size).reshape(g.shape)
+        reduced = (flat / dp_size).reshape(g.shape).astype(g.dtype)
+        return reduced if r is None else (reduced, new_r)
 
-    def wrapped(params, batch):
-        def inner(params, batch):
+    def _avg_metrics(metrics):
+        # metrics are per-shard means -> average over the DP group
+        return jax.tree.map(
+            lambda m: jax.lax.psum(m, dp) / dp_size, metrics
+        )
+
+    if not error_feedback:
+
+        def wrapped(params, batch):
+            def inner(params, batch):
+                grads, metrics = grad_fn(params, batch)
+                grads = jax.tree.map(reduce_one, grads)
+                return grads, _avg_metrics(metrics)
+
+            in_specs = (jax.tree.map(lambda _: P(), params), batch_specs)
+            out_specs = (jax.tree.map(lambda _: P(), params), P())
+            return jax.shard_map(
+                inner,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                axis_names=set(dp),
+                check_vma=False,
+            )(params, batch)
+
+        return wrapped
+
+    def wrapped_ef(params, batch, residual):
+        def inner(params, batch, residual):
             grads, metrics = grad_fn(params, batch)
-            grads = jax.tree.map(reduce_one, grads)
-            # metrics are per-shard means -> average over the DP group
-            dp_size = 1
-            for a in dp:
-                dp_size *= mesh.shape[a]
-            metrics = jax.tree.map(
-                lambda m: jax.lax.psum(m, dp) / dp_size, metrics
+            # each rank's residual row: (1, *shape) -> (*shape)
+            res = jax.tree.map(lambda r: r[0], residual)
+            pairs = jax.tree.map(reduce_one, grads, res)
+            grads = jax.tree.map(
+                lambda pair: pair[0], pairs,
+                is_leaf=lambda x: isinstance(x, tuple),
             )
-            return grads, metrics
+            new_res = jax.tree.map(
+                lambda pair: pair[1][None], pairs,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            return grads, _avg_metrics(metrics), new_res
 
-        in_specs = (jax.tree.map(lambda _: P(), params), batch_specs)
-        out_specs = (jax.tree.map(lambda _: P(), params), P())
+        param_specs = jax.tree.map(lambda _: P(), params)
+        res_specs = ef_residual_specs(mesh, params)
         return jax.shard_map(
             inner,
             mesh=mesh,
-            in_specs=in_specs,
-            out_specs=out_specs,
+            in_specs=(param_specs, batch_specs, res_specs),
+            out_specs=(param_specs, P(), res_specs),
             axis_names=set(dp),
             check_vma=False,
-        )(params, batch)
+        )(params, batch, residual)
 
-    return wrapped
+    return wrapped_ef

@@ -1,4 +1,4 @@
-from .compression import ErrorFeedback, compressed_chain_all_reduce, dequantize, quantize
+from .compression import ErrorFeedback, dequantize, quantize
 from .elastic import (
     choose_mesh_shape,
     make_elastic_mesh,

@@ -1,16 +1,43 @@
-"""Gradient compression: int8 quantization with error feedback, and a
-compressed Torrent ring all-reduce.
+"""Wire-compression numerics: symmetric int8 quantization + error
+feedback.
 
 ``quantize``/``dequantize`` implement symmetric per-tensor int8 with a
-f32 scale. :class:`ErrorFeedback` keeps the quantization residual and
-adds it back before the next step's compression (Seide et al. / EF-SGD),
-which restores convergence despite the lossy wire format.
+f32 scale. They are the ONE definition of the lossy wire format: the
+ChainProgram executor (``core.chainwrite``) applies them per hop when a
+program carries ``wire_dtype="int8"`` (quantize → ship int8 frame + f32
+scale → dequantize → accumulate in f32), and the numpy oracle
+(``core.chainwrite_ref``) replays the identical f32 arithmetic so the
+SPMD results stay bit-exact including every per-hop rounding.
 
-``compressed_chain_all_reduce`` runs the Torrent ring reduce-scatter
-with int8 payloads: each hop dequantizes, accumulates in f32, and
-re-quantizes for the next hop — wire bytes drop 4× vs f32 at the cost
-of per-hop rounding (bounded by the per-hop scale). The final
-all-gather phase also ships int8.
+Two deliberate choices make the format reproducible under compiler
+rewrites (bit-exact SPMD-vs-oracle is the repo's testing contract):
+
+* The max-abs is divided by 128 — a power of two — not 127. XLA
+  rewrites division by a constant into multiplication by its rounded
+  reciprocal; 1/128 is exact in f32 where 1/127 is not, so the rewrite
+  (and any FMA with the ``+ 1e-12``) is value-neutral.
+* The scale's mantissa is truncated to 17 significant bits before use.
+  With |q| <= 127 every dequantize product ``q * scale`` then fits in
+  f32's 24-bit significand EXACTLY, so a compiler that contracts the
+  dequantize multiply with the downstream accumulate into an FMA
+  (XLA:CPU does, and ``optimization_barrier`` does not survive to
+  codegen) produces bitwise the same value as separate mul-then-add.
+  The truncation costs <= 2^-17 relative scale error, noise next to
+  int8's 2^-8 quantization step.
+
+:class:`ErrorFeedback` keeps the quantization residual and adds it back
+before the next step's compression (Seide et al. / EF-SGD), restoring
+convergence despite the lossy wire. ``parallel.collectives`` wires it
+into ``torrent_grad_reduce(error_feedback=True)``.
+
+The hand-written ``compressed_chain_all_reduce`` that used to live here
+is gone: compression is now a first-class IR dimension, so the int8
+ring is simply ``plan_all_reduce(wire_dtype="int8")`` through the
+ordinary executor — composing with multi-chain K, ``algo``, and the
+recovery/latency pricing for free.
+
+This module is numerics-only (no collectives), so the core executor can
+import it without cycles.
 """
 
 from __future__ import annotations
@@ -21,15 +48,21 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.chainwrite import chain_edges, _axis_size, _axis_index, _scan
-
 PyTree = Any
+
+# Keep 17 significant bits of the f32 scale (mask the low 7 explicit
+# mantissa bits) so q * scale is exact in f32 — see module docstring.
+_SCALE_MANTISSA_MASK = 0xFFFFFF80
 
 
 def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    scale = jnp.max(jnp.abs(x)) / 128.0 + 1e-12
+    bits = lax.bitcast_convert_type(scale.astype(jnp.float32), jnp.uint32)
+    scale = lax.bitcast_convert_type(
+        bits & jnp.uint32(_SCALE_MANTISSA_MASK), jnp.float32
+    )
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    return q, scale
 
 
 def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
@@ -66,58 +99,3 @@ class ErrorFeedback:
             qtree,
             is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
         )
-
-
-def compressed_chain_all_reduce(
-    x: jax.Array,
-    axis_name,
-    order=None,
-) -> jax.Array:
-    """Ring all-reduce with int8 wire format (call inside shard_map).
-
-    Mean-free sum semantics identical to chain_all_reduce up to int8
-    rounding; pair with :class:`ErrorFeedback` at the caller.
-    """
-    L = _axis_size(axis_name)
-    order = tuple(range(L)) if order is None else tuple(int(o) for o in order)
-    idx = _axis_index(axis_name)
-    order_arr = jnp.asarray(order)
-    pos = jnp.argmax(order_arr == idx)
-    edges = chain_edges(order, wrap=True)
-
-    lead = x.shape[0]
-    pad = (-lead) % L
-    xp = jnp.pad(x.astype(jnp.float32), [(0, pad)] + [(0, 0)] * (x.ndim - 1))
-    chunks = xp.reshape((L, xp.shape[0] // L) + x.shape[1:])
-
-    # ---- reduce-scatter with per-hop int8 requantization -------------
-    start_chunk = order_arr[(pos - 1) % L]
-    acc = lax.dynamic_index_in_dim(chunks, start_chunk, 0, keepdims=False)
-
-    def rs_step(acc, s):
-        q, scale = quantize(acc)
-        q = lax.ppermute(q, axis_name, edges)
-        scale = lax.ppermute(scale, axis_name, edges)
-        acc_in = dequantize(q, scale)
-        j = order_arr[(pos - s - 1) % L]
-        acc = acc_in + lax.dynamic_index_in_dim(chunks, j, 0, keepdims=False)
-        return acc, None
-
-    acc, _ = _scan(rs_step, acc, jnp.arange(1, L))
-
-    # ---- all-gather (int8 wire) ---------------------------------------
-    own_q, own_s = quantize(acc)
-    out = jnp.zeros((L,) + acc.shape, jnp.float32)
-    out = lax.dynamic_update_index_in_dim(out, dequantize(own_q, own_s), idx, 0)
-
-    def ag_step(carry, s):
-        q, scale, out = carry
-        q = lax.ppermute(q, axis_name, edges)
-        scale = lax.ppermute(scale, axis_name, edges)
-        src = order_arr[(pos - s) % L]
-        out = lax.dynamic_update_index_in_dim(out, dequantize(q, scale), src, 0)
-        return (q, scale, out), None
-
-    (_, _, out), _ = _scan(ag_step, (own_q, own_s, out), jnp.arange(1, L))
-    full = out.reshape((L * acc.shape[0],) + x.shape[1:])
-    return (full[:lead] if pad else full).astype(x.dtype)

@@ -519,6 +519,24 @@ def test_moe_ep_dispatch_end_to_end(run_multidevice):
             lambda p, xs: M.moe_apply(p, xs, cfg_ep))(params, x)
     np.testing.assert_array_equal(np.asarray(out_auto), outs[1])
 
+    # int8 token payloads on the dispatch/return exchanges
+    # (wire_dtype="int8"): lossy but close to the dense reference, and
+    # the expert-id metadata stays exact (routing unchanged)
+    def ep_int8(p, xs):
+        return M.moe_apply_ep(p, xs, cfg, 'data', wire_dtype='int8')
+    out8, aux8 = jax.jit(jax.shard_map(
+        ep_int8, mesh=mesh, in_specs=(P(), P('data')),
+        out_specs=(P('data'), P()), check_vma=False))(params, x)
+    scale = np.abs(want).max()
+    assert np.abs(np.asarray(out8) - want).max() / scale < 0.1
+    np.testing.assert_allclose(float(aux8), float(flat_aux),
+                               rtol=1e-4, atol=1e-6)
+    cfg_ep8 = dataclasses.replace(cfg_ep, moe_ep_int8_wire=True)
+    with jax.set_mesh(mesh):
+        out_auto8, _ = jax.jit(
+            lambda p, xs: M.moe_apply(p, xs, cfg_ep8))(params, x)
+    np.testing.assert_array_equal(np.asarray(out_auto8), np.asarray(out8))
+
     # gradients flow through the dispatch/combine exchanges
     def loss(p, xs):
         def inner(pp, xx):

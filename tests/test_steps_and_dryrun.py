@@ -140,7 +140,7 @@ def test_dryrun_cell_suffix_and_num_chains_parse():
 
     def ns(**kw):
         base = dict(collectives="xla", num_chains=1, ar_algo="rs_ag",
-                    variant="baseline", remat="dots")
+                    variant="baseline", remat="dots", compress_grads=False)
         base.update(kw)
         return argparse.Namespace(**base)
 
@@ -149,6 +149,9 @@ def test_dryrun_cell_suffix_and_num_chains_parse():
     assert _cell_suffix(
         ns(collectives="torrent", num_chains="auto", ar_algo="rotation")
     ) == "__torrent__kauto__rotation"
+    assert _cell_suffix(
+        ns(collectives="torrent", compress_grads=True)
+    ) == "__torrent__int8"
 
 
 def test_applicability_matrix():

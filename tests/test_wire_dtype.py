@@ -1,0 +1,393 @@
+"""Wire dtype as a first-class IR dimension.
+
+Device-free: golden int8 schedules (4x fewer payload bytes through
+``program_wire_bytes``), validation errors, the joint (K, algo,
+wire_dtype) argmin, and quantize edge cases. Subprocess (8 virtual
+devices): executor-vs-oracle bit-exactness including every per-hop
+quantization, hierarchical 2-axis single-quantization pinning,
+compress x num_chains composition, and the compress_grads HLO knob.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import program as prg
+from repro.core.simulator import choose_num_chains, program_latency
+from repro.core.topology import MeshTopology
+
+L = 8
+PAYLOAD = (1 << 18) * 4  # 256k f32 = 1 MiB
+RINGS = {
+    1: ((0, 1, 2, 3, 4, 5, 6, 7),),
+    2: ((0, 1, 2, 3), (4, 5, 6, 7)),
+    4: ((0, 1), (2, 3), (4, 5), (6, 7)),
+}
+# steps * (shard_elems + 4 scale bytes) per device — see Step.bytes
+INT8_BYTES = {1: 458808, 2: 458780, 4: 655380}
+
+
+# -- golden schedules (no devices) --------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_int8_all_reduce_golden_bytes(k):
+    prog = prg.plan_all_reduce(L, RINGS[k], "rs_ag", wire_dtype="int8")
+    prog.validate()
+    assert prog.wire_dtype == "int8"
+    got = prg.program_wire_bytes(prog, PAYLOAD)
+    assert got == INT8_BYTES[k], (k, got)
+    f32 = prg.program_wire_bytes(
+        prg.plan_all_reduce(L, RINGS[k], "rs_ag"), PAYLOAD
+    )
+    # int8 frames + one f32 scale per hop: ~4x below the f32 twin
+    assert got < f32 / 3.5, (k, got, f32)
+    # pricing follows the bytes: the int8 program models strictly faster
+    topo = MeshTopology(L, 1)
+    assert program_latency(topo, 0, prog, PAYLOAD) < program_latency(
+        topo, 0, prg.plan_all_reduce(L, RINGS[k], "rs_ag"), PAYLOAD
+    )
+
+
+def test_int8_all_to_all_golden_bytes():
+    prog = prg.plan_all_to_all(L, RINGS[2], wire_dtype="int8")
+    prog.validate()
+    f32 = prg.program_wire_bytes(prg.plan_all_to_all(L, RINGS[2]), PAYLOAD)
+    got = prg.program_wire_bytes(prog, PAYLOAD)
+    assert got < f32 / 3.5, (got, f32)
+
+
+def test_wire_dtype_validation():
+    assert prg.normalize_wire_dtype(None) is None
+    assert prg.normalize_wire_dtype("int8") == "int8"
+    with pytest.raises(ValueError, match="wire dtype"):
+        prg.normalize_wire_dtype("fp4")
+    with pytest.raises(ValueError):
+        prg.plan_all_reduce(L, RINGS[1], "rs_ag", wire_dtype="bogus")
+
+
+def test_choose_num_chains_joint_argmin():
+    """The K x algo x wire_dtype argmin: big payloads take the int8
+    wire, tiny payloads keep the exact wire (the fixed f32-scale
+    sideband dominates) and fall back to rotation."""
+    topo = MeshTopology(L, 1)
+    big = choose_num_chains(
+        topo, 0, list(range(1, L)), 1 << 20,
+        collective="all_reduce", algo="auto", wire_dtype="auto", detail=True,
+    )
+    assert (big["num_chains"], big["algo"], big["wire_dtype"]) == (
+        2, "rs_ag", "int8"
+    ), big
+    tiny = choose_num_chains(
+        topo, 0, list(range(1, L)), 4,
+        collective="all_reduce", algo="auto", wire_dtype="auto", detail=True,
+    )
+    assert (tiny["num_chains"], tiny["algo"], tiny["wire_dtype"]) == (
+        4, "rotation", None
+    ), tiny
+    # the default 2-tuple return shape is preserved
+    k, rings = choose_num_chains(
+        topo, 0, list(range(1, L)), 1 << 20,
+        collective="all_reduce", algo="auto", wire_dtype="auto",
+    )
+    assert k == 2 and len(rings) == 2
+
+
+# -- quantize numerics (1 device) ---------------------------------------
+
+
+def test_quantize_edge_cases():
+    import jax.numpy as jnp
+
+    from repro.runtime.compression import dequantize, quantize
+
+    # all-zero: the +1e-12 floor keeps the scale finite and q at zero
+    q, s = quantize(jnp.zeros((16,), jnp.float32))
+    assert float(s) > 0 and np.isfinite(float(s))
+    np.testing.assert_array_equal(np.asarray(q), np.zeros(16, np.int8))
+    np.testing.assert_array_equal(
+        np.asarray(dequantize(q, s)), np.zeros(16, np.float32)
+    )
+
+    # inf / NaN inputs poison the scale (detectably non-finite) instead
+    # of silently shipping garbage int8 frames
+    for bad in (np.inf, np.nan):
+        x = jnp.asarray([1.0, bad, -2.0], jnp.float32)
+        _, s = quantize(x)
+        assert not np.isfinite(float(s)), (bad, float(s))
+
+    # non-divisible (padded-frame) payloads round-trip within 1.5 steps
+    # (the max-abs element rounds to 128 and clips to 127, so its error
+    # is a full scale rather than the half-step of interior values)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(13,)).astype(np.float32))
+    q, s = quantize(x)
+    err = np.abs(np.asarray(dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= 1.5 * float(s)
+
+
+def test_quantize_matches_numpy_oracle_bitwise():
+    """The jitted wire format equals the numpy oracle twin bit-for-bit
+    — the property every executor-vs-oracle pin below rests on."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.chainwrite_ref import _quantize_ref
+    from repro.runtime.compression import quantize
+
+    jq = jax.jit(quantize)
+    rng = np.random.default_rng(0)
+    for i in range(20):
+        scale_pow = float(10.0 ** rng.integers(-6, 6))
+        x = (rng.normal(size=(257,)) * scale_pow).astype(np.float32)
+        q, s = jq(jnp.asarray(x))
+        qr, sr = _quantize_ref(x)
+        np.testing.assert_array_equal(np.asarray(q), qr, err_msg=str(i))
+        assert np.float32(s) == sr, (i, float(s), sr)
+
+
+# -- host-side knob validation ------------------------------------------
+
+
+def test_grad_reduce_knob_validation():
+    from repro.parallel.collectives import torrent_grad_reduce
+
+    with pytest.raises(ValueError, match="error_feedback"):
+        torrent_grad_reduce(
+            lambda p, b: (p, {}), None, None, error_feedback=True
+        )
+    with pytest.raises(ValueError, match="wire dtype"):
+        torrent_grad_reduce(lambda p, b: (p, {}), None, None, wire_dtype="fp4")
+    with pytest.raises(ValueError, match="algo"):
+        torrent_grad_reduce(lambda p, b: (p, {}), None, None, algo="tree")
+
+
+def test_train_step_knob_validation():
+    import dataclasses
+
+    from repro import configs as C
+    from repro.launch.steps import make_train_step
+    from repro.optim import adamw
+
+    cfg = dataclasses.replace(
+        C.get_smoke_config("yi-6b"), num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=32, head_dim=8,
+    )
+    opt = adamw.OptConfig()
+    with pytest.raises(ValueError, match="torrent"):
+        make_train_step(cfg, opt, collectives="xla", compress_grads=True)
+    with pytest.raises(ValueError, match="compress_grads"):
+        make_train_step(cfg, opt, collectives="torrent", error_feedback=True)
+    with pytest.raises(ValueError, match="microbatches"):
+        make_train_step(
+            cfg, opt, collectives="torrent", compress_grads=True,
+            error_feedback=True, microbatches=2,
+        )
+
+
+# -- SPMD executor vs numpy oracle (subprocess) -------------------------
+
+
+def test_int8_executor_bit_exact_vs_oracle(run_multidevice):
+    """Every per-hop quantization in the SPMD executor is replayed
+    bit-exactly by the numpy oracle — for K in {1,2,4} x both all-reduce
+    algos, non-divisible leads, all-to-all, and bf16 round-trip."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+
+    mesh = jax.make_mesh((8,), ('x',), axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    RINGS = {1: ((0,1,2,3,4,5,6,7),),
+             2: ((0,1,2,3),(4,5,6,7)),
+             4: ((0,1),(2,3),(4,5),(6,7))}
+
+    def run(fn, xs):
+        sm = jax.shard_map(fn, mesh=mesh, in_specs=P('x'), out_specs=P('x'))
+        return np.asarray(jax.jit(sm)(xs))
+
+    for lead in (64, 13):
+        xs = jnp.asarray(rng.normal(size=(8, lead)).astype(np.float32))
+        for k, orders in RINGS.items():
+            for algo in ('rs_ag', 'rotation'):
+                got = run(lambda v: cw.multi_chain_all_reduce(
+                    v[0], 'x', orders, algo=algo, wire_dtype='int8')[None], xs)
+                want = ref.multi_all_reduce_ref(
+                    np.asarray(xs), orders, algo=algo, wire_dtype='int8')
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f'lead={lead} K={k} {algo}')
+
+    # all-to-all: per-hop quantized chunk train, K=2
+    xs = jnp.asarray(rng.normal(size=(8, 8, 16)).astype(np.float32))
+    got = run(lambda v: cw.multi_chain_all_to_all(
+        v[0], 'x', RINGS[2], wire_dtype='int8')[None], xs)
+    want = ref.multi_all_to_all_ref(np.asarray(xs), RINGS[2], wire_dtype='int8')
+    np.testing.assert_array_equal(got, want)
+
+    # bf16 payload: f32 on the accumulate path, bf16 back out
+    xb = jnp.asarray(rng.normal(size=(8, 32)), dtype=jnp.bfloat16)
+    def f_bf16(v):
+        out = cw.chain_all_reduce(v[0], 'x', wire_dtype='int8')
+        assert out.dtype == jnp.bfloat16, out.dtype
+        return out[None]
+    got = run(f_bf16, xb)
+    want = ref.multi_all_reduce_ref(np.asarray(xb), RINGS[1], wire_dtype='int8')
+    np.testing.assert_array_equal(got.astype(np.float32),
+                                  np.asarray(want, np.float32))
+
+    # integer payloads cannot take a lossy wire
+    xi = jnp.ones((8, 8), jnp.int32)
+    try:
+        run(lambda v: cw.chain_all_reduce(v[0], 'x', wire_dtype='int8')[None], xi)
+        raise SystemExit('expected ValueError for int32 payload')
+    except ValueError:
+        pass
+    print('int8 executor bit-exact OK')
+    """, timeout=900)
+
+
+def test_hierarchical_2axis_int8_single_quantization(run_multidevice):
+    """2-axis hierarchical compressed reduction: the inner ring's f32
+    output enters the outer ring and is quantized once per WIRE HOP
+    there — never a second whole-payload pass in between. Pinned
+    bit-exactly against composing the two oracle replays."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+    from repro.parallel.collectives import torrent_grad_reduce
+
+    mesh = jax.make_mesh((2, 4), ('pod', 'data'),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.normal(size=(8, 48)).astype(np.float32))
+
+    def nested(v):
+        y = cw.chain_all_reduce(v[0], 'data', wire_dtype='int8')
+        y = cw.chain_all_reduce(y, 'pod', wire_dtype='int8')
+        return y[None]
+
+    sm = jax.shard_map(nested, mesh=mesh,
+                       in_specs=P(('pod', 'data'), None),
+                       out_specs=P(('pod', 'data'), None))
+    got = np.asarray(jax.jit(sm)(xs))
+
+    # oracle: inner int8 ring per pod, then the outer int8 ring over
+    # pods — each all_reduce_ref replays the per-hop roundings exactly
+    x = np.asarray(xs).reshape(2, 4, 48)
+    inner = np.stack([
+        ref.multi_all_reduce_ref(x[p], ((0, 1, 2, 3),), wire_dtype='int8')
+        for p in range(2)
+    ])
+    want = np.empty_like(inner)
+    for j in range(4):
+        want[:, j] = ref.multi_all_reduce_ref(
+            inner[:, j], ((0, 1),), wire_dtype='int8')
+    np.testing.assert_array_equal(got, want.reshape(8, 48))
+
+    # and through the full torrent_grad_reduce seam: grads land near the
+    # exact DP mean (error relative to the tensor max, int8 wire)
+    params = {'w': jnp.zeros((48,), jnp.float32)}
+    def grad_fn(p, batch):
+        return {'w': batch['g'][0]}, {'loss': jnp.float32(0.0)}
+    reduce = torrent_grad_reduce(
+        grad_fn, mesh, {'g': P(('pod', 'data'), None)}, wire_dtype='int8')
+    with jax.set_mesh(mesh):
+        grads, _ = jax.jit(reduce)(params, {'g': xs})
+    exact = np.asarray(xs).mean(0)
+    err = np.abs(np.asarray(grads['w']) - exact).max() / np.abs(exact).max()
+    assert err < 0.08, err
+    print('hierarchical int8 OK')
+    """, timeout=900)
+
+
+def test_compress_composes_with_num_chains(run_multidevice):
+    """compress used to silently ignore num_chains/algo; now they
+    compose (and invalid K still raises the partition ValueError)."""
+    run_multidevice("""
+    from repro.core import chainwrite as cw
+    from repro.core import chainwrite_ref as ref
+    from repro.parallel.collectives import torrent_grad_reduce
+
+    mesh = jax.make_mesh((8, 1), ('data', 'model'),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(2)
+    xs = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    params = {'w': jnp.zeros((64,), jnp.float32)}
+    def grad_fn(p, batch):
+        return {'w': batch['g'][0]}, {'loss': jnp.float32(0.0)}
+
+    for kwargs in ({'num_chains': 2}, {'num_chains': 2, 'algo': 'rotation'},
+                   {'num_chains': 'auto'}):
+        reduce = torrent_grad_reduce(
+            grad_fn, mesh, {'g': P('data', None)},
+            wire_dtype='int8', **kwargs)
+        with jax.set_mesh(mesh):
+            grads, _ = jax.jit(reduce)(params, {'g': xs})
+        exact = np.asarray(xs).mean(0)
+        err = np.abs(np.asarray(grads['w']) - exact).max() / np.abs(exact).max()
+        assert err < 0.08, (kwargs, err)
+
+    # K that does not divide the DP group still raises loudly
+    bad = torrent_grad_reduce(
+        grad_fn, mesh, {'g': P('data', None)},
+        wire_dtype='int8', num_chains=3)
+    try:
+        with jax.set_mesh(mesh):
+            jax.jit(bad)(params, {'g': xs})
+        raise SystemExit('expected ValueError for K=3 on 8 ranks')
+    except ValueError:
+        pass
+    print('compose OK')
+    """, timeout=900)
+
+
+def test_compress_grads_changes_hlo(run_multidevice):
+    """Satellite regression: the compress_grads knob must actually
+    change the emitted program (it used to be declared-but-never-read).
+    int8 collective traffic shows up as s8 ops in the optimized HLO."""
+    run_multidevice("""
+    import dataclasses
+    from repro import configs as C
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import _named, _sanitize, make_train_step
+    from repro.models import transformer as T
+    from repro.optim import adamw
+    from repro.parallel import sharding as shd
+
+    cfg = dataclasses.replace(
+        C.get_smoke_config('yi-6b'), num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=32, head_dim=8)
+    mesh = make_host_mesh(model=1)
+    opt_cfg = adamw.OptConfig()
+    params_shape = jax.eval_shape(
+        lambda: T.model_init(jax.random.PRNGKey(0), cfg))
+    pspecs = shd.param_pspecs(params_shape, cfg, tp=1)
+    ospecs = shd.opt_pspecs(pspecs, params_shape, mesh.shape['data'])
+    bspec = P('data', None)
+    bspecs = {'tokens': bspec, 'labels': bspec}
+    batch = {
+        k: jax.ShapeDtypeStruct((8, 16), jnp.int32) for k in bspecs
+    }
+    opt_shape = jax.eval_shape(lambda: adamw.init(params_shape))
+
+    def lower(compress):
+        step = make_train_step(
+            cfg, opt_cfg, collectives='torrent', compress_grads=compress,
+            mesh=mesh, batch_specs={k: _sanitize(v, mesh)
+                                    for k, v in bspecs.items()},
+            loss_chunks=2)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                          {k: jax.NamedSharding(mesh, _sanitize(v, mesh))
+                           for k, v in bspecs.items()}))
+        with jax.set_mesh(mesh):
+            return jitted.lower(params_shape, opt_shape, batch)\
+                .compile().as_text()
+
+    base, compressed = lower(False), lower(True)
+    assert 's8[' not in base
+    assert 's8[' in compressed, 'compress_grads did not change the HLO'
+    print('hlo knob OK')
+    """, timeout=900)
