@@ -17,6 +17,7 @@ from . import (
     bench_fig7_config_overhead,
     bench_fig9_deepseek,
     bench_roofline,
+    bench_serve,
 )
 
 BENCHES = [
@@ -26,6 +27,7 @@ BENCHES = [
     ("fig9 (DeepSeek-V3 workloads)", bench_fig9_deepseek),
     ("fig11 (area/power model)", bench_area_power),
     ("collectives (chain vs xla)", bench_collectives),
+    ("serve (traffic + KV multicast)", bench_serve),
     ("roofline (dry-run table)", bench_roofline),
 ]
 

@@ -31,23 +31,47 @@ def main():
     )
     server = Server(sc)
     rng = np.random.default_rng(0)
+
+    # register a shared system prompt: prefilled once, its KV rows are
+    # chained to every replica and paged via the relayout kernel
+    system_prompt = rng.integers(0, server.cfg.vocab_size, size=8).astype(
+        np.int32
+    )
+    entry = server.register_prefix(system_prompt)
+    kv = entry.broadcast
+    print(f"KV multicast of a {entry.plen}-token prefix to "
+          f"{kv['replicas'] - 1} replicas: {kv['wire_bytes']} wire bytes "
+          f"({kv['speedup_vs_unicast']:.2f}x vs unicast), "
+          f"{entry.paged.shape[0]} pages/replica")
+
     print(f"submitting {args.requests} requests "
-          f"({sc.batch} decode slots, greedy sampling)...")
+          f"({sc.batch} decode slots, greedy sampling, every other "
+          f"request reusing the system prompt)...")
     reqs = [
-        server.submit(rng.integers(0, server.cfg.vocab_size, size=16),
-                      args.max_new)
-        for _ in range(args.requests)
+        server.submit(
+            np.concatenate(
+                [system_prompt,
+                 rng.integers(0, server.cfg.vocab_size, size=8)]
+            ).astype(np.int32)
+            if i % 2 == 0
+            else rng.integers(0, server.cfg.vocab_size, size=16),
+            args.max_new,
+        )
+        for i in range(args.requests)
     ]
     out = server.run(reqs)
     print(f"generated {out['generated_tokens']} tokens over "
           f"{out['decode_steps']} decode steps "
-          f"({out['tokens_per_s']:.1f} tok/s on CPU)")
+          f"({out['tokens_per_s']:.1f} tok/s on CPU); "
+          f"prefix-cache hit rate {out['prefix_hit_rate']:.0%}, "
+          f"p50/p99 latency {out['latency_ticks_p50']:.0f}/"
+          f"{out['latency_ticks_p99']:.0f} ticks")
     wm = out["weight_multicast"]
     print(f"weight multicast to {sc.replicas - 1} replicas: "
           f"{wm['bytes']} bytes, {wm['cycles']} predicted cycles, "
           f"{wm['speedup_vs_unicast']:.2f}x vs unicast")
     for r in reqs[:3]:
-        print(f"  request {r.rid}: {r.out}")
+        print(f"  request {r.rid}{' (hit)' if r.prefix_hit else ''}: {r.out}")
 
 
 if __name__ == "__main__":

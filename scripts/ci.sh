@@ -6,10 +6,11 @@
 # oracle suites) for a fast inner loop — the default run keeps them.
 # QUICK=1 BENCH=1 keeps the fast lane honest about wire bytes: it runs
 # the self-contained bench_collectives subprocess (the ChainProgram
-# byte-prediction assertions for every collective × K) instead of the
-# full harness. Either BENCH path rewrites BENCH_collectives.json —
-# the per-benchmark modeled-vs-HLO bytes/latency record tracked across
-# PRs.
+# byte-prediction assertions for every collective × K) plus bench_serve
+# (the serving-traffic + KV-multicast self-consistency assertions)
+# instead of the full harness. Either BENCH path rewrites
+# BENCH_collectives.json and BENCH_serve.json — the per-benchmark
+# modeled-vs-actual bytes/latency records tracked across PRs.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -25,6 +26,7 @@ fi
 if [[ "${BENCH:-0}" == "1" ]]; then
     if [[ "${QUICK:-0}" == "1" ]]; then
         python -m benchmarks.bench_collectives
+        python -m benchmarks.bench_serve
     else
         python -m benchmarks.run
     fi

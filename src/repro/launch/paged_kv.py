@@ -1,0 +1,187 @@
+"""Paged KV blocks and the prefix cache behind KV-block multicast serving.
+
+Millions of users share prompt prefixes (system prompts, few-shot
+preambles). The serving tentpole prefilles such a prefix ONCE on one
+replica, flattens the per-position KV rows into a dense ``(plen, F)``
+bf16 matrix, broadcasts the raw bytes to the replica set down a
+``core.program.plan_broadcast`` ChainProgram, and each receiving replica
+runs the :mod:`repro.kernels.relayout` kernel to convert the dense rows
+into its paged ``(page, F)``-blocked layout (the XDMA "layout-flexible
+delivery" side of the paper's P2MP story). The numpy oracle
+(:func:`paged_ref`) pins the kernel output bit-exactly.
+
+Why this is exact (not an approximation): a position's KV row is that
+token's projection (+RoPE at its absolute position) only — independent
+of every other token — so a prefix's KV rows are identical for any
+prompt sharing the prefix, and seeding them into a fresh slot
+(:func:`seed_cache_row`) reproduces the full-prefill cache bit-for-bit.
+
+Layout glossary (relayout kernel terms): the dense matrix is the
+``(1, F)``-blocked layout (one row per block); the paged cache is the
+``(page, F)``-blocked layout — each block is one KV page, contiguous in
+memory, so a page is the unit a replica can place anywhere in its block
+pool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.relayout import relayout, relayout_ref
+
+__all__ = [
+    "BF16",
+    "kv_feature_width",
+    "extract_dense_kv",
+    "seed_cache_row",
+    "to_paged",
+    "paged_ref",
+    "dense_from_bytes",
+    "PrefixEntry",
+    "PrefixCache",
+]
+
+# numpy bf16 via ml_dtypes (jax's wire dtype for KV caches)
+BF16 = np.dtype(jnp.bfloat16)
+
+
+def _positional_leaves(cache: dict, max_seq: int) -> list:
+    """The cache leaves carrying a per-position axis at dim 2.
+
+    Decode caches stack layer groups as ``(reps, B, max_seq, *feat)``
+    (gqa: k/v; mla: ckv/krope). Mixers without positional state (mamba)
+    have no such axis — KV multicast is not defined for them."""
+    leaves = jax.tree.leaves(cache["layers"])
+    for leaf in leaves:
+        if leaf.ndim < 3 or leaf.shape[2] != max_seq:
+            raise ValueError(
+                "KV multicast needs per-position cache leaves "
+                f"(reps, B, {max_seq}, ...); got {leaf.shape} — "
+                "non-attention mixers (mamba) are not supported"
+            )
+    return leaves
+
+
+def kv_feature_width(cache: dict, max_seq: int) -> int:
+    """F: bf16 values per cache position across all layers/leaves."""
+    total = 0
+    for leaf in _positional_leaves(cache, max_seq):
+        reps = leaf.shape[0]
+        feat = int(np.prod(leaf.shape[3:])) if leaf.ndim > 3 else 1
+        total += reps * feat
+    return total
+
+
+def extract_dense_kv(cache: dict, row: int, plen: int, max_seq: int) -> np.ndarray:
+    """Flatten cache positions ``[0, plen)`` of slot ``row`` into a
+    dense ``(plen, F)`` bf16 matrix (position-major, leaves concatenated
+    along F in tree order)."""
+    mats = []
+    for leaf in _positional_leaves(cache, max_seq):
+        arr = np.asarray(jax.device_get(leaf)).astype(BF16)
+        a = arr[:, row, :plen]  # (reps, plen, *feat)
+        mats.append(np.moveaxis(a, 0, 1).reshape(plen, -1))
+    return np.ascontiguousarray(np.concatenate(mats, axis=1))
+
+
+def seed_cache_row(cache: dict, row: int, dense: np.ndarray, seed_len: int) -> dict:
+    """Inverse of :func:`extract_dense_kv`: write ``dense[:seed_len]``
+    into positions ``[0, seed_len)`` of slot ``row``. Exact — the seeded
+    rows are bit-identical to a full prefill of the same tokens."""
+    layers = cache["layers"]
+    leaves, treedef = jax.tree.flatten(layers)
+    max_seq = leaves[0].shape[2]
+    _positional_leaves(cache, max_seq)  # validate
+    off = 0
+    out = []
+    for leaf in leaves:
+        reps = leaf.shape[0]
+        feat_shape = tuple(leaf.shape[3:])
+        width = reps * (int(np.prod(feat_shape)) if feat_shape else 1)
+        seg = np.asarray(dense[:seed_len, off : off + width])
+        off += width
+        block = np.moveaxis(
+            seg.reshape((seed_len, reps) + feat_shape), 1, 0
+        )  # (reps, seed_len, *feat)
+        out.append(leaf.at[:, row, :seed_len].set(jnp.asarray(block, leaf.dtype)))
+    if off != dense.shape[1]:
+        raise ValueError(f"dense width {dense.shape[1]} != cache width {off}")
+    return {**cache, "layers": jax.tree.unflatten(treedef, out)}
+
+
+def to_paged(dense: np.ndarray, page: int, *, interpret: bool | None = None) -> np.ndarray:
+    """Dense ``(plen, F)`` rows -> paged ``(npages, page, F)`` blocks via
+    the relayout kernel (``(1, F)``-blocked -> ``(page, F)``-blocked)."""
+    plen, F = dense.shape
+    if plen % page:
+        raise ValueError(f"prefix length {plen} not a multiple of page {page}")
+    src = jnp.asarray(dense).reshape(plen, 1, 1, F)  # (1,F)-blocked
+    out = relayout(src, (plen, F), (1, F), (page, F), interpret=interpret)
+    return np.asarray(jax.device_get(out))[:, 0]  # (npages, page, F)
+
+
+def paged_ref(dense: np.ndarray, page: int) -> np.ndarray:
+    """Numpy oracle twin of :func:`to_paged` through ``relayout_ref``."""
+    plen, F = dense.shape
+    src = jnp.asarray(dense).reshape(plen, 1, 1, F)
+    out = relayout_ref(src, (plen, F), (1, F), (page, F))
+    return np.asarray(jax.device_get(out))[:, 0]
+
+
+def dense_from_bytes(buf: np.ndarray, plen: int, width: int) -> np.ndarray:
+    """Reinterpret a delivered uint8 wire buffer as the ``(plen, F)``
+    bf16 dense KV matrix (zero-copy view)."""
+    return np.asarray(buf, np.uint8).view(BF16).reshape(plen, width)
+
+
+@dataclasses.dataclass(eq=False)
+class PrefixEntry:
+    """One registered prefix: its tokens, the prefilling replica's dense
+    KV rows, and the paged blocks each replica materialized on receipt."""
+
+    tokens: np.ndarray  # (plen,) int32
+    page: int
+    dense: np.ndarray  # (plen, F) bf16 — source-replica KV rows
+    paged: np.ndarray  # (npages, page, F) bf16 — source paged layout
+    replica_paged: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    broadcast: dict | None = None  # the plan_broadcast record (see serve)
+
+    @property
+    def plen(self) -> int:
+        return int(self.tokens.size)
+
+
+class PrefixCache:
+    """Longest-prefix lookup over registered prompt prefixes."""
+
+    def __init__(self) -> None:
+        self.entries: list[PrefixEntry] = []
+        self.hits = 0
+        self.misses = 0
+
+    def add(self, entry: PrefixEntry) -> None:
+        self.entries.append(entry)
+
+    def lookup(self, prompt: np.ndarray) -> PrefixEntry | None:
+        """Longest registered prefix that ``prompt`` starts with (counted
+        as a hit/miss for the serving stats)."""
+        prompt = np.asarray(prompt)
+        best = None
+        for e in self.entries:
+            if e.plen <= prompt.size and np.array_equal(prompt[: e.plen], e.tokens):
+                if best is None or e.plen > best.plen:
+                    best = e
+        if best is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return best
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0

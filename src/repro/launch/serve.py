@@ -1,21 +1,38 @@
-"""Batched serving driver: continuous-batching decode loop with a
-Torrent-orchestrated weight multicast between steps.
+"""Continuous-batching serving with Torrent P2MP weight AND KV multicast.
 
 The serving runtime is where the paper's *dynamic* four-phase protocol
 survives compilation (DESIGN.md §2): requests arrive asynchronously, and
-host-side P2MP movement (broadcasting freshly-prefilled KV blocks or
-refreshed weights to the replica set) is driven as Torrent chain tasks
-with real predicted-cycle accounting.
+host-side P2MP movement is driven as Torrent chain tasks with real
+predicted-cycle accounting. Two payloads ride the replica plan:
 
-Elastic serving: the server holds ONE persistent
-``parallel.collectives.MultiChainPlan`` for the replica set.
-``broadcast_weights`` streams the *entire* flattened parameter tree
-(chunked, byte-exact — the logged byte count is asserted against the
-params' true nbytes) down the plan's sub-chains, and
-``Server.scale_down`` handles replica loss by *re-forming* that live
-plan around the lost members (``runtime.elastic.scale_down_plan`` →
-``MultiChainPlan.reform``) instead of rebuilding it — the Torrent
-recovery machinery doing elastic scale-down.
+* **Weight refresh** — ``broadcast_weights`` streams the *entire*
+  flattened parameter tree (chunked, byte-exact; the logged byte count
+  is asserted against the params' true nbytes) down the persistent
+  ``parallel.collectives.MultiChainPlan``'s sub-chains.
+* **KV-block multicast** — ``register_prefix`` prefilles a shared
+  prompt prefix (system prompt / few-shot preamble) ONCE, flattens the
+  per-position KV rows to a dense bf16 matrix
+  (:mod:`repro.launch.paged_kv`), broadcasts the bytes to every replica
+  as a ``core.program.plan_broadcast`` ChainProgram (priced by
+  ``simulator.program_latency`` / ``program_wire_bytes``; delivered
+  byte-exactly by ``MultiChainTask``), and each receiving replica runs
+  the :mod:`repro.kernels.relayout` kernel to materialize its paged
+  ``(page, F)`` block layout — pinned bit-exactly against the numpy
+  oracle. Requests whose prompt starts with a registered prefix are
+  admitted by *seeding* the cached rows instead of re-prefilling them.
+
+The decode loop is slot-based continuous batching with **per-slot
+positions**: every slot advances at its own absolute position
+(``(B,)``-vector ``pos`` through ``models.transformer.decode_step``),
+admission prefilles ONLY the admitted slot
+(``launch.steps.make_slot_prefill_step`` + ``write_cache_slot``), and a
+slot finishes only when *it* runs out of room — an admission or another
+slot's exhaustion never perturbs an in-flight request's tokens.
+
+Elastic serving: ``Server.scale_down`` handles replica loss by
+*re-forming* the live plan around the lost members
+(``runtime.elastic.scale_down_plan`` → ``MultiChainPlan.reform``)
+instead of rebuilding it.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
         --requests 16 --max-new 32
@@ -35,8 +52,23 @@ import numpy as np
 
 from repro import configs as C
 from repro.core.chaintask import MultiChainTask
+from repro.core.program import plan_broadcast, program_wire_bytes
+from repro.core.simulator import program_latency, unicast_latency
 from repro.core.topology import MeshTopology
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.paged_kv import (
+    PrefixCache,
+    PrefixEntry,
+    dense_from_bytes,
+    extract_dense_kv,
+    paged_ref,
+    seed_cache_row,
+    to_paged,
+)
+from repro.launch.steps import (
+    make_serve_step,
+    make_slot_prefill_step,
+    write_cache_slot,
+)
 from repro.models import transformer as T
 from repro.parallel.collectives import MultiChainPlan
 from repro.runtime.elastic import scale_down_plan
@@ -44,13 +76,17 @@ from repro.runtime.elastic import scale_down_plan
 log = logging.getLogger("repro.serve")
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: int
     prompt: np.ndarray  # (S,) int32
     max_new: int
+    arrival: int = 0  # decode tick the request becomes visible
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    prefix_hit: bool = False  # admitted by seeding a registered prefix
+    t_admit: int | None = None  # decode tick admitted to a slot
+    t_done: int | None = None  # decode tick the last token was emitted
 
 
 @dataclasses.dataclass
@@ -58,32 +94,32 @@ class ServeConfig:
     arch: str = "yi-6b"
     smoke: bool = True
     batch: int = 4  # decode slots
-    prompt_len: int = 16
+    prompt_len: int = 16  # admission window: longest accepted prompt
     max_seq: int = 128
     eos: int = -1  # -1: run to max_new
-    replicas: int = 4  # model replicas for weight multicast demo
+    replicas: int = 4  # model replicas for weight/KV multicast
+    page_size: int = 8  # KV page height (positions per paged block)
     seed: int = 0
 
 
 class Server:
-    """Slot-based continuous batching with greedy decode."""
+    """Slot-based continuous batching with greedy decode, per-slot
+    positions, and a multicast-fed prefix cache."""
 
     def __init__(self, sc: ServeConfig):
         self.sc = sc
         self.cfg = C.get_smoke_config(sc.arch) if sc.smoke else C.get_config(sc.arch)
         key = jax.random.PRNGKey(sc.seed)
         self.params = T.model_init(key, self.cfg)
-        self.prefill = jax.jit(
-            make_prefill_step(self.cfg, sc.max_seq), static_argnames=()
-        )
+        self.slot_prefill = jax.jit(make_slot_prefill_step(self.cfg, sc.max_seq))
         self.serve_step = jax.jit(make_serve_step(self.cfg))
         self.queue: list[Request] = []
         self.slots: list[Request | None] = [None] * sc.batch
-        self.pos = 0
-        self.cache = None
+        self.cache = T.init_cache(self.cfg, sc.batch, sc.max_seq)
+        self.clock = 0  # decode ticks (the traffic harness's time base)
         self.steps = 0
-        # weight-multicast bookkeeping (paper Fig. 4 host orchestration):
-        # ONE persistent multi-chain plan for the replica set — elastic
+        # P2MP bookkeeping (paper Fig. 4 host orchestration): ONE
+        # persistent multi-chain plan for the replica set — elastic
         # scale-down re-forms it (endpoint-side) instead of rebuilding.
         self.replicas = sc.replicas
         self.topo = MeshTopology(max(2, sc.replicas), 1)
@@ -92,13 +128,28 @@ class Server:
         )
         self.multicast_log: list[dict] = []
         self.last_delivery: dict[int, np.ndarray] = {}
+        self.prefix_cache = PrefixCache()
+        self.kv_multicast_log: list[dict] = []
 
     # -- the paper's host-side P2MP: weight refresh to replicas ----------
     def broadcast_weights(self, chunk_bytes: int = 1 << 20) -> dict:
         """Multicast the FULL parameter tree to every surviving replica
         down the persistent plan's sub-chains, ``chunk_bytes`` at a
         time. The logged ``bytes`` is asserted against the params' true
-        nbytes — the record describes a real weight refresh."""
+        nbytes — the record describes a real weight refresh. With no
+        surviving destinations (``replicas=1``) nothing moves and the
+        record says so: a distinct no-op with 0 chunks / 0 delivered
+        bytes, never a phantom full-payload claim."""
+        dests = self.plan.survivors
+        if not dests:
+            rec = {
+                "bytes": 0, "delivered_bytes": 0, "chunks": 0,
+                "replicas": 1, "cycles": 0, "speedup_vs_unicast": 1.0,
+                "noop": True,
+            }
+            self.last_delivery = {}
+            self.multicast_log.append(rec)
+            return rec
         flat, _ = jax.tree_util.tree_flatten(self.params)
         true_nbytes = sum(int(np.asarray(x).nbytes) for x in flat)
         # dtype-agnostic byte stream: the wire moves bytes, not floats
@@ -109,13 +160,10 @@ class Server:
             if flat
             else np.zeros(0, np.uint8)
         )
-        dests = self.plan.survivors
         cycles = unicast = chunks = 0
         parts: dict[int, list[np.ndarray]] = {d: [] for d in dests}
         for off in range(0, payload.size, max(1, int(chunk_bytes))):
             chunk = payload[off : off + max(1, int(chunk_bytes))]
-            if not dests:
-                break
             task = MultiChainTask(
                 self.topo, 0, dests, chunk,
                 chains=[list(c) for c in self.plan.chains],
@@ -132,6 +180,9 @@ class Server:
         }
         rec = {
             "bytes": int(payload.nbytes),
+            "delivered_bytes": sum(
+                int(b.nbytes) for b in self.last_delivery.values()
+            ),
             "chunks": chunks,
             "replicas": len(dests) + 1,
             "cycles": cycles,
@@ -144,6 +195,110 @@ class Server:
             )
         self.multicast_log.append(rec)
         return rec
+
+    # -- KV-block multicast: prefill a shared prefix once, chain it out --
+    def register_prefix(self, tokens: np.ndarray) -> PrefixEntry:
+        """Prefill a shared prompt prefix on the head replica, broadcast
+        its KV rows to every survivor as a ``plan_broadcast``
+        ChainProgram, and relayout them into paged blocks on receipt.
+
+        Delivery is byte-exact and the modeled wire bytes
+        (``program_wire_bytes``) are asserted against the bytes the
+        chain task actually delivered; each replica's paged blocks are
+        pinned bit-exactly against the ``relayout_ref`` numpy oracle."""
+        sc = self.sc
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        plen = int(tokens.size)
+        if plen == 0 or plen % sc.page_size:
+            raise ValueError(
+                f"prefix length {plen} must be a positive multiple of "
+                f"page_size={sc.page_size}"
+            )
+        if plen >= sc.max_seq:
+            raise ValueError(f"prefix length {plen} >= max_seq {sc.max_seq}")
+        # scratch B=1 prefill — the live slots are never touched
+        _, one_cache = self.slot_prefill(self.params, jnp.asarray(tokens)[None])
+        dense = extract_dense_kv(one_cache, 0, plen, sc.max_seq)
+        paged = to_paged(dense, sc.page_size)
+        oracle = paged_ref(dense, sc.page_size)
+        np.testing.assert_array_equal(
+            paged.view(np.uint8), oracle.view(np.uint8)
+        )  # relayout kernel pinned against its numpy oracle
+        entry = PrefixEntry(
+            tokens=tokens, page=sc.page_size, dense=dense, paged=paged
+        )
+        entry.broadcast = self._broadcast_kv(entry)
+        self.prefix_cache.add(entry)
+        self.kv_multicast_log.append(entry.broadcast)
+        return entry
+
+    def _broadcast_kv(self, entry: PrefixEntry) -> dict:
+        """Chain the dense KV rows to the surviving replicas and paged-
+        relayout them on each receiver."""
+        dests = self.plan.survivors
+        payload = np.ascontiguousarray(entry.dense).reshape(-1).view(np.uint8)
+        nbytes = int(payload.nbytes)
+        if not dests:
+            entry.replica_paged = {0: entry.paged}
+            return {
+                "prefix_len": entry.plen, "bytes": nbytes,
+                "delivered_bytes": 0, "wire_bytes": 0, "replicas": 1,
+                "cycles": 0, "modeled_cycles": 0,
+                "speedup_vs_unicast": 1.0, "noop": True,
+            }
+        chains = tuple(tuple(c) for c in self.plan.chains)
+        program = plan_broadcast(self.topo.num_nodes, 0, chains)
+        modeled_wire = program_wire_bytes(program, nbytes)
+        modeled_cc = int(program_latency(self.topo, 0, program, nbytes))
+        uni_cc = int(unicast_latency(self.topo, 0, dests, nbytes))
+        task = MultiChainTask(
+            self.topo, 0, dests, payload, chains=[list(c) for c in chains]
+        )
+        bufs = task.run()
+        delivered = 0
+        replica_paged = {0: entry.paged}
+        F = entry.dense.shape[1]
+        for d, buf in bufs.items():
+            rdense = dense_from_bytes(buf, entry.plen, F)
+            np.testing.assert_array_equal(
+                rdense.view(np.uint8), entry.dense.view(np.uint8)
+            )  # byte-exact delivery vs the prefilling replica
+            rpaged = to_paged(rdense, entry.page)
+            np.testing.assert_array_equal(
+                rpaged.view(np.uint8),
+                paged_ref(entry.dense, entry.page).view(np.uint8),
+            )  # receiver-side relayout pinned vs the numpy oracle
+            replica_paged[d] = rpaged
+            delivered += int(buf.nbytes)
+        # Two byte books, each checked against its own invariant: the
+        # task must deliver the FULL payload to every destination, and
+        # the planned program's wire bytes are the fused-ppermute HLO
+        # attribution — (steps + K - 1) payloads, which equals the
+        # delivered bytes exactly when the plan is a single chain.
+        if delivered != len(dests) * nbytes:
+            raise AssertionError(
+                f"KV broadcast delivered {delivered} B, expected "
+                f"{len(dests)} x {nbytes} B"
+            )
+        if modeled_wire != (len(program.steps) + len(chains) - 1) * nbytes:
+            raise AssertionError(
+                f"planned program prices {modeled_wire} B, expected "
+                f"{len(program.steps) + len(chains) - 1} x {nbytes} B"
+            )
+        entry.replica_paged = replica_paged
+        return {
+            "prefix_len": entry.plen,
+            "bytes": nbytes,
+            "delivered_bytes": delivered,
+            "wire_bytes": modeled_wire,
+            "replicas": len(dests) + 1,
+            "cycles": int(task.cycle_ledger["total"]),
+            "modeled_cycles": modeled_cc,
+            "unicast_cycles": uni_cc,
+            "speedup_vs_unicast": (
+                uni_cc / modeled_cc if modeled_cc else 1.0
+            ),
+        }
 
     # -- elastic scale-down: re-form the live plan, never rebuild it -----
     def scale_down(self, replicas: int) -> tuple[int, ...]:
@@ -160,84 +315,151 @@ class Server:
         return lost
 
     # -- request lifecycle -------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int) -> Request:
-        req = Request(rid=len(self.queue), prompt=np.asarray(prompt, np.int32),
-                      max_new=max_new)
+    def submit(self, prompt: np.ndarray, max_new: int, arrival: int = 0) -> Request:
+        """Queue a request. Prompts longer than the admission window are
+        rejected HERE — never silently truncated into a different
+        prompt — as are empty ones."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size > self.sc.prompt_len:
+            raise ValueError(
+                f"prompt length {prompt.size} exceeds the admission window "
+                f"prompt_len={self.sc.prompt_len}; refusing to truncate"
+            )
+        req = Request(
+            rid=len(self.queue), prompt=prompt, max_new=max_new,
+            arrival=int(arrival),
+        )
         self.queue.append(req)
         return req
 
     def _admit(self):
-        """Fill free slots; (re)prefill the whole batch when it changes.
-
-        A production server prefills per-slot into a paged cache; on one
-        host we re-prefill the packed batch — same interface, simpler
-        memory management.
-        """
-        waiting = [r for r in self.queue if not r.done and r not in self.slots]
-        changed = False
+        """Fill free slots with arrived requests, prefilling ONLY the
+        admitted slot — in-flight rows are never rebuilt."""
+        waiting = [
+            r for r in self.queue
+            if not r.done and r.t_admit is None and r.arrival <= self.clock
+        ]
         for i, slot in enumerate(self.slots):
             if (slot is None or slot.done) and waiting:
-                self.slots[i] = waiting.pop(0)
-                changed = True
-        if changed:
-            self._prefill_batch()
+                r = waiting.pop(0)
+                self.slots[i] = r
+                r.t_admit = self.clock
+                self._prefill_slot(i)
 
-    def _prefill_batch(self):
-        sc = self.sc
-        prompts = np.zeros((sc.batch, sc.prompt_len), np.int32)
-        for i, r in enumerate(self.slots):
-            if r is not None:
-                prompts[i, : len(r.prompt)] = r.prompt[: sc.prompt_len]
-        logits, cache = self.prefill(self.params, {"tokens": jnp.asarray(prompts)})
-        self.cache = cache
-        self.pos = sc.prompt_len
-        first = np.asarray(jnp.argmax(logits, -1), np.int32)
-        for i, r in enumerate(self.slots):
-            if r is not None and not r.done:
-                r.out.append(int(first[i]))
+    def _prefill_slot(self, i: int):
+        """Fill slot ``i``'s cache row and emit its first token.
+
+        Prefix-cache hit: seed the registered prefix's multicast KV rows
+        straight into the row (bit-identical to prefilling them) and run
+        only the prompt's suffix through single-row decode. Miss: exact-
+        length full prefill of this row alone."""
+        r = self.slots[i]
+        prompt = r.prompt
+        plen = int(prompt.size)
+        entry = self.prefix_cache.lookup(prompt) if self.prefix_cache.entries else None
+        if entry is not None:
+            # keep at least one token to feed through decode so the
+            # slot's first output falls out of the last suffix step
+            seed = entry.plen if entry.plen < plen else plen - 1
+            r.prefix_hit = True
+            if seed:
+                self.cache = seed_cache_row(self.cache, i, entry.dense, seed)
+            one_cache = jax.tree.map(lambda t: t[:, i : i + 1], self.cache)
+            tok = None
+            for p in range(seed, plen):
+                tok, one_cache = self.serve_step(
+                    self.params,
+                    jnp.asarray([int(prompt[p])], jnp.int32),
+                    jnp.int32(p),
+                    one_cache,
+                )
+            self.cache = write_cache_slot(self.cache, one_cache, i)
+            first = int(np.asarray(tok)[0])
+        else:
+            first_tok, one_cache = self.slot_prefill(
+                self.params, jnp.asarray(prompt)[None]
+            )
+            self.cache = write_cache_slot(self.cache, one_cache, i)
+            first = int(np.asarray(first_tok)[0])
+        r.out.append(first)
+        self._maybe_finish(r)
+
+    def _maybe_finish(self, r: Request):
+        t = r.out[-1]
+        if (
+            len(r.out) >= r.max_new
+            or t == self.sc.eos
+            or len(r.prompt) + len(r.out) >= self.sc.max_seq
+        ):
+            r.done = True
+            r.t_done = self.clock
+
+    def _active(self) -> list[int]:
+        return [
+            i for i, r in enumerate(self.slots)
+            if r is not None and not r.done and r.out
+        ]
 
     def step(self):
-        """One decode step for every active slot."""
-        if self.cache is None:
+        """One decode step: every active slot advances at its OWN
+        absolute position (inactive rows are parked at position 0 and
+        their tokens discarded — their rows are rewritten on the next
+        admission)."""
+        active = self._active()
+        if not active:
             return
-        cur = np.array(
-            [r.out[-1] if r and r.out else 0 for r in self.slots], np.int32
-        )
+        B = self.sc.batch
+        cur = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        for i in active:
+            r = self.slots[i]
+            cur[i] = r.out[-1]
+            pos[i] = len(r.prompt) + len(r.out) - 1
         toks, self.cache = self.serve_step(
-            self.params, jnp.asarray(cur), jnp.int32(self.pos), self.cache
+            self.params, jnp.asarray(cur), jnp.asarray(pos), self.cache
         )
-        self.pos += 1
+        self.clock += 1
         self.steps += 1
         nxt = np.asarray(toks)
-        for i, r in enumerate(self.slots):
-            if r is None or r.done:
-                continue
-            t = int(nxt[i])
-            r.out.append(t)
-            if len(r.out) >= r.max_new or t == self.sc.eos:
-                r.done = True
+        for i in active:
+            r = self.slots[i]
+            r.out.append(int(nxt[i]))
+            self._maybe_finish(r)
 
     def run(self, requests: list[Request]) -> dict[str, Any]:
         t0 = time.time()
         self.broadcast_weights()  # weight multicast to the replica set
         while any(not r.done for r in requests):
             self._admit()
-            if all(s is None or s.done for s in self.slots):
-                break
+            if not self._active():
+                future = [
+                    r.arrival for r in self.queue
+                    if not r.done and r.t_admit is None
+                ]
+                if not future:
+                    break
+                # idle until the next arrival
+                self.clock = max(self.clock + 1, min(future))
+                continue
             self.step()
-            if self.pos >= self.sc.max_seq - 1:
-                for r in self.slots:
-                    if r is not None:
-                        r.done = True
         wall = time.time() - t0
+        served = [r for r in requests if r.done]
+        lat = [r.t_done - r.arrival for r in served if r.t_done is not None]
         toks = sum(len(r.out) for r in requests)
         return {
             "requests": len(requests),
+            "served": len(served),
             "generated_tokens": toks,
             "decode_steps": self.steps,
             "wall_s": wall,
             "tokens_per_s": toks / wall if wall else 0.0,
+            "prefix_hit_rate": self.prefix_cache.hit_rate,
+            "latency_ticks_p50": float(np.percentile(lat, 50)) if lat else 0.0,
+            "latency_ticks_p99": float(np.percentile(lat, 99)) if lat else 0.0,
             "weight_multicast": self.multicast_log[-1] if self.multicast_log else None,
+            "kv_multicast": self.kv_multicast_log[-1] if self.kv_multicast_log else None,
         }
 
 

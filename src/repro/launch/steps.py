@@ -215,6 +215,34 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def make_slot_prefill_step(cfg: ModelConfig, max_seq: int, *, remat: str = "dots"):
+    """Per-slot prefill for continuous batching: one (1, S) prompt in,
+    (first greedy token (1,), single-row cache) out.
+
+    Unlike :func:`make_prefill_step` this never touches the other slots'
+    state — the serve loop writes the returned cache row into the live
+    batch cache with :func:`write_cache_slot`, so an admission cannot
+    disturb in-flight requests."""
+
+    def slot_prefill_step(params, tokens):
+        logits, cache = T.prefill(
+            params, cfg, {"tokens": tokens}, max_seq, remat=remat
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return slot_prefill_step
+
+
+def write_cache_slot(cache: PyTree, one_cache: PyTree, slot: int) -> PyTree:
+    """Scatter a batch=1 cache (from ``make_slot_prefill_step``) into row
+    ``slot`` of a live multi-slot cache. Leaves are (reps, B, ...)."""
+    return jax.tree.map(
+        lambda full, one: full.at[:, slot].set(one[:, 0].astype(full.dtype)),
+        cache,
+        one_cache,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Cell assembly (dry-run entry)
 # ---------------------------------------------------------------------------

@@ -166,23 +166,42 @@ def gqa_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
 def gqa_decode(
     params: dict,
     x: jax.Array,  # (B, 1, d)
-    pos: jax.Array,  # scalar int32 — current absolute position
+    pos: jax.Array,  # scalar int32 — or (B,) per-slot absolute positions
     cache: dict,
     cfg: ModelConfig,
 ) -> tuple[jax.Array, dict]:
-    """Single-token decode with (ring-buffer for SWA) KV cache."""
+    """Single-token decode with (ring-buffer for SWA) KV cache.
+
+    ``pos`` is either a scalar (every row at the same absolute position
+    — the packed-batch path) or a ``(B,)`` vector of per-slot positions
+    (continuous batching: each slot advances independently, so an
+    admission never disturbs an in-flight row)."""
     B = x.shape[0]
     H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q, k, v = _project_qkv(params, x, cfg)  # (B,1,*,Dh)
-    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
     if cfg.mrope_sections is not None:
+        if per_slot:
+            raise NotImplementedError("per-slot decode with M-RoPE")
         pos_b = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    else:
+        pos_b = pos[:, None] if per_slot else jnp.full((B, 1), pos, jnp.int32)
     q, k = _rope_qk(q, k, pos_b, cfg)
 
     slots = cache["k"].shape[1]
-    slot = pos % slots  # ring buffer for SWA; identity when slots == max_seq
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if per_slot:
+        slot_b = pos % slots  # (B,) ring-buffer slot per row
+        ck = cache["k"].at[jnp.arange(B), slot_b].set(
+            k[:, 0].astype(cache["k"].dtype)
+        )
+        cv = cache["v"].at[jnp.arange(B), slot_b].set(
+            v[:, 0].astype(cache["v"].dtype)
+        )
+    else:
+        slot = pos % slots  # ring buffer for SWA; identity when slots == max_seq
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
 
     group = H // Hkv
     qh = q[:, 0].reshape(B, Hkv, group, Dh)
@@ -195,8 +214,12 @@ def gqa_decode(
     # Valid slots: written positions only (a ring buffer is fully valid
     # once wrapped; before wrapping, slots > pos are empty).
     slot_ids = jnp.arange(slots)
-    valid = jnp.where(pos >= slots, jnp.ones((slots,), bool), slot_ids <= pos)
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    if per_slot:
+        valid = (pos_b >= slots) | (slot_ids[None, :] <= pos_b)  # (B, slots)
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    else:
+        valid = jnp.where(pos >= slots, jnp.ones((slots,), bool), slot_ids <= pos)
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p.astype(cv.dtype), cv,
                      preferred_element_type=jnp.float32)
@@ -240,8 +263,8 @@ def _mla_qkv(params, x, positions, cfg: ModelConfig):
 def _mla_attend(params, q_nope, q_rope, c, k_rope, cfg: ModelConfig,
                 mask: jax.Array | None):
     """Attention over recovered K/V. c: (B,T,r); k_rope: (B,T,dr);
-    q_*: (B,S,H,*). mask: (S,T) boolean or None (full)."""
-    if cfg.attn_impl == "chunked" and mask is not None:
+    q_*: (B,S,H,*). mask: (S,T) or per-row (B,S,T) boolean, or None (full)."""
+    if cfg.attn_impl == "chunked" and mask is not None and mask.ndim == 2:
         return _mla_attend_chunked(params, q_nope, q_rope, c, k_rope, cfg)
     B, T = c.shape[:2]
     H = cfg.num_heads
@@ -255,7 +278,8 @@ def _mla_attend(params, q_nope, q_rope, c, k_rope, cfg: ModelConfig,
         + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
     ) * scale
     if mask is not None:
-        s = jnp.where(mask[None, None], s, NEG_INF)
+        m = mask[:, None] if mask.ndim == 3 else mask[None, None]
+        s = jnp.where(m, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
     return out.reshape(B, -1, H * dv).astype(q_nope.dtype) @ cast(params["wo"])
@@ -368,19 +392,31 @@ def mla_decode(
     cfg: ModelConfig,
 ) -> tuple[jax.Array, dict]:
     B = x.shape[0]
-    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1  # (B,) per-slot positions (continuous batching)
+    pos_b = pos[:, None] if per_slot else jnp.full((B, 1), pos, jnp.int32)
     q_nope, q_rope, c, k_rope = _mla_qkv(params, x, pos_b, cfg)
-    cckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], c.astype(cache["ckv"].dtype), (0, pos, 0))
-    ckrope = jax.lax.dynamic_update_slice(
-        cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
+    if per_slot:
+        rows = jnp.arange(B)
+        cckv = cache["ckv"].at[rows, pos].set(
+            c[:, 0].astype(cache["ckv"].dtype))
+        ckrope = cache["krope"].at[rows, pos].set(
+            k_rope[:, 0].astype(cache["krope"].dtype))
+    else:
+        cckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c.astype(cache["ckv"].dtype), (0, pos, 0))
+        ckrope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
     new_cache = {"ckv": cckv, "krope": ckrope}
     if cfg.mla_absorb:
         return _mla_decode_absorbed(
             params, q_nope, q_rope, cckv, ckrope, pos, cfg
         ), new_cache
     T = cckv.shape[1]
-    mask = (jnp.arange(T) <= pos)[None, :]  # (1, T)
+    if per_slot:
+        mask = jnp.arange(T)[None, None, :] <= pos[:, None, None]  # (B, 1, T)
+    else:
+        mask = (jnp.arange(T) <= pos)[None, :]  # (1, T)
     out = _mla_attend(params, q_nope, q_rope, cckv, ckrope, cfg, mask)
     return out, new_cache
 
@@ -411,7 +447,8 @@ def _mla_decode_absorbed(params, q_nope, q_rope, cckv, ckrope, pos,
         + jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(ckrope.dtype),
                      ckrope, preferred_element_type=jnp.float32)
     ) * scale
-    mask = (jnp.arange(T) <= pos)[None, None, :]
+    pos_b = jnp.asarray(pos, jnp.int32).reshape(-1, 1)  # (B,1) or (1,1)
+    mask = (jnp.arange(T)[None, :] <= pos_b)[:, None, :]
     s = jnp.where(mask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o_c = jnp.einsum("bht,btr->bhr", p.astype(cckv.dtype), cckv,

@@ -520,13 +520,17 @@ def decode_step(
     params: Params,
     cfg: ModelConfig,
     tokens: jax.Array,  # (B,) current token ids
-    pos: jax.Array,  # scalar int32 absolute position
+    pos: jax.Array,  # scalar int32 — or (B,) per-slot absolute positions
     cache: dict,
 ) -> tuple[jax.Array, dict]:
-    """One decode step: returns (logits (B, V), new cache)."""
+    """One decode step: returns (logits (B, V), new cache).
+
+    With a ``(B,)`` ``pos`` every batch row advances at its own absolute
+    position (continuous batching); the scalar path is unchanged."""
     x = embed(params["embed"], tokens[:, None])  # (B, 1, d)
     if cfg.pos_scheme == "learned":
-        x = x + cast(params["pos_emb"][pos][None, None, :])
+        pe = cast(params["pos_emb"][pos])
+        x = x + (pe[:, None, :] if pe.ndim == 2 else pe[None, None, :])
     enc = cache.get("enc")
     x, new_layers = groups_decode(
         params["groups"], cache["layers"], cfg, x, pos, enc=enc

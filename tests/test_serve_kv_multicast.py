@@ -1,0 +1,236 @@
+"""KV-block multicast serving: paged KV packing, prefix-cache seeding,
+ChainProgram-priced broadcast delivery, and the relayout-oracle pins."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.program import plan_broadcast, program_wire_bytes
+from repro.launch.paged_kv import (
+    BF16,
+    PrefixCache,
+    PrefixEntry,
+    dense_from_bytes,
+    extract_dense_kv,
+    kv_feature_width,
+    paged_ref,
+    seed_cache_row,
+    to_paged,
+)
+from repro.launch.serve import ServeConfig, Server
+from repro.launch.steps import make_slot_prefill_step
+from repro.models import transformer as T
+
+from repro import configs as C
+
+MAX_SEQ = 48
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return C.get_smoke_config("yi-6b")
+
+
+def test_pack_seed_roundtrip_is_bit_exact(cfg):
+    """extract_dense_kv ∘ seed_cache_row reproduces a full prefill's
+    cache row bit-for-bit — the property that makes prefix seeding exact."""
+    plen = 16
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    prefill = jax.jit(make_slot_prefill_step(cfg, MAX_SEQ))
+    tokens = np.arange(plen, dtype=np.int32) % cfg.vocab_size
+    _, one_cache = prefill(params, jnp.asarray(tokens)[None])
+    dense = extract_dense_kv(one_cache, 0, plen, MAX_SEQ)
+    assert dense.dtype == BF16
+    assert dense.shape == (plen, kv_feature_width(one_cache, MAX_SEQ))
+
+    fresh = T.init_cache(cfg, 2, MAX_SEQ)
+    seeded = seed_cache_row(fresh, 1, dense, plen)
+    # the seeded row's first plen positions == the prefilled row's
+    for leaf_s, leaf_p in zip(
+        jax.tree.leaves(seeded["layers"]), jax.tree.leaves(one_cache["layers"])
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_s)[:, 1, :plen].view(np.uint8),
+            np.asarray(leaf_p)[:, 0, :plen].view(np.uint8),
+        )
+    # row 0 untouched
+    for leaf_s, leaf_f in zip(
+        jax.tree.leaves(seeded["layers"]), jax.tree.leaves(fresh["layers"])
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_s)[:, 0].view(np.uint8),
+            np.asarray(leaf_f)[:, 0].view(np.uint8),
+        )
+
+
+def test_to_paged_matches_relayout_ref():
+    rng = np.random.default_rng(3)
+    dense = rng.standard_normal((32, 24), np.float32).astype(BF16)
+    paged = to_paged(dense, 8)
+    assert paged.shape == (4, 8, 24)
+    np.testing.assert_array_equal(
+        paged.view(np.uint8), paged_ref(dense, 8).view(np.uint8)
+    )
+    # pages tile the dense rows in order
+    np.testing.assert_array_equal(
+        paged.reshape(32, 24).view(np.uint8), dense.view(np.uint8)
+    )
+    # wire roundtrip: uint8 view -> dense_from_bytes is the identity
+    wire = np.ascontiguousarray(dense).reshape(-1).view(np.uint8)
+    np.testing.assert_array_equal(
+        dense_from_bytes(wire, 32, 24).view(np.uint8), dense.view(np.uint8)
+    )
+
+
+def test_prefix_cache_longest_match():
+    pc = PrefixCache()
+    t8 = np.arange(8, dtype=np.int32)
+    t16 = np.arange(16, dtype=np.int32)
+    d = np.zeros((16, 4), BF16)
+    pc.add(PrefixEntry(tokens=t8, page=8, dense=d[:8], paged=d[:8][None]))
+    pc.add(PrefixEntry(tokens=t16, page=8, dense=d, paged=d[None]))
+    hit = pc.lookup(np.arange(20, dtype=np.int32))
+    assert hit is not None and hit.plen == 16  # longest wins
+    assert pc.lookup(np.arange(10, dtype=np.int32)).plen == 8
+    assert pc.lookup(np.array([99, 1, 2], np.int32)) is None
+    assert pc.hits == 2 and pc.misses == 1
+    assert pc.hit_rate == pytest.approx(2 / 3)
+
+
+def test_register_prefix_broadcast_is_exact_and_priced():
+    """The tentpole invariant: KV bytes delivered == program_wire_bytes
+    of the planned broadcast EXACTLY, and every replica's paged blocks
+    are bit-identical to the relayout_ref oracle of the source rows."""
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=5, page_size=8)
+    server = Server(sc)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, server.cfg.vocab_size, size=16).astype(np.int32)
+    entry = server.register_prefix(prefix)
+
+    rec = entry.broadcast
+    program = plan_broadcast(
+        server.topo.num_nodes, 0, tuple(tuple(c) for c in server.plan.chains)
+    )
+    modeled = program_wire_bytes(program, int(entry.dense.nbytes))
+    assert rec["wire_bytes"] == rec["delivered_bytes"] == modeled
+    assert rec["bytes"] == entry.dense.nbytes
+    assert rec["replicas"] == 5
+    assert rec["speedup_vs_unicast"] >= 1.0
+    oracle = paged_ref(entry.dense, sc.page_size)
+    assert sorted(entry.replica_paged) == [0, 1, 2, 3, 4]
+    for blocks in entry.replica_paged.values():
+        np.testing.assert_array_equal(
+            blocks.view(np.uint8), oracle.view(np.uint8)
+        )
+    assert server.kv_multicast_log == [rec]
+
+
+def test_register_prefix_single_replica_is_noop_record():
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=1, page_size=8)
+    server = Server(sc)
+    entry = server.register_prefix(np.arange(8, dtype=np.int32))
+    rec = entry.broadcast
+    assert rec["noop"] and rec["delivered_bytes"] == rec["wire_bytes"] == 0
+    assert list(entry.replica_paged) == [0]  # source still has its pages
+
+
+def test_register_prefix_rejects_bad_lengths():
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=2, page_size=8)
+    server = Server(sc)
+    with pytest.raises(ValueError):  # not a multiple of the page
+        server.register_prefix(np.arange(12, dtype=np.int32))
+    with pytest.raises(ValueError):  # empty
+        server.register_prefix(np.zeros(0, np.int32))
+    with pytest.raises(ValueError):  # no decode headroom
+        server.register_prefix(np.arange(MAX_SEQ, dtype=np.int32))
+
+
+def test_prefix_hit_seeds_aligned_cache_rows():
+    """After a hit admission the slot's cache row equals a full prefill
+    of the same prompt: the prefix positions BIT-exactly (they are the
+    seeded multicast payload), the suffix positions to within a bf16
+    projection ulp (the suffix runs through the decode path — same math,
+    chunked differently). A position-misalignment bug would blow the
+    ulp-scale tolerance by orders of magnitude."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(5)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=3, page_size=8)
+    prefix = rng.integers(0, 256, size=16).astype(np.int32)
+    suffix = rng.integers(0, 256, size=5).astype(np.int32)
+    prompt = np.concatenate([prefix, suffix])
+    plen = int(prompt.size)
+
+    server = Server(sc)
+    server.register_prefix(prefix)
+    req = server.submit(prompt, 6)
+    server._admit()  # hit-path admission: seed prefix rows, decode suffix
+    assert req.prefix_hit and len(req.out) == 1
+
+    _, ref = server.slot_prefill(server.params, jnp.asarray(prompt)[None])
+    for got, want in zip(
+        jax.tree.leaves(server.cache["layers"]), jax.tree.leaves(ref["layers"])
+    ):
+        g = np.asarray(jax.device_get(got))[:, 0, :plen]
+        w = np.asarray(jax.device_get(want))[:, 0, :plen]
+        np.testing.assert_array_equal(  # seeded prefix rows: bit-exact
+            g[:, :16].view(np.uint8), w[:, :16].view(np.uint8)
+        )
+        np.testing.assert_allclose(  # decode-path suffix rows: ulp-close
+            g[:, 16:].astype(np.float32), w[:, 16:].astype(np.float32),
+            atol=0.05, rtol=0.05,
+        )
+
+
+def test_prefix_hit_serving_is_deterministic():
+    """The hit path (seed + suffix decode) is a fixed numeric program:
+    identical runs produce identical tokens, for both a strict-suffix
+    prompt and prompt == prefix (where the last prefix token re-feeds
+    through decode to produce the first output)."""
+    rng = np.random.default_rng(5)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=3, page_size=8)
+    prefix = rng.integers(0, 256, size=16).astype(np.int32)
+    suffix = rng.integers(0, 256, size=5).astype(np.int32)
+    for prompt in (np.concatenate([prefix, suffix]), prefix.copy()):
+        outs = []
+        for _ in range(2):
+            server = Server(sc)
+            server.register_prefix(prefix)
+            req = server.submit(prompt, 6)
+            server.run([req])
+            assert req.prefix_hit and len(req.out) == 6
+            outs.append(list(req.out))
+        assert outs[0] == outs[1], (prompt.size, outs)
+
+
+def test_serve_hit_rate_and_mixed_traffic():
+    rng = np.random.default_rng(9)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=3, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=3, page_size=8)
+    server = Server(sc)
+    prefix = rng.integers(0, 256, size=16).astype(np.int32)
+    server.register_prefix(prefix)
+    reqs = []
+    for i in range(6):
+        if i % 2 == 0:
+            prompt = np.concatenate(
+                [prefix, rng.integers(0, 256, size=4).astype(np.int32)]
+            )
+        else:
+            prompt = rng.integers(0, 256, size=20).astype(np.int32)
+            prompt[0] = (prefix[0] + 1) % 256
+        reqs.append(server.submit(prompt, 4, arrival=i))
+    out = server.run(reqs)
+    assert out["served"] == 6
+    assert all(len(r.out) == 4 for r in reqs)
+    assert [r.prefix_hit for r in reqs] == [True, False] * 3
+    assert out["prefix_hit_rate"] == pytest.approx(0.5)
+    assert out["latency_ticks_p99"] >= out["latency_ticks_p50"] > 0

@@ -154,3 +154,129 @@ def test_server_greedy_is_deterministic():
         server.run([req])
         outs.append(list(req.out))
     assert outs[0] == outs[1]
+
+
+def test_server_mid_decode_admission_keeps_inflight_output():
+    """ISSUE-7 regression: admitting a request mid-decode used to
+    re-prefill the WHOLE batch from truncated prompts, resetting the
+    global position and dropping every in-flight request's generated
+    context. With per-slot prefill + per-slot positions, an in-flight
+    request's tokens are identical whether or not another request is
+    admitted during its decode."""
+    rng = np.random.default_rng(7)
+    p1 = rng.integers(0, 256, size=8).astype(np.int32)
+    p2 = rng.integers(0, 256, size=6).astype(np.int32)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                     max_seq=48)
+
+    solo = Server(sc)
+    r_solo = solo.submit(p1, 10)
+    solo.run([r_solo])
+
+    server = Server(sc)
+    r1 = server.submit(p1, 10)
+    r2 = server.submit(p2, 10, arrival=4)  # lands mid-decode of r1
+    server.run([r1, r2])
+    assert r2.t_admit is not None and r2.t_admit >= 4
+    assert 0 < r2.t_admit < (r1.t_done or 99)  # genuinely mid-flight
+    assert len(r2.out) == 10
+    assert r_solo.out == r1.out  # in-flight output unchanged
+
+
+def test_server_per_slot_positions_no_global_cutoff():
+    """ISSUE-7 regression: the old ``pos >= max_seq - 1`` cutoff was
+    global, killing a late-admitted request after fewer than max_new
+    tokens. Positions are per-slot now: only the slot actually out of
+    room finishes."""
+    rng = np.random.default_rng(8)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                     max_seq=24)
+    server = Server(sc)
+    ra = server.submit(rng.integers(0, 256, size=8), 14)  # 8+14 = 22 < 24
+    rb = server.submit(rng.integers(0, 256, size=8), 14, arrival=10)
+    server.run([ra, rb])
+    assert len(ra.out) == 14
+    # admitted near ra's cutoff, still gets its full budget
+    assert len(rb.out) == 14
+    # a slot genuinely out of room finishes early — per-slot, not global
+    server2 = Server(sc)
+    rc = server2.submit(rng.integers(0, 256, size=8), 100)  # wants > room
+    rd = server2.submit(rng.integers(0, 256, size=8), 4, arrival=2)
+    server2.run([rc, rd])
+    assert len(rc.out) == 24 - 8  # clamped by ITS OWN max_seq room
+    assert len(rd.out) == 4  # neighbor unaffected
+
+
+def test_server_submit_rejects_overlong_prompt():
+    """ISSUE-7 regression: prompts longer than the admission window are
+    rejected at submit time, never silently truncated into a different
+    prompt; prompts at exactly the window still serve."""
+    rng = np.random.default_rng(3)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                     max_seq=48)
+    server = Server(sc)
+    with pytest.raises(ValueError, match="refusing to truncate"):
+        server.submit(rng.integers(0, 256, size=9), 4)
+    with pytest.raises(ValueError, match="empty"):
+        server.submit(np.zeros(0, np.int32), 4)
+    req = server.submit(rng.integers(0, 256, size=8), 4)  # at the limit
+    out = server.run([req])
+    assert req.done and len(req.out) == 4
+    assert out["served"] == 1
+
+
+def test_server_single_replica_broadcast_is_noop_record():
+    """ISSUE-7 regression: ``broadcast_weights`` with no destinations
+    (replicas=1, or scaled down to one survivor) used to log the full
+    payload bytes while delivering nothing. It now records a distinct
+    no-op: 0 chunks, 0 delivered bytes."""
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                     max_seq=48, replicas=1)
+    server = Server(sc)
+    rec = server.broadcast_weights()
+    assert rec["noop"] is True
+    assert rec["chunks"] == 0 and rec["delivered_bytes"] == 0
+    assert rec["bytes"] == 0 and rec["replicas"] == 1
+    assert server.last_delivery == {}
+
+    # same no-op after scaling a real replica set down to the head only
+    sc2 = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                      max_seq=48, replicas=3)
+    server2 = Server(sc2)
+    rec_full = server2.broadcast_weights()
+    assert rec_full.get("noop") is None and rec_full["delivered_bytes"] > 0
+    assert server2.scale_down(1) == (1, 2)
+    rec2 = server2.broadcast_weights()
+    assert rec2["noop"] is True and rec2["delivered_bytes"] == 0
+    assert server2.last_delivery == {}
+
+
+def test_server_scale_down_then_readmission_traffic():
+    """ISSUE-7: after replica loss the re-formed plan still streams full
+    weights byte-exactly to every survivor AND the serving loop keeps
+    admitting/recycling requests (continuous batching survives the
+    scale-down)."""
+    import jax
+
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=8,
+                     max_seq=48, replicas=5)
+    server = Server(sc)
+    flat, _ = jax.tree_util.tree_flatten(server.params)
+    payload = np.concatenate(
+        [np.ascontiguousarray(x).reshape(-1).view(np.uint8) for x in flat]
+    )
+    assert server.scale_down(3) == (3, 4)
+    rec = server.broadcast_weights(chunk_bytes=64 * 1024)
+    assert rec["delivered_bytes"] == 2 * payload.nbytes
+    assert sorted(server.last_delivery) == [1, 2]
+    for buf in server.last_delivery.values():
+        np.testing.assert_array_equal(buf, payload)  # byte-exact survivors
+
+    rng = np.random.default_rng(4)
+    reqs = [
+        server.submit(rng.integers(0, 256, size=8), 5, arrival=i)
+        for i in range(5)  # > batch -> admission + slot recycling
+    ]
+    out = server.run(reqs)
+    assert out["served"] == 5
+    assert all(r.done and len(r.out) == 5 for r in reqs)
