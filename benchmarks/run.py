@@ -18,6 +18,7 @@ from . import (
     bench_fig9_deepseek,
     bench_roofline,
     bench_serve,
+    bench_train,
 )
 
 BENCHES = [
@@ -28,6 +29,7 @@ BENCHES = [
     ("fig11 (area/power model)", bench_area_power),
     ("collectives (chain vs xla)", bench_collectives),
     ("serve (traffic + KV multicast)", bench_serve),
+    ("train (bucketed overlap reduce)", bench_train),
     ("roofline (dry-run table)", bench_roofline),
 ]
 

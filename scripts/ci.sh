@@ -6,11 +6,14 @@
 # oracle suites) for a fast inner loop — the default run keeps them.
 # QUICK=1 BENCH=1 keeps the fast lane honest about wire bytes: it runs
 # the self-contained bench_collectives subprocess (the ChainProgram
-# byte-prediction assertions for every collective × K) plus bench_serve
-# (the serving-traffic + KV-multicast self-consistency assertions)
-# instead of the full harness. Either BENCH path rewrites
-# BENCH_collectives.json and BENCH_serve.json — the per-benchmark
-# modeled-vs-actual bytes/latency records tracked across PRs.
+# byte-prediction assertions for every collective × K), bench_serve
+# (the serving-traffic + KV-multicast self-consistency assertions) and
+# bench_train (the bucketed-overlap reduce: modeled wire bytes ==
+# bucketed-path HLO bytes EXACTLY, modeled overlap < serial) instead
+# of the full harness. Either BENCH path rewrites
+# BENCH_collectives.json, BENCH_serve.json and BENCH_train.json — the
+# per-benchmark modeled-vs-actual bytes/latency records tracked
+# across PRs.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -27,6 +30,7 @@ if [[ "${BENCH:-0}" == "1" ]]; then
     if [[ "${QUICK:-0}" == "1" ]]; then
         python -m benchmarks.bench_collectives
         python -m benchmarks.bench_serve
+        python -m benchmarks.bench_train
     else
         python -m benchmarks.run
     fi

@@ -643,6 +643,67 @@ def all_reduce_latency(
     return out
 
 
+def overlap_timeline(
+    ready_cc: Sequence[int], comm_cc: Sequence[int]
+) -> dict[str, object]:
+    """Modeled compute/communication timeline of a bucketed,
+    backward-overlapped step (the simulator's first whole-step price —
+    everything before this models a lone collective).
+
+    ``ready_cc[i]`` is when bucket i's last gradient leaf exists (its
+    compute availability, in NoC cycles — cumulative backward-segment
+    estimates from ``launch.roofline.bucket_ready_cc``), nondecreasing
+    in dispatch (reverse-topological) order; ``comm_cc[i]`` is that
+    bucket's chain all-reduce latency (``program_latency`` /
+    ``all_reduce_latency``). Buckets serialize on the NoC — one cfg
+    port, one outgoing stream per device — so bucket i starts at
+    ``max(ready[i], finish[i-1])``:
+
+    * ``overlap_cc``  — finish of the last bucket (modeled overlapped
+      step time: comm runs behind the remaining backward);
+    * ``serial_cc``   — ``ready[-1] + sum(comm)`` (the per-leaf status
+      quo: every reduction waits for the whole backward);
+    * ``hidden_cc``   — serial − overlapped = comm hidden behind compute;
+    * ``efficiency``  — hidden / total comm (1.0 = fully hidden; 0.0 =
+      nothing overlapped, e.g. a single bucket).
+    """
+    ready = [int(r) for r in ready_cc]
+    comm = [int(c) for c in comm_cc]
+    if len(ready) != len(comm):
+        raise ValueError(
+            f"{len(ready)} ready times for {len(comm)} comm latencies"
+        )
+    if any(r < 0 for r in ready) or any(c < 0 for c in comm):
+        raise ValueError("ready/comm cycles must be non-negative")
+    if any(a > b for a, b in zip(ready, ready[1:])):
+        raise ValueError(
+            "ready_cc must be nondecreasing (dispatch order = "
+            "reverse-topological bucket order)"
+        )
+    start, finish = [], []
+    t = 0
+    for r, c in zip(ready, comm):
+        t = max(r, t)
+        start.append(t)
+        t += c
+        finish.append(t)
+    compute_cc = ready[-1] if ready else 0
+    overlap = max(compute_cc, finish[-1] if finish else 0)
+    total_comm = sum(comm)
+    serial = compute_cc + total_comm
+    hidden = serial - overlap
+    return {
+        "overlap_cc": overlap,
+        "serial_cc": serial,
+        "hidden_cc": hidden,
+        "comm_cc": total_comm,
+        "compute_cc": compute_cc,
+        "efficiency": (hidden / total_comm) if total_comm else 0.0,
+        "start_cc": start,
+        "finish_cc": finish,
+    }
+
+
 def choose_num_chains(
     topo: MeshTopology,
     src: int,
@@ -655,6 +716,7 @@ def choose_num_chains(
     collective: str = "broadcast",
     algo: str = "rs_ag",
     wire_dtype: str | None = None,
+    buckets: Sequence[tuple[int, int]] | None = None,
     detail: bool = False,
 ) -> tuple[int, list[list[int]]] | dict[str, object]:
     """Pick K (1..max_chains) minimizing the calibrated model; ties go
@@ -686,7 +748,20 @@ def choose_num_chains(
     uncompressed frames). A concrete ``algo``/``wire_dtype`` pins that
     dimension. Ties keep the earlier candidate: fewer chains, then
     ``rs_ag``, then the uncompressed wire.
+
+    ``buckets`` (``collective="all_reduce"`` only) switches to the
+    bucket-aware STEP-time mode: a sequence of ``(ready_cc,
+    size_bytes)`` per bucket in dispatch order, and every (K, algo,
+    wire_dtype) candidate is scored by :func:`overlap_timeline`'s
+    ``overlap_cc`` — the modeled overlapped step time over ALL buckets
+    — instead of one collective's latency (``size_bytes`` is then
+    ignored). ``detail=True`` adds ``step_cc`` and the winning
+    ``timeline``.
     """
+    if buckets is not None and collective != "all_reduce":
+        raise ValueError(
+            f'buckets= requires collective="all_reduce", got {collective!r}'
+        )
     dsts = list(dict.fromkeys(dsts))
     if collective == "broadcast":
         if not dsts:
@@ -744,17 +819,30 @@ def choose_num_chains(
                 program = plan_ring_collective(
                     collective, topo.num_nodes, rings, algo=a, wire_dtype=w
                 )
-                lat = program_latency(topo, src, program, size_bytes, p)
+                if buckets is not None:
+                    comms = [
+                        program_latency(topo, src, program, sb, p)
+                        for _, sb in buckets
+                    ]
+                    tl = overlap_timeline([r for r, _ in buckets], comms)
+                    lat = int(tl["overlap_cc"])
+                else:
+                    tl = None
+                    lat = program_latency(topo, src, program, size_bytes, p)
                 assert isinstance(lat, int)
                 if best is None or lat < best[0]:
-                    best = (lat, k, rings, a, w)
+                    best = (lat, k, rings, a, w, tl)
     assert best is not None  # k=1 always divides
     if detail:
-        return {
+        out: dict[str, object] = {
             "num_chains": best[1], "rings": best[2],
             "algo": best[3] if collective == "all_reduce" else None,
             "wire_dtype": best[4], "latency_cc": best[0],
         }
+        if buckets is not None:
+            out["step_cc"] = best[0]
+            out["timeline"] = best[5]
+        return out
     return best[1], best[2]
 
 

@@ -1,10 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this produces, WITHOUT allocating model memory
@@ -24,6 +17,7 @@ Results land in ``experiments/dryrun/<mesh>/<arch>__<shape>.json``.
 
 import argparse
 import json
+import os
 import subprocess
 import sys
 import time
@@ -33,7 +27,9 @@ import traceback
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              collectives: str = "xla", remat: str = "dots",
              variant: str = "baseline", num_chains: int | str = 1,
-             ar_algo: str = "rs_ag", compress_grads: bool = False) -> dict:
+             ar_algo: str = "rs_ag", compress_grads: bool = False,
+             bucket_bytes: int | None = None,
+             overlap: bool = False) -> dict:
     import jax
 
     from repro import configs as C
@@ -46,7 +42,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "collectives": collectives, "remat": remat, "variant": variant,
         "num_chains": num_chains, "ar_algo": ar_algo,
-        "compress_grads": compress_grads,
+        "compress_grads": compress_grads, "bucket_bytes": bucket_bytes,
     }
     if not ok:
         rec.update(status="skipped", reason=reason)
@@ -57,10 +53,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
     cell = build_cell(arch, shape_name, mesh, collectives=collectives,
                       num_chains=num_chains, ar_algo=ar_algo,
                       remat=remat, variant=variant,
-                      compress_grads=compress_grads)
+                      compress_grads=compress_grads,
+                      bucket_bytes=bucket_bytes)
     rec["num_chains"] = cell.num_chains  # effective K (VARIANTS resolved)
     rec["ar_algo"] = cell.ar_algo
     rec["compress_grads"] = cell.compress_grads
+    rec["bucket_bytes"] = cell.bucket_bytes
     lowered = cell.lower()
     t1 = time.time()
     compiled = lowered.compile()
@@ -90,6 +88,27 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         hlo_flops_global=flops_global,
         useful_flops_ratio=(mf / flops_global) if flops_global else None,
     )
+    if overlap:
+        # Modeled bucketed-overlap timeline + HLO async/interleaving
+        # evidence.  Prices the inner "data"-axis ring stage (the only
+        # stage on single-pod meshes, where the model is exact).
+        from repro.launch.hlo_breakdown import overlap_stats
+        from repro.models import transformer as T
+
+        leaves = jax.tree.leaves(
+            jax.eval_shape(lambda: T.model_init(jax.random.PRNGKey(0), cfg))
+        )
+        bb = cell.bucket_bytes or (4 << 20)
+        rec["overlap_model"] = R.modeled_train_overlap(
+            leaves,
+            int(mesh.shape["data"]),
+            max(1, tokens // chips),
+            bucket_bytes=bb,
+            num_chains=cell.num_chains,
+            algo=cell.ar_algo,
+            wire_dtype="int8" if cell.compress_grads else None,
+        )
+        rec["hlo_overlap"] = overlap_stats(compiled.as_text())
     return rec
 
 
@@ -131,6 +150,14 @@ def _mem_dict(mem) -> dict:
 
 
 def main() -> None:
+    # CLI-only: fake a 512-device host platform BEFORE the jax backend
+    # initializes (set here, not at import, so importing this module for
+    # _cell_suffix etc. never changes the caller's device count; --all
+    # workers re-run main() in their own process and set it themselves)
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
     p = argparse.ArgumentParser()
     p.add_argument("--arch")
     p.add_argument("--shape")
@@ -154,6 +181,14 @@ def main() -> None:
     p.add_argument("--compress-grads", action="store_true", default=False,
                    help="int8 wire for the DP gradient all-reduce "
                         "(requires --collectives torrent)")
+    p.add_argument("--bucket-mb", type=float, default=None,
+                   help="bucket size (MiB) for the bucketed, backward-"
+                        "overlapped DP grad reduce (requires "
+                        "--collectives torrent)")
+    p.add_argument("--overlap", action="store_true", default=False,
+                   help="emit the modeled bucketed-overlap timeline "
+                        "(roofline.modeled_train_overlap) and HLO "
+                        "async/interleaving counts in the record")
     p.add_argument("--out", default="experiments/dryrun")
     p.add_argument("--all", action="store_true")
     p.add_argument("--meshes", default="single,multi")
@@ -187,6 +222,10 @@ def main() -> None:
             collectives=args.collectives, remat=args.remat,
             variant=args.variant, num_chains=args.num_chains,
             ar_algo=args.ar_algo, compress_grads=args.compress_grads,
+            bucket_bytes=(
+                int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None
+            ),
+            overlap=args.overlap,
         )
     except Exception:
         rec = {
@@ -229,6 +268,9 @@ def _cell_suffix(args) -> str:
         suffix += f"__{args.ar_algo}"
     if args.compress_grads:
         suffix += "__int8"
+    mb = getattr(args, "bucket_mb", 0)
+    if mb:
+        suffix += f"__b{int(mb) if mb == int(mb) else mb}MB"
     if args.variant != "baseline":
         suffix += f"__{args.variant}"
     if args.remat != "dots":
@@ -253,6 +295,10 @@ def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
     ]
     if args.compress_grads:
         cmd.append("--compress-grads")
+    if args.bucket_mb:
+        cmd += ["--bucket-mb", str(args.bucket_mb)]
+    if args.overlap:
+        cmd.append("--overlap")
     print("::", " ".join(cmd[3:]), flush=True)
     try:
         r = subprocess.run(cmd, timeout=args.timeout)

@@ -11,14 +11,8 @@ op it is attacking and by how much.
 
 from __future__ import annotations
 
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 import argparse
+import os
 from collections import defaultdict
 
 from repro.launch import hlo_cost
@@ -70,7 +64,79 @@ def breakdown(hlo_text: str) -> tuple[list, dict, dict]:
     return items, dict(by_op_bytes), dict(by_op_flops)
 
 
+# opcodes that count as "real compute" between two collectives when
+# measuring interleaving (fusions and contractions — the ops backward
+# segments are made of after XLA fusion).
+_COMPUTE_OPS = {"fusion", "dot", "convolution"}
+
+
+def overlap_stats(hlo_text: str) -> dict[str, int]:
+    """Scheduling-order overlap evidence from the compiled module — the
+    HLO side of the bucketed-reduce overlap story (the modeled side is
+    ``core.simulator.overlap_timeline``).
+
+    Walks every computation's instruction list IN PROGRAM ORDER and
+    counts:
+
+    * ``async_start`` / ``async_done`` — async collective pair halves
+      (``collective-permute-start`` etc.); a start that is not
+      immediately followed by its done means XLA scheduled other work
+      inside the collective's shadow;
+    * ``max_in_flight`` — the deepest start-without-done nesting seen
+      in one computation (> 1 = truly concurrent collectives);
+    * ``collectives`` — collective ops total (``-done`` halves not
+      double-counted);
+    * ``interleavings`` — collective → compute (fusion/dot) → collective
+      transitions: how many collective gaps have real compute scheduled
+      inside them. Per-leaf serial reduction tails show ~0 compute
+      between collectives; the bucketed dispatch order leaves backward
+      fusions between bucket reduces.
+    """
+    comps = hlo_cost.parse_module(hlo_text)
+    stats = {
+        "async_start": 0, "async_done": 0, "collectives": 0,
+        "interleavings": 0, "max_in_flight": 0,
+    }
+    for comp in comps.values():
+        in_flight = 0
+        seen_collective = False
+        compute_since = False
+        for instr in comp.instrs:
+            op = instr.opcode
+            base = op
+            if base.endswith("-start"):
+                base = base[:-6]
+            elif base.endswith("-done"):
+                base = base[:-5]
+            if base in hlo_cost.COLLECTIVE_KINDS:
+                if op.endswith("-start"):
+                    stats["async_start"] += 1
+                    in_flight += 1
+                    stats["max_in_flight"] = max(
+                        stats["max_in_flight"], in_flight
+                    )
+                elif op.endswith("-done"):
+                    stats["async_done"] += 1
+                    in_flight = max(0, in_flight - 1)
+                    continue  # counted at -start
+                if seen_collective and compute_since:
+                    stats["interleavings"] += 1
+                stats["collectives"] += 1
+                seen_collective = True
+                compute_since = False
+            elif op in _COMPUTE_OPS:
+                compute_since = True
+    return stats
+
+
 def main() -> None:
+    # CLI-only: fake a 512-device host platform BEFORE the jax backend
+    # initializes (set here, not at import, so importing this module for
+    # overlap_stats/breakdown never changes the caller's device count)
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
     p = argparse.ArgumentParser()
     p.add_argument("--arch", required=True)
     p.add_argument("--shape", required=True)

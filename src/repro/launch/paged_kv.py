@@ -149,29 +149,78 @@ class PrefixEntry:
     paged: np.ndarray  # (npages, page, F) bf16 — source paged layout
     replica_paged: dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
     broadcast: dict | None = None  # the plan_broadcast record (see serve)
+    version: int = 0  # weights version the KV was prefilled under
+    last_used: int = 0  # cache-recency tick (LRU bookkeeping)
 
     @property
     def plen(self) -> int:
         return int(self.tokens.size)
 
+    @property
+    def nbytes(self) -> int:
+        """HBM the cached prefix pins: source dense + paged layouts plus
+        every replica's paged copy."""
+        return (
+            int(self.dense.nbytes)
+            + int(self.paged.nbytes)
+            + sum(int(p.nbytes) for p in self.replica_paged.values())
+        )
+
 
 class PrefixCache:
-    """Longest-prefix lookup over registered prompt prefixes."""
+    """Longest-prefix lookup over registered prompt prefixes, with a
+    byte-capacity bound (LRU eviction) and version-tagged invalidation.
 
-    def __init__(self) -> None:
+    * ``capacity_bytes=None`` (default) is unbounded — the pre-eviction
+      behaviour. With a bound, :meth:`add` evicts least-recently-used
+      entries (lookup hits refresh recency) until the cache fits; a
+      single entry larger than the bound is itself rejected.
+    * Entries are stamped with ``weights_version`` at :meth:`add`; a
+      weight refresh (`serve.Server.broadcast_weights` with new params)
+      calls :meth:`on_weights_update`, which bumps the version and drops
+      every stale entry — cached KV prefilled under old weights would
+      silently decode garbage.
+    """
+
+    def __init__(self, capacity_bytes: int | None = None) -> None:
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError(f"capacity_bytes must be positive, got {capacity_bytes}")
+        self.capacity_bytes = capacity_bytes
         self.entries: list[PrefixEntry] = []
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+        self.weights_version = 0
+        self._tick = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries)
+
+    def _touch(self, entry: PrefixEntry) -> None:
+        self._tick += 1
+        entry.last_used = self._tick
 
     def add(self, entry: PrefixEntry) -> None:
+        entry.version = self.weights_version
+        self._touch(entry)
         self.entries.append(entry)
+        if self.capacity_bytes is not None:
+            while self.total_bytes > self.capacity_bytes and self.entries:
+                lru = min(self.entries, key=lambda e: e.last_used)
+                self.entries.remove(lru)
+                self.evictions += 1
 
     def lookup(self, prompt: np.ndarray) -> PrefixEntry | None:
         """Longest registered prefix that ``prompt`` starts with (counted
-        as a hit/miss for the serving stats)."""
+        as a hit/miss for the serving stats). A hit refreshes the
+        entry's LRU recency."""
         prompt = np.asarray(prompt)
         best = None
         for e in self.entries:
+            if e.version != self.weights_version:
+                continue  # stale KV: never serve across a weight refresh
             if e.plen <= prompt.size and np.array_equal(prompt[: e.plen], e.tokens):
                 if best is None or e.plen > best.plen:
                     best = e
@@ -179,7 +228,20 @@ class PrefixCache:
             self.misses += 1
         else:
             self.hits += 1
+            self._touch(best)
         return best
+
+    def on_weights_update(self) -> int:
+        """New weights arrived: bump the version and invalidate every
+        entry prefilled under an older one. Returns the count dropped."""
+        self.weights_version += 1
+        stale = [e for e in self.entries if e.version != self.weights_version]
+        if stale:
+            self.entries = [
+                e for e in self.entries if e.version == self.weights_version
+            ]
+            self.invalidations += len(stale)
+        return len(stale)
 
     @property
     def hit_rate(self) -> float:

@@ -181,3 +181,132 @@ def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
     """6·N·D training / 2·N·D inference forward (per step, global)."""
     mult = 6.0 if kind == "train" else 2.0
     return mult * n_params_active * tokens
+
+
+# -- backward-segment compute availability (the overlap model's input) ------
+
+
+def backward_flops(n_params: int, tokens: int) -> float:
+    """Backward-pass FLOPs attributable to ``n_params`` parameters:
+    4·N·D of the 6·N·D training total (2·N·D activation grads + 2·N·D
+    weight grads; the forward 2·N·D happens before any gradient
+    exists, so only the backward share gates bucket readiness)."""
+    return 4.0 * n_params * tokens
+
+
+def noc_cycles(seconds: float, link_bw: int = 64) -> int:
+    """Seconds -> NoC cycles at the modeled clock. The simulator's
+    cycle moves ``link_bw`` bytes per link (``SimParams.link_bw``) and
+    the roofline's link moves ``ICI_BW`` bytes/s, so one cycle is
+    ``link_bw / ICI_BW`` seconds — the bridge that lets roofline
+    compute estimates and ``program_latency`` share one time base."""
+    return int(round(seconds * ICI_BW / link_bw))
+
+
+def bucket_ready_cc(
+    bucket_params: "list[int]",
+    tokens: int,
+    *,
+    peak_flops: float = PEAK_FLOPS,
+    link_bw: int = 64,
+) -> list[int]:
+    """Per-bucket compute availability times, in NoC cycles, for
+    ``core.simulator.overlap_timeline`` / ``choose_num_chains(buckets=)``.
+
+    ``bucket_params[i]`` is the parameter count of bucket i in dispatch
+    (reverse-topological) order. Backward produces the LAST parameters'
+    gradients first, so bucket i is ready once the backward segments of
+    buckets 0..i have run: ready[i] = cumulative
+    ``backward_flops(segment) / peak_flops`` — nondecreasing by
+    construction, as ``overlap_timeline`` requires. Per-device tokens
+    should be passed when the comm latencies are per-device too."""
+    out: list[int] = []
+    acc = 0.0
+    for n in bucket_params:
+        acc += backward_flops(int(n), tokens) / peak_flops
+        out.append(noc_cycles(acc, link_bw))
+    return out
+
+
+def modeled_train_overlap(
+    leaves,
+    axis_size: int,
+    tokens: int,
+    *,
+    bucket_bytes: int,
+    num_chains="auto",
+    algo: str = "rs_ag",
+    wire_dtype: "str | None" = None,
+    scheduler: str = "tsp",
+    max_chains: int = 4,
+) -> dict:
+    """End-to-end modeled step timeline of the bucketed,
+    backward-overlapped DP gradient reduction — the composition of
+    bucket assembly (``parallel.collectives.assign_buckets``), the
+    backward-segment compute availability estimates
+    (:func:`bucket_ready_cc`) and the chain all-reduce cost model
+    (``core.simulator.all_reduce_latency``), fed through
+    ``core.simulator.overlap_timeline``.
+
+    ``leaves`` are the gradient leaves (arrays or ShapeDtypeStructs, in
+    tree-flatten order); ``axis_size`` the DP ring size; ``tokens`` the
+    per-device tokens per step (comm latencies are per-device too).
+    Each bucket resolves its OWN (K, rings) from its bytes — the same
+    ``resolve_ring_chains`` the executor uses — and is priced at its
+    chunk-aligned padded payload (``bucket_shard_layout``), so the
+    modeled wire bytes match the HLO parse of the bucketed step
+    EXACTLY (asserted in benchmarks/bench_train.py).
+
+    Returns ``{"buckets": [...], "timeline": overlap_timeline(...),
+    "total_wire_bytes", "serial_cc", "overlap_cc", "efficiency"}``.
+    """
+    import math as _math
+
+    import numpy as _np
+
+    from repro.core import program as _prg
+    from repro.core import simulator as _sim
+    from repro.core.topology import MeshTopology as _Topo
+    from repro.parallel import collectives as _col
+
+    buckets = _col.assign_buckets(leaves, bucket_bytes)
+    topo = _Topo(axis_size, 1)
+    ready = bucket_ready_cc(
+        [
+            sum(_math.prod(leaves[i].shape) for i in b.indices)
+            for b in buckets
+        ],
+        tokens,
+    )
+    recs, comms = [], []
+    for b, r in zip(buckets, ready):
+        k, rings = _col.resolve_ring_chains(
+            axis_size, b.num_bytes, num_chains=num_chains,
+            scheduler=scheduler, algo=algo, wire_dtype=wire_dtype,
+            max_chains=max_chains,
+        )
+        shards = _col.all_reduce_shards(axis_size, k, algo)
+        sizes = [_math.prod(leaves[i].shape) for i in b.indices]
+        _, total_elems = _col.bucket_shard_layout(sizes, shards)
+        padded_bytes = total_elems * _np.dtype(b.dtype).itemsize
+        program = _prg.plan_all_reduce(
+            axis_size, rings, algo, wire_dtype=wire_dtype
+        )
+        comm = _sim.program_latency(topo, 0, program, padded_bytes)
+        wire = program.wire_bytes(padded_bytes)
+        comms.append(int(comm))
+        recs.append({
+            "leaves": len(b.indices), "dtype": b.dtype,
+            "bytes": b.num_bytes, "padded_bytes": int(padded_bytes),
+            "num_chains": k, "shards": shards, "ready_cc": int(r),
+            "comm_cc": int(comm), "wire_bytes": int(wire),
+        })
+    tl = _sim.overlap_timeline(ready, comms)
+    return {
+        "buckets": recs,
+        "timeline": tl,
+        "total_wire_bytes": sum(r["wire_bytes"] for r in recs),
+        "serial_cc": tl["serial_cc"],
+        "overlap_cc": tl["overlap_cc"],
+        "efficiency": tl["efficiency"],
+    }

@@ -99,6 +99,7 @@ class ServeConfig:
     eos: int = -1  # -1: run to max_new
     replicas: int = 4  # model replicas for weight/KV multicast
     page_size: int = 8  # KV page height (positions per paged block)
+    prefix_cache_bytes: int | None = None  # None = unbounded, else LRU
     seed: int = 0
 
 
@@ -128,24 +129,35 @@ class Server:
         )
         self.multicast_log: list[dict] = []
         self.last_delivery: dict[int, np.ndarray] = {}
-        self.prefix_cache = PrefixCache()
+        self.prefix_cache = PrefixCache(capacity_bytes=sc.prefix_cache_bytes)
         self.kv_multicast_log: list[dict] = []
 
     # -- the paper's host-side P2MP: weight refresh to replicas ----------
-    def broadcast_weights(self, chunk_bytes: int = 1 << 20) -> dict:
+    def broadcast_weights(self, chunk_bytes: int = 1 << 20,
+                          new_params=None) -> dict:
         """Multicast the FULL parameter tree to every surviving replica
         down the persistent plan's sub-chains, ``chunk_bytes`` at a
         time. The logged ``bytes`` is asserted against the params' true
         nbytes — the record describes a real weight refresh. With no
         surviving destinations (``replicas=1``) nothing moves and the
         record says so: a distinct no-op with 0 chunks / 0 delivered
-        bytes, never a phantom full-payload claim."""
+        bytes, never a phantom full-payload claim.
+
+        ``new_params`` replaces the served weights before streaming and
+        version-invalidates the prefix cache (cached KV was prefilled
+        under the old weights); re-broadcasting unchanged weights —
+        e.g. the refresh at ``run()`` start — keeps entries valid.
+        ``prefix_invalidated`` in the record counts what was dropped."""
+        invalidated = 0
+        if new_params is not None:
+            self.params = new_params
+            invalidated = self.prefix_cache.on_weights_update()
         dests = self.plan.survivors
         if not dests:
             rec = {
                 "bytes": 0, "delivered_bytes": 0, "chunks": 0,
                 "replicas": 1, "cycles": 0, "speedup_vs_unicast": 1.0,
-                "noop": True,
+                "noop": True, "prefix_invalidated": invalidated,
             }
             self.last_delivery = {}
             self.multicast_log.append(rec)
@@ -187,6 +199,7 @@ class Server:
             "replicas": len(dests) + 1,
             "cycles": cycles,
             "speedup_vs_unicast": unicast / cycles if cycles else 1.0,
+            "prefix_invalidated": invalidated,
         }
         if rec["bytes"] != true_nbytes:
             raise AssertionError(
@@ -456,6 +469,10 @@ class Server:
             "wall_s": wall,
             "tokens_per_s": toks / wall if wall else 0.0,
             "prefix_hit_rate": self.prefix_cache.hit_rate,
+            "prefix_entries": len(self.prefix_cache.entries),
+            "prefix_bytes": self.prefix_cache.total_bytes,
+            "prefix_evictions": self.prefix_cache.evictions,
+            "prefix_invalidations": self.prefix_cache.invalidations,
             "latency_ticks_p50": float(np.percentile(lat, 50)) if lat else 0.0,
             "latency_ticks_p99": float(np.percentile(lat, 99)) if lat else 0.0,
             "weight_multicast": self.multicast_log[-1] if self.multicast_log else None,

@@ -43,6 +43,7 @@ class Cell:
     num_chains: int | str = 1  # effective K after VARIANTS resolution ("auto" = model-picked)
     ar_algo: str = "rs_ag"  # multi-ring all-reduce schedule (rs_ag | rotation)
     compress_grads: bool = False  # int8 wire on the DP grad reduction
+    bucket_bytes: int | None = None  # bucketed backward-overlapped reduce
 
     def lower(self):
         jitted = jax.jit(
@@ -92,6 +93,7 @@ def make_train_step(
     ar_algo: str = "rs_ag",
     compress_grads: bool = False,
     error_feedback: bool = False,
+    bucket_bytes: int | None = None,
     mesh=None,
     batch_specs=None,
     loss_chunks: int = 8,
@@ -113,6 +115,17 @@ def make_train_step(
     bandwidth-optimal default, or ``"rotation"``). Both are sweepable
     next to ``collectives=`` from the dry-run CLI (``--num-chains``,
     ``--ar-algo``) and via ``VARIANTS`` bundles.
+
+    ``bucket_bytes`` (``collectives="torrent"`` only) switches the DP
+    reduction to bucketed, backward-overlapped dispatch: gradient
+    leaves group into size-targeted dtype-uniform buckets
+    (``parallel.collectives.assign_buckets``) and each bucket issues
+    ONE chain all-reduce in reverse-topological order — the first
+    buckets' collectives are emitted before the fusions producing the
+    remaining gradients, so XLA's scheduler can run them behind the
+    rest of backward (evidence: ``launch.hlo_breakdown.overlap_stats``;
+    modeled timeline: ``core.simulator.overlap_timeline``). Composes
+    with ``num_chains``/``ar_algo``/``compress_grads``.
 
     ``compress_grads`` ships the DP gradient reduction int8-quantized
     per wire hop (``torrent_grad_reduce(wire_dtype="int8")``) — it
@@ -139,6 +152,12 @@ def make_train_step(
             "error_feedback with microbatches > 1 is not supported: the "
             "residual is per wire reduction, not per accumulation step"
         )
+    if bucket_bytes is not None and collectives != "torrent":
+        raise ValueError(
+            'bucket_bytes requires collectives="torrent" (bucketed '
+            "dispatch is a property of the Chainwrite reduction; the "
+            "XLA backend buckets internally)"
+        )
     wire_dtype = "int8" if compress_grads else None
 
     def grad_fn_local(params, batch):
@@ -153,7 +172,7 @@ def make_train_step(
             return torrent_grad_reduce(
                 grad_fn_local, mesh, batch_specs,
                 num_chains=num_chains, algo=ar_algo,
-                wire_dtype=wire_dtype,
+                wire_dtype=wire_dtype, bucket_bytes=bucket_bytes,
             )(params, batch)
         return grad_fn_local(params, batch)
 
@@ -162,6 +181,7 @@ def make_train_step(
             grad_fn_local, mesh, batch_specs,
             num_chains=num_chains, algo=ar_algo,
             wire_dtype=wire_dtype, error_feedback=True,
+            bucket_bytes=bucket_bytes,
         )
 
         def train_step_ef(params, opt_state, ef_state, batch):
@@ -291,6 +311,16 @@ VARIANTS: dict[str, dict] = {
     "int8-ar-k2": {"compress_grads": True, "num_chains": 2},
     # Torrent EP MoE with int8-quantized token dispatch/return.
     "moe-ep-int8": {"moe_ep_dispatch": True, "moe_ep_int8_wire": True},
+    # bucketed, backward-overlapped DP grad reduce: 4 MiB dtype-grouped
+    # buckets dispatched in reverse-topological order, model-picked K
+    # per bucket; collectives="torrent" only.
+    "bucketed": {"bucket_bytes": 4 << 20, "num_chains": "auto"},
+    # bucketed dispatch with the int8 wire — buckets, compression and
+    # auto-K compose (each prices the compressed bucket bytes).
+    "bucketed-int8": {
+        "bucket_bytes": 4 << 20, "num_chains": "auto",
+        "compress_grads": True,
+    },
     # opt + query-sequence-sharded attention (heads ∤ TP archs).
     "opt-seq": {
         "attn_impl": "chunked", "mla_absorb": True,
@@ -309,6 +339,7 @@ def build_cell(
     num_chains: int | str = 1,
     ar_algo: str = "rs_ag",
     compress_grads: bool = False,
+    bucket_bytes: int | None = None,
     remat: str = "dots",
     smoke: bool = False,
     variant: str = "baseline",
@@ -339,6 +370,14 @@ def build_cell(
                 f"compress_grads={compress_grads} was passed explicitly"
             )
         compress_grads = variant_cg
+    variant_bb = overrides.pop("bucket_bytes", None)
+    if variant_bb is not None:
+        if bucket_bytes not in (None, variant_bb):
+            raise ValueError(
+                f"variant {variant!r} sets bucket_bytes={variant_bb} but "
+                f"bucket_bytes={bucket_bytes} was passed explicitly"
+            )
+        bucket_bytes = variant_bb
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = C.SHAPES[shape_name]
@@ -363,7 +402,7 @@ def build_cell(
         step = make_train_step(
             cfg, opt_cfg, remat=remat, collectives=collectives,
             num_chains=num_chains, ar_algo=ar_algo,
-            compress_grads=compress_grads,
+            compress_grads=compress_grads, bucket_bytes=bucket_bytes,
             mesh=mesh, batch_specs=bspecs_clean,
         )
         return Cell(
@@ -379,6 +418,7 @@ def build_cell(
             num_chains=num_chains,
             ar_algo=ar_algo,
             compress_grads=compress_grads,
+            bucket_bytes=bucket_bytes,
         )
 
     if shape.kind == "prefill":

@@ -51,6 +51,7 @@ class TrainConfig:
     warmup_steps: int = 20
     collectives: str = "xla"  # "xla" | "torrent"
     compress_grads: bool = False
+    bucket_bytes: int | None = None  # bucketed backward-overlapped reduce
     remat: str = "dots"
     loss_chunks: int = 4
     microbatches: int = 1  # gradient accumulation (HBM-fit lever)
@@ -129,6 +130,7 @@ class Trainer:
             collectives=tc.collectives,
             compress_grads=tc.compress_grads,
             error_feedback=tc.compress_grads,
+            bucket_bytes=tc.bucket_bytes,
             mesh=mesh,
             batch_specs={
                 k: _sanitize(v, mesh) for k, v in bspecs.items()
@@ -238,6 +240,10 @@ def main(argv=None) -> dict:
                    help="int8 wire for the DP gradient all-reduce with "
                         "error-feedback residuals (requires --collectives "
                         "torrent)")
+    p.add_argument("--bucket-mb", type=float, default=None,
+                   help="bucket size (MiB) for the bucketed, backward-"
+                        "overlapped DP grad reduce (requires --collectives "
+                        "torrent)")
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--remat", default="dots")
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -251,6 +257,9 @@ def main(argv=None) -> dict:
         arch=args.arch, smoke=args.smoke, steps=args.steps,
         global_batch=args.batch, seq_len=args.seq, peak_lr=args.lr,
         collectives=args.collectives, compress_grads=args.compress_grads,
+        bucket_bytes=(
+            int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None
+        ),
         tp=args.tp, remat=args.remat,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         fail_at=tuple(int(s) for s in args.fail_at.split(",") if s),

@@ -36,7 +36,28 @@ stays GSPMD-managed. Options mirror the paper's knobs:
   local residual of the lossy wire and adds it back into the next
   step's gradient before compression, restoring convergence. Requires
   a lossy ``wire_dtype``; state rides as an explicit residual pytree
-  (``ef_residual_init`` / ``ef_residual_specs``).
+  (``ef_residual_init`` / ``ef_residual_specs``);
+* ``bucket_bytes`` — bucketed, backward-overlapped reduction: gradient
+  leaves are partitioned into size-targeted, dtype-grouped buckets
+  (:func:`assign_buckets`) walked in REVERSE leaf order — the
+  reverse-topological approximation of backward production order — and
+  each bucket is reduced as ONE chain all-reduce over a chunk-aligned
+  flat payload (:func:`bucket_shard_layout`), so the per-collective cfg
+  overhead is amortized over many leaves and the first buckets' chains
+  can run while the rest of backward is still producing gradients
+  (dispatch-order scheduling; XLA is free to interleave each bucket's
+  collective with the remaining backward fusions — the overlap
+  evidence is counted by ``launch.hlo_breakdown.overlap_stats`` and
+  the modeled timeline lives in ``core.simulator.overlap_timeline``).
+  Chunk alignment keeps every element's ring fold order identical to
+  the per-leaf reduce, so the bucketed path is BIT-identical at the
+  exact (f32) wire (fold-order identity is pinned against the numpy
+  twin; compiled artifacts can still pick up 1-ulp excess precision
+  when XLA FMA-contracts the gradient producer into the combine adds —
+  a backend freedom independent of bucketing); it composes with
+  ``num_chains="auto"`` (K resolved per bucket from the bucket's
+  bytes), ``algo``, ``hierarchical`` and ``compress_grads`` (per-leaf
+  EF residuals, bucketed int8 wire).
 
 Since the ChainProgram refactor the OTHER ring collectives are exposed
 through the same seam: ``torrent_all_to_all`` (the MoE expert-dispatch
@@ -48,8 +69,10 @@ and ``torrent_all_gather`` each accept ``num_chains`` and route through
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Callable
+import math
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -287,6 +310,124 @@ def auto_ring_chains(
     return k, tuple(tuple(r) for r in rings)
 
 
+# ---------------------------------------------------------------------------
+# Bucket assembly (backward-overlapped gradient reduction)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GradBucket:
+    """One reduction bucket: the leaf indices it owns (positions in the
+    flattened gradient tree, descending = reverse-topological dispatch
+    order), their common dtype, and their total unpadded bytes."""
+
+    indices: tuple[int, ...]
+    dtype: str
+    num_bytes: int
+
+
+def assign_buckets(leaves: Sequence, bucket_bytes: int) -> tuple[GradBucket, ...]:
+    """Partition gradient leaves into dtype-grouped, size-targeted
+    buckets in REVERSE leaf order (reverse-topological ≈ backward
+    production order: the last parameters' grads are produced first, so
+    the first bucket closes — and its chain reduce can dispatch — while
+    the rest of backward is still running).
+
+    ``leaves`` need only ``.shape``/``.dtype`` (arrays or
+    ``ShapeDtypeStruct``s). Invariants (property-tested in
+    tests/test_bucketed_reduce.py): every leaf index appears in exactly
+    one bucket; bucket bytes sum to the leaves' total; a bucket never
+    mixes dtypes; a bucket exceeds ``bucket_bytes`` only when it holds a
+    single oversized leaf (the one-leaf-slack rule — the target is
+    respected by closing before adding, never by splitting a leaf).
+    """
+    target = int(bucket_bytes)
+    if target <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
+    buckets: list[GradBucket] = []
+    idxs: list[int] = []
+    cur_dtype = ""
+    cur_bytes = 0
+
+    def close() -> None:
+        nonlocal idxs, cur_dtype, cur_bytes
+        if idxs:
+            buckets.append(GradBucket(tuple(idxs), cur_dtype, cur_bytes))
+        idxs, cur_dtype, cur_bytes = [], "", 0
+
+    for i in reversed(range(len(leaves))):
+        dt = jnp.dtype(leaves[i].dtype)
+        nbytes = math.prod(leaves[i].shape) * dt.itemsize
+        if idxs and (dt.name != cur_dtype or cur_bytes + nbytes > target):
+            close()
+        idxs.append(i)
+        cur_dtype = dt.name
+        cur_bytes += nbytes
+    close()
+    return tuple(buckets)
+
+
+def all_reduce_shards(axis_size: int, num_chains: int, algo: str) -> int:
+    """Chunk-address shard count of the planned all-reduce schedule —
+    ``plan_all_reduce(...).addr_shards`` without building the tables
+    (equality is regression-pinned in tests/test_bucketed_reduce.py).
+    K=1 uses device-id chunks (L shards, either algo); multi-ring
+    rotation carries the whole payload as one slot; multi-ring rs_ag
+    addresses by ring position (S = L/K shards)."""
+    if num_chains <= 1:
+        return int(axis_size)
+    if algo == "rotation":
+        return 1
+    return int(axis_size) // int(num_chains)
+
+
+def bucket_shard_layout(
+    num_elems: Sequence[int], shards: int
+) -> tuple[tuple[int, ...], int]:
+    """Chunk-aligned bucket layout: leaf i occupies ``shards`` rows of
+    ``ceil(n_i / shards)`` elements (zero-padded), concatenated along
+    the row axis. Aligning every leaf's chunk boundaries to the
+    schedule's shard count keeps each element's ring fold order
+    identical to the per-leaf reduce — that is what makes the bucketed
+    path bit-identical at the exact wire. Returns ``(widths,
+    total_elems)`` with ``total_elems = shards * sum(widths)`` (the
+    payload size the wire and the cost model both see)."""
+    widths = tuple(-(-int(n) // int(shards)) for n in num_elems)
+    return widths, int(shards) * sum(widths)
+
+
+def resolve_ring_chains(
+    axis_size: int,
+    nbytes: int,
+    *,
+    num_chains: int | str = 1,
+    scheduler: str = "tsp",
+    algo: str = "rs_ag",
+    wire_dtype: str | None = None,
+    max_chains: int = 4,
+) -> tuple[int, tuple[tuple[int, ...], ...]]:
+    """(K, sub_rings) for one DP reduction — the module-level twin of
+    ``torrent_grad_reduce``'s per-reduction resolution, shared with the
+    overlap/step-time model (``launch.roofline.modeled_train_overlap``)
+    so modeled schedules stay in lockstep with what the executor runs
+    (the EXACT modeled-vs-HLO byte match depends on it)."""
+    if num_chains == "auto":
+        k, rings = auto_ring_chains(
+            axis_size, nbytes, scheduler, algo, wire_dtype, max_chains
+        )
+        if k > 1:
+            return k, rings
+    elif (
+        isinstance(num_chains, int)
+        and num_chains > 1
+        and axis_size > num_chains
+    ):
+        return num_chains, tuple(
+            sub_ring_orders(axis_size, num_chains, scheduler)
+        )
+    return 1, (ring_order_for_axis(axis_size, scheduler),)
+
+
 def ef_residual_init(params: PyTree, dp_size: int) -> PyTree:
     """Zero error-feedback residual state for
     ``torrent_grad_reduce(error_feedback=True)``: one f32 residual per
@@ -317,6 +458,7 @@ def torrent_grad_reduce(
     algo: str = "rs_ag",
     wire_dtype: str | None = None,
     error_feedback: bool = False,
+    bucket_bytes: int | None = None,
 ) -> Callable[..., tuple[PyTree, PyTree]]:
     """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` (grads LOCAL
     to the batch shard) so grads come back chain-all-reduced over the DP
@@ -342,7 +484,14 @@ def torrent_grad_reduce(
     ring are not recoverable per rank; the first-quantization residual
     is the standard EF-SGD approximation). Residual state comes from
     :func:`ef_residual_init` / :func:`ef_residual_specs` and should be
-    checkpointed alongside the optimizer state."""
+    checkpointed alongside the optimizer state.
+
+    ``bucket_bytes`` switches to the bucketed, backward-overlapped
+    reduction (module docstring): leaves are grouped by
+    :func:`assign_buckets` and each bucket reduces as one chunk-aligned
+    chain all-reduce, dispatched in reverse-topological bucket order.
+    ``num_chains="auto"`` then resolves K per BUCKET (from the bucket's
+    total bytes) instead of per leaf; EF residuals stay per leaf."""
     if algo not in cw.ALL_REDUCE_ALGOS:
         raise ValueError(
             f"unknown algo {algo!r}; expected {cw.ALL_REDUCE_ALGOS}"
@@ -356,11 +505,38 @@ def torrent_grad_reduce(
             '(e.g. wire_dtype="int8"): with an exact wire there is no '
             "quantization residual to feed back"
         )
+    if bucket_bytes is not None and int(bucket_bytes) <= 0:
+        raise ValueError(f"bucket_bytes must be positive, got {bucket_bytes}")
     dp = _dp_axes(mesh)
 
     dp_size = 1
     for a in dp:
         dp_size *= mesh.shape[a]
+
+    def _axis_len(axis) -> int:
+        size = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            size *= mesh.shape[a]
+        return size
+
+    def _rings_for(size: int, nbytes: int):
+        """(K, sub_rings) for one axis reduction of ``nbytes``."""
+        return resolve_ring_chains(
+            size, nbytes, num_chains=num_chains, scheduler=scheduler,
+            algo=algo, wire_dtype=wire_dtype,
+        )
+
+    def _ar(x, axis, k, rings):
+        if k > 1:
+            return cw.multi_chain_all_reduce(
+                x, axis, rings, algo=algo, wire_dtype=wire_dtype
+            )
+        return cw.chain_all_reduce(x, axis, rings[0], wire_dtype=wire_dtype)
+
+    def _ar_stages():
+        if hierarchical and len(dp) == 2:
+            return [dp[1], dp[0]]  # within pod ("data"), then across pods
+        return [dp if len(dp) > 1 else dp[0]]
 
     def reduce_one(g, r=None):
         flat = g.reshape(-1)
@@ -371,25 +547,10 @@ def torrent_grad_reduce(
             new_r = (flat - dequantize(q, s)).reshape(g.shape)
 
         def ar(x, axis):
-            size = 1
-            for a in (axis if isinstance(axis, tuple) else (axis,)):
-                size *= mesh.shape[a]
-            order = ring_order_for_axis(size, scheduler)
-            if num_chains == "auto":
-                k, rings = auto_ring_chains(
-                    size, x.size * x.dtype.itemsize, scheduler, algo,
-                    wire_dtype,
-                )
-                if k > 1:
-                    return cw.multi_chain_all_reduce(
-                        x, axis, rings, algo=algo, wire_dtype=wire_dtype
-                    )
-            elif num_chains > 1 and size > num_chains:
-                return cw.multi_chain_all_reduce(
-                    x, axis, sub_ring_orders(size, num_chains, scheduler),
-                    algo=algo, wire_dtype=wire_dtype,
-                )
-            return cw.chain_all_reduce(x, axis, order, wire_dtype=wire_dtype)
+            k, rings = _rings_for(
+                _axis_len(axis), x.size * x.dtype.itemsize
+            )
+            return _ar(x, axis, k, rings)
 
         if hierarchical and len(dp) == 2:
             flat = ar(flat, dp[1])  # within pod ("data")
@@ -402,6 +563,64 @@ def torrent_grad_reduce(
         reduced = (flat / dp_size).reshape(g.shape).astype(g.dtype)
         return reduced if r is None else (reduced, new_r)
 
+    def _reduce_bucket_flats(flats):
+        """One bucket = ONE chain all-reduce: chunk-align each flat leaf
+        to the schedule's shard count, concatenate along the row axis,
+        reduce the whole payload, slice the leaves back out. Returns the
+        per-leaf reduced flats (un-averaged)."""
+        nbytes = sum(f.size * f.dtype.itemsize for f in flats)
+        stages = _ar_stages()
+        plans = [
+            (axis,) + _rings_for(_axis_len(axis), nbytes) for axis in stages
+        ]
+        shards = all_reduce_shards(_axis_len(stages[0]), plans[0][1], algo)
+        widths, _ = bucket_shard_layout([f.size for f in flats], shards)
+        padded = [
+            jnp.pad(f, (0, shards * m - f.size)).reshape(shards, m)
+            for f, m in zip(flats, widths)
+        ]
+        payload = (
+            padded[0] if len(padded) == 1 else jnp.concatenate(padded, axis=1)
+        ).reshape(-1)
+        for axis, k, rings in plans:
+            payload = _ar(payload, axis, k, rings)
+        mat = payload.reshape(shards, -1)
+        outs, off = [], 0
+        for f, m in zip(flats, widths):
+            outs.append(mat[:, off : off + m].reshape(-1)[: f.size])
+            off += m
+        return outs
+
+    def reduce_bucketed(grads, res=None):
+        """Bucketed tree reduce: buckets dispatch in reverse-topological
+        order (assign_buckets walks leaves last-to-first), so the
+        schedule XLA sees issues each bucket's collective as soon as its
+        leaves' grads exist — the dispatch-order half of the overlap
+        story. Returns grads, or (grads, new_residuals) under EF."""
+        leaves, treedef = jax.tree.flatten(grads)
+        res_leaves = (
+            jax.tree.flatten(res)[0] if res is not None else [None] * len(leaves)
+        )
+        out = [None] * len(leaves)
+        new_res = [None] * len(leaves)
+        for b in assign_buckets(leaves, bucket_bytes):
+            flats = []
+            for i in b.indices:
+                g, r = leaves[i], res_leaves[i]
+                flat = g.reshape(-1)
+                if r is not None:
+                    flat = flat.astype(jnp.float32) + r.reshape(-1)
+                    q, s = quantize(flat)
+                    new_res[i] = (flat - dequantize(q, s)).reshape(g.shape)
+                flats.append(flat)
+            for i, rf in zip(b.indices, _reduce_bucket_flats(flats)):
+                g = leaves[i]
+                out[i] = (rf / dp_size).reshape(g.shape).astype(g.dtype)
+        grads_out = jax.tree.unflatten(treedef, out)
+        if res is None:
+            return grads_out
+        return grads_out, jax.tree.unflatten(treedef, new_res)
+
     def _avg_metrics(metrics):
         # metrics are per-shard means -> average over the DP group
         return jax.tree.map(
@@ -413,7 +632,10 @@ def torrent_grad_reduce(
         def wrapped(params, batch):
             def inner(params, batch):
                 grads, metrics = grad_fn(params, batch)
-                grads = jax.tree.map(reduce_one, grads)
+                if bucket_bytes is None:
+                    grads = jax.tree.map(reduce_one, grads)
+                else:
+                    grads = reduce_bucketed(grads)
                 return grads, _avg_metrics(metrics)
 
             in_specs = (jax.tree.map(lambda _: P(), params), batch_specs)
@@ -434,15 +656,19 @@ def torrent_grad_reduce(
             grads, metrics = grad_fn(params, batch)
             # each rank's residual row: (1, *shape) -> (*shape)
             res = jax.tree.map(lambda r: r[0], residual)
-            pairs = jax.tree.map(reduce_one, grads, res)
-            grads = jax.tree.map(
-                lambda pair: pair[0], pairs,
-                is_leaf=lambda x: isinstance(x, tuple),
-            )
-            new_res = jax.tree.map(
-                lambda pair: pair[1][None], pairs,
-                is_leaf=lambda x: isinstance(x, tuple),
-            )
+            if bucket_bytes is None:
+                pairs = jax.tree.map(reduce_one, grads, res)
+                grads = jax.tree.map(
+                    lambda pair: pair[0], pairs,
+                    is_leaf=lambda x: isinstance(x, tuple),
+                )
+                new_res = jax.tree.map(
+                    lambda pair: pair[1][None], pairs,
+                    is_leaf=lambda x: isinstance(x, tuple),
+                )
+            else:
+                grads, new_r = reduce_bucketed(grads, res)
+                new_res = jax.tree.map(lambda r: r[None], new_r)
             return grads, _avg_metrics(metrics), new_res
 
         param_specs = jax.tree.map(lambda _: P(), params)

@@ -234,3 +234,90 @@ def test_serve_hit_rate_and_mixed_traffic():
     assert [r.prefix_hit for r in reqs] == [True, False] * 3
     assert out["prefix_hit_rate"] == pytest.approx(0.5)
     assert out["latency_ticks_p99"] >= out["latency_ticks_p50"] > 0
+
+
+def _entry(tokens: np.ndarray, rows: int = 16, width: int = 4) -> PrefixEntry:
+    d = np.zeros((rows, width), BF16)
+    return PrefixEntry(tokens=tokens, page=8, dense=d, paged=d[None])
+
+
+def test_prefix_cache_lru_eviction():
+    """Capacity-bound cache: adds evict the least-recently-used entry,
+    and a lookup hit refreshes recency (the classic LRU contract)."""
+    one = _entry(np.arange(8, dtype=np.int32)).nbytes
+    pc = PrefixCache(capacity_bytes=2 * one)
+    a = _entry(np.arange(8, dtype=np.int32))
+    b = _entry(np.arange(100, 108, dtype=np.int32))
+    pc.add(a)
+    pc.add(b)
+    assert pc.total_bytes == 2 * one and pc.evictions == 0
+    # touch a: it becomes most-recent, so the third add evicts b
+    assert pc.lookup(np.arange(10, dtype=np.int32)) is a
+    pc.add(_entry(np.arange(200, 208, dtype=np.int32)))
+    assert pc.evictions == 1
+    assert a in pc.entries and b not in pc.entries
+    assert pc.total_bytes <= pc.capacity_bytes
+    # an entry bigger than the whole bound cannot be cached
+    pc2 = PrefixCache(capacity_bytes=one // 2)
+    pc2.add(_entry(np.arange(8, dtype=np.int32)))
+    assert pc2.entries == [] and pc2.evictions == 1
+    with pytest.raises(ValueError):
+        PrefixCache(capacity_bytes=0)
+
+
+def test_prefix_cache_version_invalidation():
+    """A weight refresh makes every cached KV stale: entries carry the
+    weights version they were prefilled under and are dropped (and
+    counted) when it bumps; new adds stamp the new version."""
+    pc = PrefixCache()
+    pc.add(_entry(np.arange(8, dtype=np.int32)))
+    pc.add(_entry(np.arange(16, dtype=np.int32)))
+    assert [e.version for e in pc.entries] == [0, 0]
+    assert pc.on_weights_update() == 2
+    assert pc.entries == [] and pc.invalidations == 2
+    assert pc.lookup(np.arange(10, dtype=np.int32)) is None
+    fresh = _entry(np.arange(8, dtype=np.int32))
+    pc.add(fresh)
+    assert fresh.version == pc.weights_version == 1
+    assert pc.lookup(np.arange(10, dtype=np.int32)) is fresh
+    assert pc.on_weights_update() == 1 and pc.invalidations == 3
+
+
+def test_server_weight_refresh_invalidates_prefix_cache():
+    """End to end: re-broadcasting UNCHANGED weights keeps registered
+    prefixes valid (the run()-start refresh must not wipe them), while
+    a refresh with NEW params version-invalidates the cache and the
+    serving stats surface the counters."""
+    rng = np.random.default_rng(5)
+    sc = ServeConfig(arch="yi-6b", smoke=True, batch=2, prompt_len=24,
+                     max_seq=MAX_SEQ, replicas=3, page_size=8)
+    server = Server(sc)
+    prefix = rng.integers(0, 256, size=16).astype(np.int32)
+    server.register_prefix(prefix)
+
+    rec = server.broadcast_weights()  # same weights: entries stay valid
+    assert rec["prefix_invalidated"] == 0
+    assert server.prefix_cache.lookup(prefix) is not None
+
+    new_params = jax.tree.map(lambda x: x * 1.5, server.params)
+    rec = server.broadcast_weights(new_params=new_params)
+    assert rec["prefix_invalidated"] == 1
+    assert server.prefix_cache.entries == []
+    assert server.prefix_cache.lookup(prefix) is None
+    # the served weights really were replaced before streaming
+    got = jax.tree.leaves(server.params)[0]
+    assert np.allclose(np.asarray(got), np.asarray(jax.tree.leaves(new_params)[0]))
+
+    # a prefix registered AFTER the refresh is valid under the new
+    # version, and the run stats expose the cache counters
+    server.register_prefix(prefix)
+    req = server.submit(
+        np.concatenate([prefix, rng.integers(0, 256, size=4).astype(np.int32)]),
+        2, arrival=0,
+    )
+    out = server.run([req])
+    assert req.prefix_hit
+    assert out["prefix_entries"] == 1
+    assert out["prefix_bytes"] > 0
+    assert out["prefix_evictions"] == 0
+    assert out["prefix_invalidations"] == 1
