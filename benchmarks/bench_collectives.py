@@ -29,12 +29,21 @@ entries (no HLO twin) record the ``plan_recovery`` program's wire bytes
 and ``chain_recovery_latency`` completion for K ∈ {2, 4} partitions
 with one and two concurrent failures, asserted self-consistent against
 the failure-free model.
+
+Model-only ``plan_L{64,256,1024}`` entries track the symbolic-addressing
+scaling pin: cold plan+validate wall time and pickled program bytes for
+the K=8 all-to-all at each ring length, plus ``plan_hlo_const_bytes`` —
+the executor's compiled-HLO literal-constant footprint measured at L=8
+and L=16 virtual devices and hard-asserted EQUAL (addresses are
+computed in-kernel from the device index, so the constant footprint is
+ring-length-independent).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import pickle
 import subprocess
 import sys
 import time
@@ -268,6 +277,75 @@ def _modeled(name: str) -> dict:
     }
 
 
+# Executor HLO constant footprint at a given virtual-device count: the
+# K=2 all-to-all (the heaviest table user) with a fixed 32-element
+# chunk, compiled and parsed for literal ``constant`` bytes.
+_CONST_SNIPPET = r"""
+import os, sys
+L = int(sys.argv[1])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={L}"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import chainwrite as cw
+from repro.launch import hlo_cost
+
+mesh = jax.make_mesh((L,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+rings = (tuple(range(L // 2)), tuple(range(L // 2, L)))
+C = 32  # elems per chunk, fixed across L
+
+def a2a(x):
+    v = x[0].reshape(L, C)
+    return cw.multi_chain_all_to_all(v, "x", rings).reshape(L * C)[None]
+
+x = jnp.ones((L, L * C), jnp.float32)
+jitted = jax.jit(jax.shard_map(a2a, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+print(hlo_cost.constant_bytes(jitted.lower(x).compile().as_text()))
+"""
+
+
+def _plan_scaling_metrics(env: dict) -> dict[str, dict]:
+    """Model-only symbolic-addressing scaling entries: cold
+    plan+validate wall time and program pickle size for the K=8
+    all-to-all at L ∈ {64, 256, 1024} (host-side, no jax), plus the
+    executor's HLO constant bytes at L ∈ {8, 16} virtual devices —
+    hard-asserted ring-length-independent."""
+    from repro.core import program as prg
+
+    out: dict[str, dict] = {}
+    for ring_len in (64, 256, 1024):
+        K = 8
+        S = ring_len // K
+        rings = tuple(
+            tuple(range(i * S, (i + 1) * S)) for i in range(K)
+        )
+        prg.clear_planner_caches()
+        t0 = time.perf_counter()
+        prog = prg.plan_all_to_all(ring_len, rings)
+        plan_s = time.perf_counter() - t0
+        out[f"plan_L{ring_len}"] = {
+            "plan_validate_s": plan_s,
+            "program_bytes": len(pickle.dumps(prog)),
+            "steps": len(prog.steps),
+        }
+        # "seconds, not minutes" is the acceptance bar; 30s is generous
+        assert plan_s < 30.0, (ring_len, plan_s)
+    const: dict[str, int] = {}
+    for dev in (8, 16):
+        proc = subprocess.run(
+            [sys.executable, "-c", _CONST_SNIPPET, str(dev)],
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(proc.stderr[-2000:])
+        const[f"L{dev}"] = int(proc.stdout.strip())
+    # THE pin: symbolic addressing keeps the executor's embedded-table
+    # footprint independent of ring length (a dense-table regression
+    # would scale these O(L^2) per step).
+    assert const["L8"] == const["L16"], const
+    out["plan_hlo_const_bytes"] = const
+    return out
+
+
 def _recovery_metrics() -> dict[str, dict]:
     """Modeled recovery cost (no HLO twin — recovery never executes as
     one SPMD collective): for K ∈ {2, 4} partitions of 16 destinations
@@ -346,6 +424,20 @@ def main() -> list[tuple[str, float, str]]:
             f"collectives.{name}", float(m["modeled_latency_cc"]),
             f"modeled_bytes={m['modeled_bytes']}",
         ))
+    # Model-only entries: symbolic-addressing plan scaling + the HLO
+    # constant-footprint independence pin.
+    scaling = _plan_scaling_metrics(env)
+    metrics.update(scaling)
+    for name, m in scaling.items():
+        if name.startswith("plan_L"):
+            rows.append((
+                f"collectives.{name}", m["plan_validate_s"] * 1e6,
+                f"program_bytes={m['program_bytes']}",
+            ))
+    rows.append((
+        "collectives.plan_hlo_const_bytes", float(scaling["plan_hlo_const_bytes"]["L8"]),
+        "asserted equal at L=8 and L=16",
+    ))
     with open(os.path.join(repo, "BENCH_collectives.json"), "w") as f:
         json.dump(metrics, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -135,14 +135,115 @@ def _fanout(
     return new
 
 
-def _rows_from(table, idx, source, keep=None):
+class _AddrCtx:
+    """Trace-time symbolic address evaluation: this device's ring
+    position / ring index as traced scalars, built lazily on the first
+    symbolic table. A *canonical* partition (``groups[j] == range(j·S,
+    (j+1)·S)`` covering the axis) derives them arithmetically from
+    ``idx`` — ZERO ring-length-sized HLO constants; an irregular
+    partition gathers from (L,)-sized constant maps (still O(L) where
+    dense tables were O(L²))."""
+
+    def __init__(self, prog: ChainProgram, idx) -> None:
+        self._prog = prog
+        self._idx = idx
+        self._ready = False
+
+    def _build(self) -> None:
+        if self._ready:
+            return
+        ctx = self._prog.ring_ctx()
+        self.K, self.S = ctx.K, ctx.S
+        idx = self._idx
+        if ctx.canonical:
+            self._pos = idx % ctx.S
+            self._ring = idx // ctx.S
+            self._mask = None
+            self._flat = None
+        else:
+            L = self._prog.num_devices
+            pos_np = [0] * L
+            ring_np = [0] * L
+            mem_np = [False] * L
+            for d, p in ctx.pos.items():
+                pos_np[d], mem_np[d] = p, True
+            for d, r in ctx.ring_of.items():
+                ring_np[d] = r
+            self._pos = jnp.asarray(pos_np)[idx]
+            self._ring = jnp.asarray(ring_np)[idx]
+            self._mask = jnp.asarray(mem_np)[idx]
+            self._flat = jnp.asarray(
+                [ctx.orders[r][q] for r in range(ctx.K) for q in range(ctx.S)]
+            )
+        self._ready = True
+
+    def dims(self) -> tuple[int, int]:
+        self._build()
+        return self.K, self.S
+
+    def pos(self):
+        self._build()
+        return self._pos
+
+    def ring(self):
+        self._build()
+        return self._ring
+
+    def member(self, flat_idx):
+        """Device id of ring ``flat_idx // S``, position ``% S``."""
+        self._build()
+        return flat_idx if self._flat is None else self._flat[flat_idx]
+
+    def mask_row(self, row):
+        """-1 out the row on devices outside every ring group."""
+        self._build()
+        if self._mask is None:
+            return row
+        return jnp.where(self._mask, row, -1)
+
+
+def _row_ids(table, actx, idx):
+    """Traced (width,) int32 slot/shard addresses of this device's row
+    (-1 = none) — dense tables gather from the embedded constant, the
+    symbolic forms compute from ``idx`` and the coefficients."""
+    if isinstance(table, tuple):
+        return jnp.asarray(table)[idx]
+    if isinstance(table, prg.AtDevices):
+        none = jnp.full((table.width,), -1, jnp.int32)
+        if not table.devices:
+            return none
+        hit = jnp.any(jnp.asarray(sorted(set(table.devices))) == idx)
+        return jnp.where(
+            hit, jnp.full((table.width,), table.value, jnp.int32), none
+        )
+    if isinstance(table, prg.Diag):
+        inner = _row_ids(table.inner, actx, idx)[0]
+        return jnp.where(jnp.arange(table.width) == idx, inner, -1).astype(
+            jnp.int32
+        )
+    if isinstance(table, prg.Affine):
+        row = (
+            table.a * actx.pos() + table.c * actx.ring()
+            + table.e * jnp.arange(table.width) + table.b
+        ) % table.m
+        return actx.mask_row(row.astype(jnp.int32))
+    if isinstance(table, prg.MemberLookup):
+        K, S = actx.dims()
+        cols = jnp.arange(table.width)
+        r = (table.ar * actx.ring() + table.er * cols + table.br) % K
+        q = (table.ap * actx.pos() + table.ep * cols + table.bp) % S
+        return actx.mask_row(actx.member(r * S + q).astype(jnp.int32))
+    raise TypeError(f"unknown table type {type(table).__name__}")
+
+
+def _rows_from(table, idx, source, keep=None, actx=None):
     """Per-device row select: ``result[j] = source[table[self][j]]``,
     with ``-1`` giving ``keep[j]`` (same-width) or zeros."""
-    t = jnp.asarray(table)[idx]  # (width,)
+    t = _row_ids(table, actx, idx)  # (width,)
     safe = jnp.clip(t, 0, source.shape[0] - 1)
     rows = source[safe]
     mask = (t >= 0).reshape((-1,) + (1,) * (source.ndim - 1))
-    if keep is not None and keep.shape[0] == len(table[0]):
+    if keep is not None and keep.shape[0] == prg.table_width(table):
         return jnp.where(mask, rows, keep)
     return jnp.where(mask, rows, jnp.zeros_like(rows))
 
@@ -165,27 +266,42 @@ def _hop(buf, axis_name, edges, idx, wire):
     return _fanout(buf, axis_name, edges, idx)
 
 
-def _one_step(buf, out, shards, axis_name, idx, step, wire=None):
+def _one_step(buf, out, shards, axis_name, idx, step, wire=None, actx=None):
     """One program step (the machine model of :mod:`repro.core.program`
     verbatim): load -> hop -> combine -> write."""
     if step.load is not None:
-        buf = _rows_from(step.load, idx, out, keep=buf)
+        buf = _rows_from(step.load, idx, out, keep=buf, actx=actx)
     buf = _hop(buf, axis_name, step.edges, idx, wire)
     if step.combine == prg.ADD:
         src = shards if step.add_from == "input" else out
-        buf = buf + _rows_from(step.add_src, idx, src)
+        buf = buf + _rows_from(step.add_src, idx, src, actx=actx)
     if step.write is not None:
-        sparse = _sparse_write(step.write)
+        out = _write_step(buf, out, step.write, step.width,
+                          step.write_op, actx, idx)
+    return buf, out
+
+
+def _write_step(buf, out, table, width, write_op, actx, idx):
+    """Apply one step's write table: dense tables keep the historical
+    sparse/width-loop paths; symbolic tables write through ONE indexed
+    update (Diag / width-1) or one vector scatter (full-width)."""
+    if isinstance(table, tuple):
+        sparse = _sparse_write(table)
         if sparse is not None:
             rows_tbl, slots_tbl = sparse
-            out = _write_one(
+            return _write_one(
                 buf, out, jnp.asarray(rows_tbl)[idx],
-                jnp.asarray(slots_tbl)[idx], step.write_op,
+                jnp.asarray(slots_tbl)[idx], write_op,
             )
-        else:
-            t = jnp.asarray(step.write)[idx]  # (width,)
-            out = _write_dense(buf, out, t, step.width, step.write_op)
-    return buf, out
+        t = jnp.asarray(table)[idx]  # (width,)
+        return _write_dense(buf, out, t, width, write_op)
+    if isinstance(table, prg.Diag):
+        slot = _row_ids(table.inner, actx, idx)[0]
+        return _write_one(buf, out, idx, slot, write_op)
+    rows = _row_ids(table, actx, idx)
+    if prg.table_width(table) == 1:
+        return _write_one(buf, out, jnp.int32(0), rows[0], write_op)
+    return _write_rows(buf, out, rows, write_op)
 
 
 def _sparse_write(table):
@@ -219,6 +335,20 @@ def _write_one(buf, out, row_t, slot_t, write_op):
     return lax.dynamic_update_index_in_dim(out, new, slot_c, 0)
 
 
+def _write_rows(buf, out, slots, write_op):
+    """Vectorized full-width write ``out[slots[j]] (op)= buf[j]`` for a
+    traced slot row: live slots are distinct (an IR invariant), so this
+    is one scatter; -1 rows land on a dummy slot that is dropped."""
+    dummy = jnp.zeros((1,) + out.shape[1:], out.dtype)
+    ext = jnp.concatenate([out, dummy], axis=0)
+    tgt = jnp.where(slots >= 0, slots, out.shape[0])
+    if write_op == prg.COPY:
+        ext = ext.at[tgt].set(buf)
+    else:
+        ext = ext.at[tgt].add(buf)
+    return ext[:-1]
+
+
 def _write_dense(buf, out, slots, width, write_op):
     for j in range(width):
         slot = slots[j]
@@ -231,20 +361,38 @@ def _write_dense(buf, out, slots, width, write_op):
     return out
 
 
+def _stack_key(table):
+    """Scan-compatibility key of an addressing table: steps stack into
+    one ``lax.scan`` when only their per-step *offsets* differ (dense
+    rows ride in the xs; symbolic offsets — Affine ``b``, MemberLookup
+    ``br``/``bp`` — become scalar xs decoded in the body)."""
+    if table is None:
+        return None
+    if isinstance(table, tuple):
+        return "dense"
+    if isinstance(table, prg.Affine):
+        return ("affine", table.width, table.a, table.c, table.e, table.m)
+    if isinstance(table, prg.MemberLookup):
+        return ("member", table.width, table.ar, table.er, table.ap, table.ep)
+    if isinstance(table, prg.Diag):
+        return ("diag", table.width, _stack_key(table.inner))
+    return ("at", table)  # AtDevices: only identical tables stack
+
+
 def _uniform_runs(steps, wires=None):
     """Group consecutive steps that share edges/width/combine/write
     structure AND wire dtype (differing only in their addressing
-    tables) so the executor can roll each group into one ``lax.scan``
-    — keeping the compiled HLO ring-length-independent as the pre-IR
-    collectives were. Steps with a ``load`` (phase boundaries) run
-    standalone. Returns ``[(wire, [steps...]), ...]``."""
+    offsets/rows) so the executor can roll each group into one
+    ``lax.scan`` — keeping the compiled HLO ring-length-independent as
+    the pre-IR collectives were. Steps with a ``load`` (phase
+    boundaries) run standalone. Returns ``[(wire, [steps...]), ...]``."""
     if wires is None:
         wires = [None] * len(steps)
     runs: list[tuple] = []
     key_prev = None
     for s, w in zip(steps, wires):
         key = (s.edges, s.width, s.combine, s.add_from,
-               s.add_src is None, s.write is None, s.write_op, w)
+               _stack_key(s.add_src), _stack_key(s.write), s.write_op, w)
         if s.load is None and runs and key_prev == key:
             runs[-1][1].append(s)
         else:
@@ -253,52 +401,133 @@ def _uniform_runs(steps, wires=None):
     return runs
 
 
-def _scan_run(buf, out, shards, axis_name, idx, run, wire=None):
-    """Rolled execution of a uniform step run: the per-step addressing
-    tables stack into the scan's ``xs`` (pre-gathered to this device's
-    rows), the step structure lives in the body."""
+def _offset_xs(vals):
+    """Per-step symbolic offsets as scan xs WITHOUT an O(T) constant:
+    a constant sequence broadcasts a scalar, an arithmetic progression
+    rides an iota; anything else (no planner emits one) falls back to
+    the materialized vector."""
+    T = len(vals)
+    v0 = vals[0]
+    if all(v == v0 for v in vals):
+        return jnp.full((T,), v0, jnp.int32)
+    db = vals[1] - v0
+    if all(vals[i] == v0 + i * db for i in range(T)):
+        return (v0 + db * jnp.arange(T)).astype(jnp.int32)
+    return jnp.asarray(vals, jnp.int32)
+
+
+def _stacked_rows(tables, actx, idx):
+    """(xs, row_fn) for a uniform run's same-structure tables: the scan
+    body calls ``row_fn(x_t)`` to recover step t's (width,) address
+    row. Dense tables pre-gather this device's rows into (T, width) xs;
+    symbolic tables ship only their per-step offsets."""
+    t0 = tables[0]
+    if isinstance(t0, tuple):
+        return jnp.asarray(tables)[:, idx], lambda x: x
+    if isinstance(t0, prg.Affine):
+        xs = _offset_xs([t.b for t in tables])
+
+        def fn(x, t0=t0):
+            row = (
+                t0.a * actx.pos() + t0.c * actx.ring()
+                + t0.e * jnp.arange(t0.width) + x
+            ) % t0.m
+            return actx.mask_row(row.astype(jnp.int32))
+
+        return xs, fn
+    if isinstance(t0, prg.MemberLookup):
+        K, S = actx.dims()
+        xs = jnp.stack(
+            [_offset_xs([t.br for t in tables]),
+             _offset_xs([t.bp for t in tables])], axis=1,
+        )
+        cols = jnp.arange(t0.width)
+
+        def fn(x, t0=t0):
+            r = (t0.ar * actx.ring() + t0.er * cols + x[0]) % K
+            q = (t0.ap * actx.pos() + t0.ep * cols + x[1]) % S
+            return actx.mask_row(actx.member(r * S + q).astype(jnp.int32))
+
+        return xs, fn
+    if isinstance(t0, prg.AtDevices):
+        # Identical across the run (the uniform-run key pins the whole
+        # table): evaluate once, constant through the scan.
+        row = _row_ids(t0, actx, idx)
+        return jnp.zeros((len(tables),), jnp.int32), lambda x: row
+    raise TypeError(f"unstackable table type {type(t0).__name__}")
+
+
+def _scan_run(buf, out, shards, axis_name, idx, run, wire=None, actx=None):
+    """Rolled execution of a uniform step run: per-step addressing
+    stacks into the scan's ``xs`` — dense tables as pre-gathered rows,
+    symbolic tables as scalar offsets decoded in the body — so the
+    compiled HLO (and on canonical rings, its constant footprint) is
+    independent of the run length."""
     s0 = run[0]
     T = len(run)
-    dummy = jnp.zeros((T, 1), jnp.int32)
-    add_xs = (
-        jnp.asarray([s.add_src for s in run])[:, idx]
-        if s0.add_src is not None else dummy
-    )
-    sparse = None
-    write_xs = dummy
+    zeros_T = jnp.zeros((T,), jnp.int32)
+
+    add_fn = None
+    add_xs = zeros_T
+    if s0.add_src is not None:
+        add_xs, add_fn = _stacked_rows([s.add_src for s in run], actx, idx)
+
+    # Write modes: "one" (single indexed update: sparse dense tables,
+    # Diag, width-1 symbolic), "dense" (width loop), "rows" (vector
+    # scatter), or None.
+    write_mode = None
+    write_xs = zeros_T
+    write_fn = None
     if s0.write is not None:
-        sparse_all = [_sparse_write(s.write) for s in run]
-        if all(sp is not None for sp in sparse_all):
-            sparse = (
-                jnp.asarray([sp[0] for sp in sparse_all])[:, idx],  # rows
-                jnp.asarray([sp[1] for sp in sparse_all])[:, idx],  # slots
+        w0 = s0.write
+        if isinstance(w0, tuple):
+            sparse_all = [_sparse_write(s.write) for s in run]
+            if all(sp is not None for sp in sparse_all):
+                write_mode = "one"
+                rows_xs = jnp.asarray([sp[0] for sp in sparse_all])[:, idx]
+                slots_xs = jnp.asarray([sp[1] for sp in sparse_all])[:, idx]
+                write_xs = jnp.stack([rows_xs, slots_xs], axis=1)
+                write_fn = lambda x: (x[0], x[1])  # noqa: E731
+            else:
+                write_mode = "dense"
+                write_xs = jnp.asarray([s.write for s in run])[:, idx]
+        elif isinstance(w0, prg.Diag):
+            write_mode = "one"
+            write_xs, inner_fn = _stacked_rows(
+                [s.write.inner for s in run], actx, idx
             )
+            write_fn = lambda x: (idx, inner_fn(x)[0])  # noqa: E731
         else:
-            write_xs = jnp.asarray([s.write for s in run])[:, idx]
+            xs, fn = _stacked_rows([s.write for s in run], actx, idx)
+            write_xs = xs
+            if prg.table_width(w0) == 1:
+                write_mode = "one"
+                write_fn = lambda x: (jnp.int32(0), fn(x)[0])  # noqa: E731
+            else:
+                write_mode = "rows"
+                write_fn = fn
 
     def body(carry, xs):
         buf, out = carry
-        add_t, write_t, row_t, slot_t = xs
+        add_t, write_t = xs
         buf = _hop(buf, axis_name, s0.edges, idx, wire)
         if s0.combine == prg.ADD:
             src = shards if s0.add_from == "input" else out
-            safe = jnp.clip(add_t, 0, src.shape[0] - 1)
+            row = add_fn(add_t)
+            safe = jnp.clip(row, 0, src.shape[0] - 1)
             rows = src[safe]
-            mask = (add_t >= 0).reshape((-1,) + (1,) * (src.ndim - 1))
+            mask = (row >= 0).reshape((-1,) + (1,) * (src.ndim - 1))
             buf = buf + jnp.where(mask, rows, jnp.zeros_like(rows))
-        if s0.write is not None:
-            if sparse is not None:
-                out = _write_one(buf, out, row_t, slot_t, s0.write_op)
-            else:
-                out = _write_dense(buf, out, write_t, s0.width, s0.write_op)
+        if write_mode == "one":
+            row_t, slot_t = write_fn(write_t)
+            out = _write_one(buf, out, row_t, slot_t, s0.write_op)
+        elif write_mode == "dense":
+            out = _write_dense(buf, out, write_t, s0.width, s0.write_op)
+        elif write_mode == "rows":
+            out = _write_rows(buf, out, write_fn(write_t), s0.write_op)
         return (buf, out), None
 
-    row_xs, slot_xs = sparse if sparse is not None else (
-        jnp.zeros((T,), jnp.int32), jnp.zeros((T,), jnp.int32)
-    )
-    (buf, out), _ = lax.scan(
-        body, (buf, out), (add_xs, write_xs, row_xs, slot_xs)
-    )
+    (buf, out), _ = lax.scan(body, (buf, out), (add_xs, write_xs))
     return buf, out
 
 
@@ -325,16 +554,19 @@ def _run_stepped(shards: jax.Array, axis_name: Axis, prog: ChainProgram) -> jax.
                 f"got {shards.dtype}"
             )
         shards = shards.astype(jnp.float32)
-    buf = _rows_from(prog.buf_init, idx, shards)
-    out = _rows_from(prog.out_init, idx, shards)
+    actx = _AddrCtx(prog, idx)
+    buf = _rows_from(prog.buf_init, idx, shards, actx=actx)
+    out = _rows_from(prog.out_init, idx, shards, actx=actx)
     for wire, run in _uniform_runs(prog.steps, wires):
         if len(run) == 1 or _STATIC_UNROLL:
             for step in run:
                 buf, out = _one_step(
-                    buf, out, shards, axis_name, idx, step, wire
+                    buf, out, shards, axis_name, idx, step, wire, actx
                 )
         else:
-            buf, out = _scan_run(buf, out, shards, axis_name, idx, run, wire)
+            buf, out = _scan_run(
+                buf, out, shards, axis_name, idx, run, wire, actx
+            )
     return out.astype(orig_dtype)
 
 

@@ -181,6 +181,9 @@ def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
         shards = shards.astype(np.float32)
 
     def rows(table, source, keep=None):
+        # Symbolic tables materialize lazily — the replay (and thus
+        # every bit-exactness pin) is identical to the dense form.
+        table = prg.resolve_table(prog, table)
         width = len(table[0])
         out = np.zeros((L, width) + inner, shards.dtype)
         for d in range(L):
@@ -213,9 +216,10 @@ def interpret_program(shards: np.ndarray, prog: prg.ChainProgram) -> np.ndarray:
             source = shards if step.add_from == "input" else out
             buf = buf + rows(step.add_src, source)
         if step.write is not None:
+            write_tbl = prg.resolve_table(prog, step.write)
             for d in range(L):
                 for j in range(step.width):
-                    slot = step.write[d][j]
+                    slot = write_tbl[d][j]
                     if slot >= 0:
                         if step.write_op == prg.COPY:
                             out[d, slot] = buf[d, j]

@@ -333,12 +333,21 @@ def program_latency(
             per_chain.append(sum(phases) + detect)
     else:  # stepped: lockstep rounds, shared by every ring
         bw = _effective_bw(p, 1)  # one outgoing stream per device
-        data = sum(
-            _max_edge_hops(topo, step.edges) * p.router_cc
-            + p.sf_fill_cc
-            + _ceil_div(program.step_bytes(step, size_bytes), bw)
-            for step in program.steps
-        )
+        # Steps share their edge tuples (one intra + one cross list per
+        # program), so the O(edges) worst-hop scan memoizes by identity
+        # — 1024-ring pricing stays O(L), not O(L²).
+        hops_memo: dict[int, int] = {}
+        data = 0
+        for step in program.steps:
+            eh = hops_memo.get(id(step.edges))
+            if eh is None:
+                eh = _max_edge_hops(topo, step.edges)
+                hops_memo[id(step.edges)] = eh
+            data += (
+                eh * p.router_cc
+                + p.sf_fill_cc
+                + _ceil_div(program.step_bytes(step, size_bytes), bw)
+            )
         for order, _ in pairs:
             injected += len(order)
             cfg = _cfg_phase(topo, src, order, p, injected)
@@ -815,9 +824,15 @@ def choose_num_chains(
         size = n // k
         rings = [ring[i * size : (i + 1) * size] for i in range(k)]
         for a in algos:
+            # ONE planned program per (K, algo) candidate; the wire
+            # variants are O(1) field replacements sharing its steps
+            # (the planner caches hold only the wire-free base).
+            base = plan_ring_collective(
+                collective, topo.num_nodes, rings, algo=a
+            )
             for w in wire_opts:
-                program = plan_ring_collective(
-                    collective, topo.num_nodes, rings, algo=a, wire_dtype=w
+                program = (
+                    base if w is None else base.with_wire_dtype(w)
                 )
                 if buckets is not None:
                     comms = [

@@ -394,3 +394,18 @@ class ModuleCost:
 def analyze(hlo_text: str) -> Cost:
     """Full-module cost with while bodies multiplied by trip count."""
     return ModuleCost(parse_module(hlo_text)).entry_cost()
+
+
+def constant_bytes(hlo_text: str) -> int:
+    """Total bytes of literal ``constant`` instructions across every
+    computation in the module — the embedded-table footprint. Symbolic
+    shard addressing pins this to be ring-length-independent for
+    ``chainwrite.execute_program`` (see BENCH_collectives.json
+    ``plan_L*`` entries): addresses are computed in-kernel from the
+    device index, not looked up in materialized L-sized tables."""
+    return sum(
+        instr.result_bytes
+        for comp in parse_module(hlo_text).values()
+        for instr in comp.instrs
+        if instr.opcode == "constant"
+    )

@@ -369,16 +369,20 @@ def assign_buckets(leaves: Sequence, bucket_bytes: int) -> tuple[GradBucket, ...
 
 def all_reduce_shards(axis_size: int, num_chains: int, algo: str) -> int:
     """Chunk-address shard count of the planned all-reduce schedule —
-    ``plan_all_reduce(...).addr_shards`` without building the tables
-    (equality is regression-pinned in tests/test_bucketed_reduce.py).
-    K=1 uses device-id chunks (L shards, either algo); multi-ring
-    rotation carries the whole payload as one slot; multi-ring rs_ag
-    addresses by ring position (S = L/K shards)."""
-    if num_chains <= 1:
-        return int(axis_size)
-    if algo == "rotation":
-        return 1
-    return int(axis_size) // int(num_chains)
+    ``plan_all_reduce(...).addr_shards`` read off the plan itself.
+    Symbolic addressing makes planning O(L) per step, so asking the
+    planner is cheap; ``addr_shards`` depends only on the (L, K, algo)
+    shape, never on ring identity, so canonical contiguous sub-rings
+    stand in for the scheduled ones. K=1 uses device-id chunks
+    (L shards, either algo); multi-ring rotation carries the whole
+    payload as one slot; multi-ring rs_ag addresses by ring position
+    (S = L/K shards)."""
+    L, k = int(axis_size), max(1, int(num_chains))
+    size = L // k
+    orders = tuple(
+        tuple(range(i * size, (i + 1) * size)) for i in range(k)
+    )
+    return prg.plan_all_reduce(L, orders, algo=algo).addr_shards
 
 
 def bucket_shard_layout(

@@ -1,11 +1,21 @@
+# Frozen pre-refactor dense-table planners (golden reference).
+#
+# This is the core/program.py planner module as it stood before the
+# symbolic-addressing refactor, vendored verbatim (only the two
+# relative `.scheduling` imports rewritten as absolute ones). The
+# property tests in test_symbolic_addressing.py materialize every
+# symbolic table emitted by the live planners and require bit-exact
+# equality with the dense tuples these planners build. Do not edit
+# except to re-freeze against a deliberate schedule change.
+
 """ChainProgram: the single schedule IR behind every Torrent collective.
 
 The paper's core claim is that every P2MP pattern is *just a schedule*
 of P2P hops over an unmodified NoC. This module makes that literal: a
 :class:`ChainProgram` is an ordered list of :class:`Step`\\ s, each step
-a set of ``(src, dst)`` edges plus per-device shard-addressing tables,
-generated once by the ``plan_*`` functions from a chain/ring partition.
-Three interchangeable backends consume the same program:
+a set of ``(src, dst)`` edges plus static per-device shard-addressing
+tables, generated once by the ``plan_*`` functions from a chain/ring
+partition. Three interchangeable backends consume the same program:
 
 * the SPMD executor (``chainwrite.execute_program`` — fused ppermutes),
 * the numpy interpreter (``chainwrite_ref.interpret_program`` — the
@@ -54,33 +64,6 @@ device-free golden-schedule tests):
   program fixes the floating-point reduction order and any two
   backends agree BIT-exactly.
 
-Symbolic addressing (the contract every backend shares). A "table" in
-this IR is EITHER a dense ``tuple``-of-rows (``(num_devices, width)``,
-``-1`` = none — the escape hatch for irregular schedules and hand-built
-programs) OR one of four compact address *generators* evaluated per
-device from its ring position — the IR analogue of XDMA's hardware
-address generators:
-
-* :class:`Affine`        — ``row[col] = (a·pos + c·ring + e·col + b)
-  mod m`` for ring members, ``-1`` for non-members (constants, ring-
-  position shards, iota rows);
-* :class:`MemberLookup`  — ``row[col] = orders[(ar·ring + er·col + br)
-  mod K][(ap·pos + ep·col + bp) mod S]`` (device-id addressing through
-  the ring member map);
-* :class:`Diag`          — ``row[d] = inner(d)`` on device ``d``'s own
-  column, ``-1`` elsewhere (the all_to_all peel);
-* :class:`AtDevices`     — ``row = [value]·width`` on a listed device
-  set, ``-1`` elsewhere (chain heads and per-step chain writes).
-
-Planning therefore builds O(1)-sized tables per step (O(L) per program
-including the shared edge lists); ``validate()`` checks symbolic
-tables structurally (coefficients and bounds, no materialization); the
-numpy oracle materializes rows lazily via :func:`resolve_table` /
-:func:`resolve_row`; and the SPMD executor evaluates the coefficients
-in-kernel from ``lax.axis_index`` — on a *canonical* ring partition
-(``groups[j] == range(j·S, (j+1)·S)`` covering the axis) its compiled
-HLO carries NO ring-length-dependent constants.
-
 Planners (``orders``/``chains`` are the scheduled partitions from
 ``core.scheduling``; ``num_devices`` is the SPMD axis size or the NoC
 node count):
@@ -122,7 +105,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Iterable, Iterator, Sequence
 
 # Canonical multi-ring all-reduce schedule names — the single tuple the
@@ -169,159 +151,6 @@ def _table(rows: Sequence[Sequence[int]]) -> Table:
     return tuple(tuple(int(v) for v in row) for row in rows)
 
 
-# ---------------------------------------------------------------------------
-# Symbolic addressing tables (see module docstring for the contract)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class Affine:
-    """``row[col] = (a·pos + c·ring + e·col + b) mod m`` for ring
-    members; all ``-1`` for devices outside every group."""
-
-    width: int
-    a: int = 0  # coefficient on ring position
-    c: int = 0  # coefficient on ring index
-    e: int = 0  # coefficient on column
-    b: int = 0  # offset
-    m: int = 1  # modulus (values live in [0, m))
-
-
-@dataclasses.dataclass(frozen=True)
-class MemberLookup:
-    """``row[col] = orders[(ar·ring + er·col + br) mod K]
-    [(ap·pos + ep·col + bp) mod S]`` — device-id addressing through the
-    ring member map; all ``-1`` for non-members."""
-
-    width: int
-    ar: int = 0
-    er: int = 0
-    br: int = 0
-    ap: int = 0
-    ep: int = 0
-    bp: int = 0
-
-
-@dataclasses.dataclass(frozen=True)
-class Diag:
-    """``row[d] = inner(d)`` on device ``d``'s own column (width must be
-    ``num_devices``), ``-1`` elsewhere — the all_to_all peel/out_init
-    shape. ``inner`` is a width-1 :class:`Affine` or
-    :class:`MemberLookup` evaluated at column 0."""
-
-    width: int
-    inner: "Affine | MemberLookup"
-
-
-@dataclasses.dataclass(frozen=True)
-class AtDevices:
-    """``row = (value,)·width`` on the listed devices, all ``-1``
-    elsewhere — chain heads (inits/loads) and per-step chain writes.
-    ``devices=()`` is the all-none table."""
-
-    devices: tuple[int, ...]
-    value: int = 0
-    width: int = 1
-
-
-# Any table position accepts the dense tuple form or a symbolic map.
-TableRef = Table | Affine | MemberLookup | Diag | AtDevices
-
-
-class _RingCtx:
-    """Host-side ring-partition context for symbolic resolution: member
-    orders, per-device position/ring index, and whether the partition
-    is *canonical* (``orders[j] == range(j·S, (j+1)·S)`` covering the
-    axis — the executor then derives pos/ring arithmetically from the
-    device index, with zero L-sized HLO constants)."""
-
-    __slots__ = ("orders", "K", "S", "pos", "ring_of", "canonical",
-                 "max_member")
-
-    def __init__(self, num_devices: int, orders) -> None:
-        orders = tuple(tuple(int(d) for d in c) for c in orders)
-        if not orders or not orders[0]:
-            raise ValueError("symbolic table needs non-empty ring groups")
-        S = len(orders[0])
-        if any(len(c) != S for c in orders):
-            raise ValueError("symbolic table needs equal-size ring groups")
-        self.orders = orders
-        self.K, self.S = len(orders), S
-        self.pos: dict[int, int] = {}
-        self.ring_of: dict[int, int] = {}
-        for j, ring in enumerate(orders):
-            for p, d in enumerate(ring):
-                self.pos[d] = p
-                self.ring_of[d] = j
-        self.max_member = max(self.pos)
-        self.canonical = self.K * S == num_devices and all(
-            orders[j][p] == j * S + p
-            for j in range(self.K)
-            for p in range(S)
-        )
-
-
-def table_width(table) -> int:
-    """Column count of a dense or symbolic table."""
-    if isinstance(table, tuple):
-        return len(table[0]) if table else 0
-    return table.width
-
-
-def _scalar_eval(inner, ctx: _RingCtx, d: int) -> int:
-    """Column-0 value of a width-1 Affine/MemberLookup on device ``d``."""
-    if d not in ctx.pos:
-        return -1
-    p, r = ctx.pos[d], ctx.ring_of[d]
-    if isinstance(inner, Affine):
-        return (inner.a * p + inner.c * r + inner.b) % inner.m
-    return ctx.orders[(inner.ar * r + inner.br) % ctx.K][
-        (inner.ap * p + inner.bp) % ctx.S
-    ]
-
-
-def resolve_row(program: "ChainProgram", table, d: int) -> tuple[int, ...]:
-    """Materialize ONE device's row of a dense or symbolic table —
-    O(width), so golden-schedule tests spot-check 1024-ring programs
-    without building (L, L) tables."""
-    if isinstance(table, tuple):
-        return table[d]
-    if isinstance(table, AtDevices):
-        w = table.width
-        return (table.value,) * w if d in table.devices else (-1,) * w
-    ctx = program.ring_ctx()
-    if isinstance(table, Diag):
-        row = [-1] * table.width
-        row[d] = _scalar_eval(table.inner, ctx, d)
-        return tuple(row)
-    if d not in ctx.pos:
-        return (-1,) * table.width
-    p, r = ctx.pos[d], ctx.ring_of[d]
-    if isinstance(table, Affine):
-        return tuple(
-            (table.a * p + table.c * r + table.e * col + table.b) % table.m
-            for col in range(table.width)
-        )
-    if isinstance(table, MemberLookup):
-        return tuple(
-            ctx.orders[(table.ar * r + table.er * col + table.br) % ctx.K][
-                (table.ap * p + table.ep * col + table.bp) % ctx.S
-            ]
-            for col in range(table.width)
-        )
-    raise TypeError(f"unknown table type {type(table).__name__}")
-
-
-def resolve_table(program: "ChainProgram", table) -> Table:
-    """Materialize a dense or symbolic table to the dense tuple form —
-    the numpy oracle's lazy path (dense tables pass through)."""
-    if isinstance(table, tuple):
-        return table
-    return tuple(
-        resolve_row(program, table, d) for d in range(program.num_devices)
-    )
-
-
 @dataclasses.dataclass(frozen=True)
 class Step:
     """One schedule step: a set of concurrent P2P hops + addressing."""
@@ -330,9 +159,9 @@ class Step:
     width: int = 1
     combine: str = COPY  # buf update after the hop: copy | add
     add_from: str = "input"  # add reads "input" shards or "out" slots
-    add_src: TableRef | None = None
-    load: TableRef | None = None  # out slots loaded into buf BEFORE the hop
-    write: TableRef | None = None  # out slot written per buf row after combine
+    add_src: Table | None = None
+    load: Table | None = None  # out slots loaded into buf BEFORE the hop
+    write: Table | None = None  # out slot written per buf row after combine
     write_op: str = COPY  # copy | add
     # Latency-model grouping: "intra" | "cross" (ring rounds), "chain"
     # (pipeline hop slots), "detect" (edge-free failure-timeout window —
@@ -344,29 +173,13 @@ class Step:
     def num_permutes(self) -> int:
         """ppermute ops the SPMD executor emits for this step: one fused
         permute for the unique-source edge set, plus one extra permute
-        per repeated source (the pipeline head's same-step fan-out).
-        Memoized per instance (fields are frozen) so 1024-ring byte
-        accounting does not rescan the shared edge lists."""
-        cached = self.__dict__.get("_num_permutes")
-        if cached is not None:
-            return cached
+        per repeated source (the pipeline head's same-step fan-out)."""
         if not self.edges:
-            n = 0
-        else:
-            counts: dict[int, int] = {}
-            for src, _ in self.edges:
-                counts[src] = counts.get(src, 0) + 1
-            n = 1 + sum(c - 1 for c in counts.values())
-        object.__setattr__(self, "_num_permutes", n)
-        return n
-
-    def __getstate__(self):
-        # Exclude memo attrs: pickled size must reflect the IR alone.
-        return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
-
-    def __setstate__(self, state):
-        for k, v in state.items():
-            object.__setattr__(self, k, v)
+            return 0
+        counts: dict[int, int] = {}
+        for src, _ in self.edges:
+            counts[src] = counts.get(src, 0) + 1
+        return 1 + sum(c - 1 for c in counts.values())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -395,39 +208,6 @@ class ChainProgram:
     # Program-default wire dtype (``Step.wire_dtype`` overrides per
     # step); None = frames ship in the payload dtype.
     wire_dtype: str | None = None
-
-    # -- symbolic resolution ------------------------------------------
-    def ring_ctx(self) -> _RingCtx:
-        """The ring-partition context symbolic tables evaluate against
-        (``groups`` interpreted as the K equal-size member orders).
-        Cached per instance; never part of equality/pickling."""
-        ctx = self.__dict__.get("_ring_ctx")
-        if ctx is None:
-            ctx = _RingCtx(self.num_devices, self.groups)
-            object.__setattr__(self, "_ring_ctx", ctx)
-        return ctx
-
-    def with_wire_dtype(self, wire_dtype) -> "ChainProgram":
-        """This program with a different default wire dtype — an O(1)
-        field replacement (steps and tables are shared), so candidate
-        scoring can derive every wire variant from ONE planned base."""
-        wd = normalize_wire_dtype(wire_dtype)
-        if wd == self.wire_dtype:
-            return self
-        if wd is not None and self.kind != "stepped":
-            raise ValueError(
-                "wire_dtype is only supported on stepped programs "
-                "(the frame-pipelined executor ships payload-dtype frames)"
-            )
-        return dataclasses.replace(self, wire_dtype=wd)
-
-    def __getstate__(self):
-        # Exclude the cached _RingCtx: pickled size reflects the IR.
-        return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
-
-    def __setstate__(self, state):
-        for k, v in state.items():
-            object.__setattr__(self, k, v)
 
     # -- accounting ---------------------------------------------------
     def step_wire_dtype(self, step: Step) -> str | None:
@@ -510,28 +290,22 @@ class ChainProgram:
                     raise ValueError(f"group head {h} out of range")
         self._check_table(self.buf_init, None, self.addr_shards, "buf_init")
         self._check_table(self.out_init, self.out_slots, self.addr_shards, "out_init")
-        width = table_width(self.buf_init) or 1
-        # Steps share their edge tuples (one intra + one cross list per
-        # program), so the O(len(edges)) structural checks memoize by
-        # object identity — validation stays O(L) for 1024-ring runs.
-        edges_ok: set[int] = set()
+        width = len(self.buf_init[0]) if self.buf_init else 1
         for i, s in enumerate(self.steps):
             if s.width < 1:
                 raise ValueError(f"step {i}: width < 1")
             if normalize_wire_dtype(s.wire_dtype) is not None and self.kind != "stepped":
                 raise ValueError(f"step {i}: wire_dtype on a {self.kind} program")
-            if id(s.edges) not in edges_ok:
-                dsts = [e[1] for e in s.edges]
-                if len(set(dsts)) != len(dsts):
-                    raise ValueError(f"step {i}: duplicate edge destinations")
-                if self.kind == "stepped":
-                    srcs = [e[0] for e in s.edges]
-                    if len(set(srcs)) != len(srcs):
-                        raise ValueError(f"step {i}: duplicate edge sources")
-                for a, b in s.edges:
-                    if not (0 <= a < L and 0 <= b < L):
-                        raise ValueError(f"step {i}: edge ({a},{b}) out of range")
-                edges_ok.add(id(s.edges))
+            dsts = [e[1] for e in s.edges]
+            if len(set(dsts)) != len(dsts):
+                raise ValueError(f"step {i}: duplicate edge destinations")
+            if self.kind == "stepped":
+                srcs = [e[0] for e in s.edges]
+                if len(set(srcs)) != len(srcs):
+                    raise ValueError(f"step {i}: duplicate edge sources")
+            for a, b in s.edges:
+                if not (0 <= a < L and 0 <= b < L):
+                    raise ValueError(f"step {i}: edge ({a},{b}) out of range")
             if s.width != width and s.load is None:
                 raise ValueError(f"step {i}: width change without load")
             if s.load is not None:
@@ -545,94 +319,25 @@ class ChainProgram:
                 raise ValueError(f"step {i}: unknown combine {s.combine!r}")
             if s.write is not None:
                 self._check_table(s.write, s.width, self.out_slots, f"step {i} write")
-                self._check_write_distinct(s.write, i)
+                for d, row in enumerate(s.write):
+                    live = [v for v in row if v >= 0]
+                    if len(set(live)) != len(live):
+                        raise ValueError(
+                            f"step {i}: device {d} writes one slot twice"
+                        )
             width = s.width
         return self
 
     def _check_table(self, table, width, bound, name) -> None:
-        if isinstance(table, tuple):
-            if len(table) != self.num_devices:
-                raise ValueError(f"{name}: table has {len(table)} rows, "
-                                 f"expected {self.num_devices}")
-            for row in table:
-                if width is not None and len(row) != width:
-                    raise ValueError(f"{name}: row width {len(row)} != {width}")
-                for v in row:
-                    if not (-1 <= v < bound):
-                        raise ValueError(f"{name}: index {v} out of range {bound}")
-            return
-        # Symbolic tables: structural O(1) checks (the ring context is
-        # built once per program, O(L)).
-        if table.width < 1:
-            raise ValueError(f"{name}: width < 1")
-        if width is not None and table.width != width:
-            raise ValueError(f"{name}: row width {table.width} != {width}")
-        if isinstance(table, AtDevices):
-            for dev in table.devices:
-                if not 0 <= dev < self.num_devices:
-                    raise ValueError(f"{name}: device {dev} out of range")
-            if not -1 <= table.value < bound:
-                raise ValueError(
-                    f"{name}: index {table.value} out of range {bound}"
-                )
-            return
-        if isinstance(table, Diag):
-            if table.width != self.num_devices:
-                raise ValueError(
-                    f"{name}: Diag width {table.width} != num_devices"
-                )
-            self._check_table(table.inner, 1, bound, f"{name} inner")
-            return
-        if isinstance(table, Affine):
-            if not 1 <= table.m <= bound:
-                raise ValueError(
-                    f"{name}: modulus {table.m} outside [1, {bound}]"
-                )
-            return
-        if isinstance(table, MemberLookup):
-            if self.ring_ctx().max_member >= bound:
-                raise ValueError(
-                    f"{name}: ring member {self.ring_ctx().max_member} "
-                    f"out of range {bound}"
-                )
-            return
-        raise TypeError(f"{name}: unknown table type {type(table).__name__}")
-
-    def _check_write_distinct(self, table, i: int) -> None:
-        """A device's write rows must target distinct out slots. Dense
-        tables are checked row by row; symbolic ones structurally (the
-        property test pins the materialized equivalence)."""
-        if isinstance(table, tuple):
-            for d, row in enumerate(table):
-                live = [v for v in row if v >= 0]
-                if len(set(live)) != len(live):
-                    raise ValueError(
-                        f"step {i}: device {d} writes one slot twice"
-                    )
-            return
-        if isinstance(table, Diag) or table.width == 1:
-            return  # at most one live slot per row
-        if isinstance(table, AtDevices):
-            if table.devices and table.value >= 0:
-                raise ValueError(
-                    f"step {i}: AtDevices write repeats slot {table.value}"
-                )
-            return
-        if isinstance(table, Affine):
-            if math.gcd(table.e, table.m) == 1 and table.width <= table.m:
-                return
-        elif isinstance(table, MemberLookup):
-            K, S = self.ring_ctx().K, self.ring_ctx().S
-            if table.ep % S == 0 and math.gcd(table.er, K) == 1 \
-                    and table.width <= K:
-                return  # distinct rings -> distinct members
-            if table.er % K == 0 and math.gcd(table.ep, S) == 1 \
-                    and table.width <= S:
-                return  # one ring, distinct positions
-        raise ValueError(
-            f"step {i}: cannot prove distinct write slots for "
-            f"{type(table).__name__}"
-        )
+        if len(table) != self.num_devices:
+            raise ValueError(f"{name}: table has {len(table)} rows, "
+                             f"expected {self.num_devices}")
+        for row in table:
+            if width is not None and len(row) != width:
+                raise ValueError(f"{name}: row width {len(row)} != {width}")
+            for v in row:
+                if not (-1 <= v < bound):
+                    raise ValueError(f"{name}: index {v} out of range {bound}")
 
 
 def program_wire_bytes(program: ChainProgram, size_bytes: int) -> int:
@@ -752,14 +457,8 @@ def _rows(num_devices: int, width: int) -> list[list[int]]:
 # Planners
 # ---------------------------------------------------------------------------
 
-# Every planner memoizes on its full argument tuple, but BOUNDED: a
-# large-L sweep must not pin every planned program in memory forever.
-# LRU keeps the working set (one training/serving loop re-plans the
-# same few programs); see planner_cache_stats() for hit rates.
-_PLANNER_CACHE_MAXSIZE = 128
 
-
-@functools.lru_cache(maxsize=_PLANNER_CACHE_MAXSIZE)
+@functools.lru_cache(maxsize=None)
 def plan_broadcast(
     num_devices: int, head: int, chains: tuple[tuple[int, ...], ...]
 ) -> ChainProgram:
@@ -773,19 +472,24 @@ def plan_broadcast(
     chains = validate_chains(head, chains)
     L = int(num_devices)
     full = [(head,) + c for c in chains]
-    at_head = AtDevices((head,), 0)
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, 1)
+    buf_init[head][0] = 0
+    out_init[head][0] = 0
     steps = []
     max_len = max((len(f) for f in full), default=1)
     for t in range(max_len - 1):
         edges = tuple((f[t], f[t + 1]) for f in full if t + 1 < len(f))
-        steps.append(Step(
-            edges=edges, width=1, tag="chain",
-            write=AtDevices(tuple(dst for _, dst in edges), 0),
-        ))
+        write = _rows(L, 1)
+        for _, dst in edges:
+            write[dst][0] = 0
+        steps.append(
+            Step(edges=edges, width=1, tag="chain", write=_table(write))
+        )
     return ChainProgram(
         collective="broadcast", kind="pipeline", num_devices=L,
         addr_shards=1, out_slots=1,
-        buf_init=at_head, out_init=at_head,
+        buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=chains, head=head,
     ).validate()
 
@@ -828,14 +532,14 @@ def plan_recovery(
     chains_t = tuple(
         tuple(int(d) for d in c) for c in chains if len(c)
     )
-    from .scheduling import normalize_failed  # host-side only
+    from repro.core.scheduling import normalize_failed  # host-side only
 
     return _plan_recovery_cached(
         topo, int(src), chains_t, tuple(normalize_failed(failed)), scheduler
     )
 
 
-@functools.lru_cache(maxsize=_PLANNER_CACHE_MAXSIZE)
+@functools.lru_cache(maxsize=None)
 def _plan_recovery_cached(
     topo,
     src: int,
@@ -843,7 +547,7 @@ def _plan_recovery_cached(
     failed: tuple[int, ...],
     scheduler: str,
 ) -> ChainProgram:
-    from .scheduling import reform_chain  # host-side only
+    from repro.core.scheduling import reform_chain  # host-side only
 
     dead = set(failed)
     members = {d for c in chains for d in c}
@@ -866,29 +570,41 @@ def _plan_recovery_cached(
         groups.append(tuple(resent))
         heads.append(prefix[-1] if prefix else src)
 
-    at_heads = AtDevices(tuple(dict.fromkeys(heads)), 0)
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, 1)
+    for h in heads:
+        buf_init[h][0] = 0
+        out_init[h][0] = 0
     steps: list[Step] = [Step(edges=(), tag="detect")]
     full = [(h,) + g for h, g in zip(heads, groups)]
     max_len = max((len(f) for f in full), default=1)
     for t in range(max_len - 1):
         edges = tuple((f[t], f[t + 1]) for f in full if t + 1 < len(f))
-        # At t == 0 the banked members re-read the payload from local
-        # memory (the detection window cleared the transit registers).
-        steps.append(Step(
-            edges=edges, width=1, tag="chain",
-            load=at_heads if t == 0 else None,
-            write=AtDevices(tuple(dst for _, dst in edges), 0),
-        ))
+        write = _rows(L, 1)
+        for _, dst in edges:
+            write[dst][0] = 0
+        load = None
+        if t == 0:
+            # The banked members re-read the payload from local memory
+            # (the detection window cleared the transit registers).
+            load_rows = _rows(L, 1)
+            for h in heads:
+                load_rows[h][0] = 0
+            load = _table(load_rows)
+        steps.append(
+            Step(edges=edges, width=1, tag="chain", load=load,
+                 write=_table(write))
+        )
     return ChainProgram(
         collective="recovery", kind="pipeline", num_devices=L,
         addr_shards=1, out_slots=1,
-        buf_init=at_heads, out_init=at_heads,
+        buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=tuple(groups), head=src,
         group_heads=tuple(heads),
     ).validate()
 
 
-@functools.lru_cache(maxsize=_PLANNER_CACHE_MAXSIZE)
+@functools.lru_cache(maxsize=None)
 def plan_all_gather(
     num_devices: int, orders: tuple[tuple[int, ...], ...]
 ) -> ChainProgram:
@@ -898,32 +614,42 @@ def plan_all_gather(
     L = int(num_devices)
     orders = _check_rings(L, orders)
     K, S = len(orders), len(orders[0])
-    intra, cross, _pos, _ring_of = _ring_maps(orders)
+    intra, cross, pos, ring_of = _ring_maps(orders)
+
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, L)
+    for d in pos:
+        buf_init[d][0] = 0
+        out_init[d][d] = 0
 
     steps: list[Step] = []
     for s in range(1, S):
-        # write[d][0] = orders[ring][(pos - s) % S]
-        steps.append(Step(
-            edges=intra, width=1, tag="intra",
-            write=MemberLookup(1, ar=1, ap=1, bp=-s),
-        ))
+        write = _rows(L, 1)
+        for d in pos:
+            write[d][0] = orders[ring_of[d]][(pos[d] - s) % S]
+        steps.append(Step(edges=intra, width=1, tag="intra", write=_table(write)))
     for c in range(1, K):
-        # load (c==1): this ring's members; write: ring (ring - c)'s.
-        steps.append(Step(
-            edges=cross, width=S, tag="cross",
-            load=MemberLookup(S, ar=1, ep=1) if c == 1 else None,
-            write=MemberLookup(S, ar=1, br=-c, ep=1),
-        ))
+        load = None
+        if c == 1:
+            load_rows = _rows(L, S)
+            for d in pos:
+                load_rows[d] = list(orders[ring_of[d]])
+            load = _table(load_rows)
+        write = _rows(L, S)
+        for d in pos:
+            write[d] = list(orders[(ring_of[d] - c) % K])
+        steps.append(
+            Step(edges=cross, width=S, tag="cross", load=load, write=_table(write))
+        )
     return ChainProgram(
         collective="all_gather", kind="stepped", num_devices=L,
         addr_shards=1, out_slots=L,
-        buf_init=Affine(1),  # members hold shard 0; non-members none
-        out_init=Diag(L, Affine(1)),  # own slot seeded from own shard
+        buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=orders,
     ).validate()
 
 
-@functools.lru_cache(maxsize=_PLANNER_CACHE_MAXSIZE)
+@functools.lru_cache(maxsize=None)
 def plan_reduce_scatter(
     num_devices: int, orders: tuple[tuple[int, ...], ...]
 ) -> ChainProgram:
@@ -940,56 +666,87 @@ def plan_reduce_scatter(
     L = int(num_devices)
     orders = _check_rings(L, orders)
     K, S = len(orders), len(orders[0])
-    intra, cross, _pos, _ring_of = _ring_maps(orders)
+    intra, cross, pos, ring_of = _ring_maps(orders)
     steps: list[Step] = []
 
     if K == 1:
         ring = orders[0]
+        buf_init = _rows(L, 1)
+        out_init = _rows(L, 1)
+        if S == 1:
+            out_init[ring[0]][0] = ring[0]
+        for d in pos:
+            buf_init[d][0] = ring[(pos[d] - 1) % S]
         for s in range(1, S):
-            # add[d][0] = ring[(pos - s - 1) % S]
+            add = _rows(L, 1)
+            for d in pos:
+                add[d][0] = ring[(pos[d] - s - 1) % S]
+            write = None
+            if s == S - 1:
+                w = _rows(L, 1)
+                for d in pos:
+                    w[d][0] = 0
+                write = _table(w)
             steps.append(Step(
                 edges=intra, width=1, tag="intra", combine=ADD,
-                add_src=MemberLookup(1, ar=1, ap=1, bp=-s - 1),
-                write=Affine(1) if s == S - 1 else None,
+                add_src=_table(add), write=write,
             ))
         return ChainProgram(
             collective="reduce_scatter", kind="stepped", num_devices=L,
             addr_shards=L, out_slots=1,
-            buf_init=MemberLookup(1, ar=1, ap=1, bp=-1),
-            out_init=(
-                AtDevices((ring[0],), ring[0]) if S == 1
-                else AtDevices((), width=1)
-            ),
+            buf_init=_table(buf_init), out_init=_table(out_init),
             steps=tuple(steps), groups=orders,
         ).validate()
 
     out_slots = K
+    buf_init = _rows(L, K)
+    out_init = _rows(L, K)
     if S == 1:
         # No intra phase: seed the group slots straight from the input.
-        buf_init = AtDevices((), width=K)
-        out_init = MemberLookup(K, er=1)  # out_init[d][j] = orders[j][0]
+        for d in pos:
+            for j in range(K):
+                out_init[d][j] = orders[j][0]
     else:
-        # buf_init[d][j] = orders[j][(pos - 1) % S]
-        buf_init = MemberLookup(K, er=1, ap=1, bp=-1)
-        out_init = AtDevices((), width=K)
+        for d in pos:
+            buf_init[d] = [orders[j][(pos[d] - 1) % S] for j in range(K)]
         for s in range(1, S):
+            add = _rows(L, K)
+            for d in pos:
+                add[d] = [orders[j][(pos[d] - s - 1) % S] for j in range(K)]
+            write = None
+            if s == S - 1:
+                w = _rows(L, K)
+                for d in pos:
+                    w[d] = list(range(K))
+                write = _table(w)
             steps.append(Step(
                 edges=intra, width=K, tag="intra", combine=ADD,
-                add_src=MemberLookup(K, er=1, ap=1, bp=-s - 1),
-                write=Affine(K, e=1, m=K) if s == S - 1 else None,
+                add_src=_table(add), write=write,
             ))
     for c in range(1, K):
+        load = None
+        if c == 1:
+            load_rows = _rows(L, 1)
+            for d in pos:
+                load_rows[d][0] = (ring_of[d] - 1) % K
+            load = _table(load_rows)
+        add = _rows(L, 1)
+        for d in pos:
+            add[d][0] = (ring_of[d] - c - 1) % K
+        write = None
+        if c == K - 1:
+            w = _rows(L, 1)
+            for d in pos:
+                w[d][0] = 0
+            write = _table(w)
         steps.append(Step(
             edges=cross, width=1, tag="cross", combine=ADD,
-            add_from="out",
-            add_src=Affine(1, c=1, b=-c - 1, m=K),
-            load=Affine(1, c=1, b=-1, m=K) if c == 1 else None,
-            write=Affine(1) if c == K - 1 else None,
+            add_from="out", add_src=_table(add), load=load, write=write,
         ))
     return ChainProgram(
         collective="reduce_scatter", kind="stepped", num_devices=L,
         addr_shards=L, out_slots=out_slots,
-        buf_init=buf_init, out_init=out_init,
+        buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=orders,
     ).validate()
 
@@ -1006,25 +763,25 @@ def plan_all_reduce(
     historical ``chain_all_reduce`` schedule, kept so its fold order
     (and therefore every bit-exactness pin) is unchanged.
     ``wire_dtype="int8"`` ships every hop quantized (per-hop int8 frame
-    + f32 scale); it composes with any (K, algo). The wire variants
-    share ONE cached plan (:meth:`ChainProgram.with_wire_dtype`)."""
-    return _plan_all_reduce(num_devices, orders, algo).with_wire_dtype(
-        wire_dtype
+    + f32 scale); it composes with any (K, algo)."""
+    return _plan_all_reduce(
+        num_devices, orders, algo, normalize_wire_dtype(wire_dtype)
     )
 
 
-@functools.lru_cache(maxsize=_PLANNER_CACHE_MAXSIZE)
+@functools.lru_cache(maxsize=None)
 def _plan_all_reduce(
     num_devices: int,
     orders: tuple[tuple[int, ...], ...],
     algo: str,
+    wire_dtype: str | None,
 ) -> ChainProgram:
     if algo not in ALL_REDUCE_ALGOS:
         raise ValueError(f"unknown algo {algo!r}; expected {ALL_REDUCE_ALGOS}")
     L = int(num_devices)
     orders = _check_rings(L, orders)
     K, S = len(orders), len(orders[0])
-    intra, cross, _pos, _ring_of = _ring_maps(orders)
+    intra, cross, pos, ring_of = _ring_maps(orders)
     steps: list[Step] = []
 
     if K == 1 and S == L:
@@ -1033,72 +790,115 @@ def _plan_all_reduce(
         # simulator-only, the SPMD layer requires a full partition —
         # falls through to the position-addressed schedules below, so
         # its shard size is payload/S, not payload/num_devices.
-        own = MemberLookup(1, ar=1, ap=1)  # slot = device id
+        ring = orders[0]
+        buf_init = _rows(L, 1)
+        out_init = _rows(L, L)
+        if S == 1:
+            out_init[ring[0]][ring[0]] = ring[0]
+        for d in pos:
+            buf_init[d][0] = ring[(pos[d] - 1) % S]
         for s in range(1, S):  # reduce-scatter (device-id chunks)
+            add = _rows(L, 1)
+            for d in pos:
+                add[d][0] = ring[(pos[d] - s - 1) % S]
+            write = None
+            if s == S - 1:
+                w = _rows(L, 1)
+                for d in pos:
+                    w[d][0] = d  # own chunk lands in slot = device id
+                write = _table(w)
             steps.append(Step(
                 edges=intra, width=1, tag="intra", combine=ADD,
-                add_src=MemberLookup(1, ar=1, ap=1, bp=-s - 1),
-                write=own if s == S - 1 else None,
+                add_src=_table(add), write=write,
             ))
         for s in range(1, S):  # all-gather
-            steps.append(Step(
-                edges=intra, width=1, tag="intra",
-                write=MemberLookup(1, ar=1, ap=1, bp=-s),
-            ))
+            write = _rows(L, 1)
+            for d in pos:
+                write[d][0] = ring[(pos[d] - s) % S]
+            steps.append(
+                Step(edges=intra, width=1, tag="intra", write=_table(write))
+            )
         return ChainProgram(
             collective="all_reduce", kind="stepped", num_devices=L,
             addr_shards=L, out_slots=L,
-            buf_init=MemberLookup(1, ar=1, ap=1, bp=-1),
-            out_init=Diag(L, own) if S == 1 else AtDevices((), width=L),
+            buf_init=_table(buf_init), out_init=_table(out_init),
             steps=tuple(steps), groups=orders, algo=algo,
+            wire_dtype=wire_dtype,
         ).validate()
 
     if algo == "rotation" or S == 1:
         # Full-payload rotations (S=1 rs_ag degenerates to the same
         # cross-only schedule: there is nothing to shard over).
-        acc = Affine(1)  # members address frame/slot 0
+        buf_init = _rows(L, 1)
+        out_init = _rows(L, 1)
+        for d in pos:
+            buf_init[d][0] = 0
+            out_init[d][0] = 0
+        w = _rows(L, 1)
+        for d in pos:
+            w[d][0] = 0
+        acc_write = _table(w)
         for _s in range(1, S):
             steps.append(Step(
                 edges=intra, width=1, tag="intra",
-                write=acc, write_op=ADD,
+                write=acc_write, write_op=ADD,
             ))
         for c in range(1, K):
+            load = acc_write if c == 1 else None  # same table shape: slot 0
             steps.append(Step(
                 edges=cross, width=1, tag="cross",
-                load=acc if c == 1 else None, write=acc, write_op=ADD,
+                load=load, write=acc_write, write_op=ADD,
             ))
         return ChainProgram(
             collective="all_reduce", kind="stepped", num_devices=L,
             addr_shards=1, out_slots=1,
-            buf_init=acc, out_init=acc,
+            buf_init=_table(buf_init), out_init=_table(out_init),
             steps=tuple(steps), groups=orders, algo=algo,
+            wire_dtype=wire_dtype,
         ).validate()
 
     # rs_ag, K > 1, S > 1: shards addressed by ring position.
-    pos_write = Affine(1, a=1, m=S)  # slot = own ring position
+    buf_init = _rows(L, 1)
+    out_init = _rows(L, S)
+    for d in pos:
+        buf_init[d][0] = (pos[d] - 1) % S
     for s in range(1, S):  # fused per-ring reduce-scatter
+        add = _rows(L, 1)
+        for d in pos:
+            add[d][0] = (pos[d] - s - 1) % S
+        write = None
+        if s == S - 1:
+            w = _rows(L, 1)
+            for d in pos:
+                w[d][0] = pos[d]
+            write = _table(w)
         steps.append(Step(
             edges=intra, width=1, tag="intra", combine=ADD,
-            add_src=Affine(1, a=1, b=-s - 1, m=S),
-            write=pos_write if s == S - 1 else None,
+            add_src=_table(add), write=write,
         ))
+    w = _rows(L, 1)
+    for d in pos:
+        w[d][0] = pos[d]
+    pos_write = _table(w)
     for _c in range(1, K):  # cross-ring shard rotation (accumulating)
         steps.append(Step(
             edges=cross, width=1, tag="cross",
             write=pos_write, write_op=ADD,
         ))
     for s in range(1, S):  # fused per-ring all-gather
+        load = pos_write if s == 1 else None
+        write = _rows(L, 1)
+        for d in pos:
+            write[d][0] = (pos[d] - s) % S
         steps.append(Step(
-            edges=intra, width=1, tag="intra",
-            load=pos_write if s == 1 else None,
-            write=Affine(1, a=1, b=-s, m=S),
+            edges=intra, width=1, tag="intra", load=load, write=_table(write)
         ))
     return ChainProgram(
         collective="all_reduce", kind="stepped", num_devices=L,
         addr_shards=S, out_slots=S,
-        buf_init=Affine(1, a=1, b=-1, m=S),
-        out_init=AtDevices((), width=S),
+        buf_init=_table(buf_init), out_init=_table(out_init),
         steps=tuple(steps), groups=orders, algo=algo,
+        wire_dtype=wire_dtype,
     ).validate()
 
 
@@ -1113,26 +913,34 @@ def plan_all_to_all(
     intra-ring rotations with cross-ring hops — (K·(S-1) + (K-1)) =
     L-1 steps either way (a chunk train cannot shrink), but every hop
     stays ring-local/position-paired. ``wire_dtype="int8"`` ships the
-    rotating train quantized (per-hop int8 frame + f32 scale). The
-    wire variants share ONE cached plan
-    (:meth:`ChainProgram.with_wire_dtype`)."""
-    return _plan_all_to_all(num_devices, orders).with_wire_dtype(wire_dtype)
+    rotating train quantized (per-hop int8 frame + f32 scale)."""
+    return _plan_all_to_all(
+        num_devices, orders, normalize_wire_dtype(wire_dtype)
+    )
 
 
-@functools.lru_cache(maxsize=_PLANNER_CACHE_MAXSIZE)
+@functools.lru_cache(maxsize=None)
 def _plan_all_to_all(
     num_devices: int,
     orders: tuple[tuple[int, ...], ...],
+    wire_dtype: str | None,
 ) -> ChainProgram:
     L = int(num_devices)
     orders = _check_rings(L, orders)
     K, S = len(orders), len(orders[0])
-    intra, cross, _pos, _ring_of = _ring_maps(orders)
+    intra, cross, pos, ring_of = _ring_maps(orders)
 
-    def peel(j: int, t: int) -> Diag:
-        # write[d][d] = orders[(ring - j) % K][(pos - t) % S]: the train
-        # at (ring, pos) originated j cross hops / t intra hops back.
-        return Diag(L, MemberLookup(1, ar=1, br=-j, ap=1, bp=-t))
+    buf_init = _rows(L, L)
+    out_init = _rows(L, L)
+    for d in pos:
+        buf_init[d] = list(range(L))
+        out_init[d][d] = d
+
+    def peel(origin_of) -> Table:
+        write = _rows(L, L)
+        for d in pos:
+            write[d][d] = origin_of(d)
+        return _table(write)
 
     steps: list[Step] = []
     for j in range(K):
@@ -1140,54 +948,31 @@ def _plan_all_to_all(
         # originated at ring (c - j), position (p - t) — the intra
         # offset accumulates across stages.
         if j > 0:
+            t = j * (S - 1)
             steps.append(Step(
                 edges=cross, width=L, tag="cross",
-                write=peel(j, j * (S - 1)),
+                write=peel(
+                    lambda d, j=j, t=t: orders[(ring_of[d] - j) % K][
+                        (pos[d] - t) % S
+                    ]
+                ),
             ))
         for s in range(1, S):
+            t = j * (S - 1) + s
             steps.append(Step(
                 edges=intra, width=L, tag="intra",
-                write=peel(j, j * (S - 1) + s),
+                write=peel(
+                    lambda d, j=j, t=t: orders[(ring_of[d] - j) % K][
+                        (pos[d] - t) % S
+                    ]
+                ),
             ))
     return ChainProgram(
         collective="all_to_all", kind="stepped", num_devices=L,
         addr_shards=L, out_slots=L,
-        buf_init=Affine(L, e=1, m=L),  # chunk train: iota row
-        out_init=Diag(L, MemberLookup(1, ar=1, ap=1)),  # own chunk
-        steps=tuple(steps), groups=orders,
+        buf_init=_table(buf_init), out_init=_table(out_init),
+        steps=tuple(steps), groups=orders, wire_dtype=wire_dtype,
     ).validate()
-
-
-# ---------------------------------------------------------------------------
-# Planner cache instrumentation
-# ---------------------------------------------------------------------------
-
-# The memoized planner entry points (public name -> cached callable).
-# Keys must stay COMPLETE: every argument that changes the emitted
-# program is part of the cache key (regression-tested).
-PLANNER_CACHES = {
-    "plan_broadcast": plan_broadcast,
-    "plan_recovery": _plan_recovery_cached,
-    "plan_all_gather": plan_all_gather,
-    "plan_reduce_scatter": plan_reduce_scatter,
-    "plan_all_reduce": _plan_all_reduce,
-    "plan_all_to_all": _plan_all_to_all,
-}
-
-
-def planner_cache_stats() -> dict[str, dict[str, int]]:
-    """Per-planner ``lru_cache`` statistics (hits/misses/maxsize/
-    currsize) — the observability hook for cache sizing."""
-    return {
-        name: fn.cache_info()._asdict()
-        for name, fn in PLANNER_CACHES.items()
-    }
-
-
-def clear_planner_caches() -> None:
-    """Drop every memoized plan (benchmarks time cold planning)."""
-    for fn in PLANNER_CACHES.values():
-        fn.cache_clear()
 
 
 def _ceil_div(a: int, b: int) -> int:

@@ -44,6 +44,12 @@ def test_while_trip_count_multiplies_flops():
     assert cost.flops == 10 * (2 * 8 * 16 * 16 + 1)
 
 
+def test_constant_bytes_sums_all_computations():
+    # SIMPLE holds four literal constants: f32[16,16] in %body (1024 B)
+    # plus three s32[] scalars (4 B each) across body/cond/main.
+    assert hlo_cost.constant_bytes(SIMPLE) == 16 * 16 * 4 + 3 * 4
+
+
 def test_parse_module_structure():
     comps = hlo_cost.parse_module(SIMPLE)
     assert set(comps) == {"body", "cond", "main"}

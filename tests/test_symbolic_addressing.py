@@ -1,0 +1,281 @@
+"""Symbolic shard addressing: materialized equivalence + cache audits.
+
+Three pins on the symbolic-addressing refactor of ``core/program.py``:
+
+1. **Dense equivalence (property test).** Every table the live planners
+   emit symbolically (``Affine`` / ``MemberLookup`` / ``Diag`` /
+   ``AtDevices``) must materialize — via ``resolve_table`` — to exactly
+   the dense tuple the pre-refactor planners built for the same inputs.
+   The pre-refactor module is vendored verbatim as
+   ``tests/_dense_planners.py`` (a frozen golden reference), so this is
+   a bit-exact schedule pin, not a semantic approximation. Random
+   rings/partitions at L ≤ 64 cover all five planners plus recovery,
+   including scrambled (non-canonical) ring orders.
+
+2. **Golden large-ring schedules (device-free, QUICK lane).** Planning
+   + ``validate()`` for L ∈ {256, 1024} completes in seconds because
+   both are now O(L) per step, and spot-checked ``resolve_row`` values
+   match closed forms. The 1024-ring all-to-all is the ROADMAP
+   acceptance case.
+
+3. **Planner cache audit (mirrors the PR 8 ``auto_ring_chains``
+   audit).** The six planner caches are bounded, expose stats, key
+   completely on everything that changes the plan, and do NOT key on
+   ``wire_dtype`` (wire variants are O(1) ``with_wire_dtype`` replicas
+   of one cached base).
+"""
+
+from __future__ import annotations
+
+import pickle
+import random
+import time
+
+import pytest
+
+import _dense_planners as old
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import program as prg
+from repro.core.topology import MeshTopology
+
+# (L, K) partitions exercised by the property test: mixes K=1, K=L
+# (S=1), and proper multi-ring splits.
+_PARTITIONS = [
+    (2, 1), (4, 1), (4, 2), (6, 2), (8, 1), (8, 2), (8, 4), (8, 8),
+    (12, 3), (16, 2), (16, 4), (24, 4), (32, 8), (48, 6), (64, 4),
+]
+
+
+def _scrambled_rings(L: int, K: int, seed: int) -> tuple[tuple[int, ...], ...]:
+    """K contiguous slices of a seeded permutation of range(L)."""
+    perm = list(range(L))
+    random.Random(seed).shuffle(perm)
+    S = L // K
+    return tuple(tuple(perm[i * S : (i + 1) * S]) for i in range(K))
+
+
+def _materialize(program, table):
+    return None if table is None else prg.resolve_table(program, table)
+
+
+def assert_programs_dense_equal(new_p, old_p):
+    """Field-by-field: the symbolic program materializes to the dense one."""
+    for fld in (
+        "collective", "kind", "num_devices", "addr_shards", "out_slots",
+        "groups", "head", "algo", "group_heads", "wire_dtype",
+    ):
+        assert getattr(new_p, fld) == getattr(old_p, fld), fld
+    assert _materialize(new_p, new_p.buf_init) == old_p.buf_init
+    assert _materialize(new_p, new_p.out_init) == old_p.out_init
+    assert len(new_p.steps) == len(old_p.steps)
+    for t, (sn, so) in enumerate(zip(new_p.steps, old_p.steps)):
+        assert sn.edges == so.edges, t
+        assert sn.width == so.width, t
+        assert sn.combine == so.combine, t
+        assert sn.add_from == so.add_from, t
+        assert sn.write_op == so.write_op, t
+        assert sn.tag == so.tag, t
+        assert sn.wire_dtype == so.wire_dtype, t
+        for fld in ("add_src", "load", "write"):
+            got = _materialize(new_p, getattr(sn, fld))
+            want = getattr(so, fld)
+            assert got == want, f"step {t} {fld}"
+        # single-row resolution agrees with the full table
+        if sn.write is not None:
+            for d in (0, new_p.num_devices - 1):
+                assert prg.resolve_row(new_p, sn.write, d) == so.write[d]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    part=st.sampled_from(_PARTITIONS),
+    seed=st.integers(min_value=0, max_value=10**6),
+    scramble=st.booleans(),
+)
+def test_planners_materialize_to_prerefactor_dense_tables(
+    part, seed, scramble
+):
+    L, K = part
+    rings = (
+        _scrambled_rings(L, K, seed)
+        if scramble
+        else tuple(
+            tuple(range(i * (L // K), (i + 1) * (L // K))) for i in range(K)
+        )
+    )
+    cases = [
+        (prg.plan_all_gather(L, rings), old.plan_all_gather(L, rings)),
+        (prg.plan_reduce_scatter(L, rings), old.plan_reduce_scatter(L, rings)),
+        (prg.plan_all_to_all(L, rings), old.plan_all_to_all(L, rings)),
+    ]
+    for algo in prg.ALL_REDUCE_ALGOS:
+        wire = "int8" if seed % 2 else None
+        cases.append(
+            (
+                prg.plan_all_reduce(L, rings, algo=algo, wire_dtype=wire),
+                old.plan_all_reduce(L, rings, algo=algo, wire_dtype=wire),
+            )
+        )
+    # broadcast: head = first member, chains = the rings minus the head
+    head = rings[0][0]
+    chains = tuple(
+        c for c in (rings[0][1:],) + rings[1:] if len(c)
+    )
+    cases.append(
+        (
+            prg.plan_broadcast(L, head, chains),
+            old.plan_broadcast(L, head, chains),
+        )
+    )
+    for new_p, old_p in cases:
+        assert_programs_dense_equal(new_p, old_p)
+
+
+def test_noncanonical_ring_sets_match_dense():
+    """The scrambled K=2 rings from test_program.py exercise the
+    irregular (non-canonical) ring context fallback explicitly."""
+    rings = ((3, 1, 0, 2), (7, 5, 6, 4))
+    for maker in (
+        lambda m: m.plan_all_gather(8, rings),
+        lambda m: m.plan_reduce_scatter(8, rings),
+        lambda m: m.plan_all_reduce(8, rings, algo="rs_ag"),
+        lambda m: m.plan_all_reduce(8, rings, algo="rotation"),
+        lambda m: m.plan_all_to_all(8, rings),
+    ):
+        assert_programs_dense_equal(maker(prg), maker(old))
+
+
+def test_recovery_planner_matches_dense():
+    topo = MeshTopology(4, 2)
+    chains = ((1, 2, 3), (4, 5, 6, 7))
+    for failed in (2, 4, (2, 5)):
+        new_p = prg.plan_recovery(topo, 0, chains, failed)
+        old_p = old.plan_recovery(topo, 0, chains, failed)
+        assert_programs_dense_equal(new_p, old_p)
+
+
+# ---------------------------------------------------------------------------
+# Golden large-ring schedules — device-free, QUICK lane.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,K", [(256, 8), (1024, 16)])
+def test_large_ring_a2a_plans_in_seconds(L, K):
+    """O(L) planning + validation: the 1024-ring all-to-all (the
+    ROADMAP acceptance case) plans and validates in seconds without
+    ever materializing an L×L table."""
+    S = L // K
+    rings = tuple(
+        tuple(range(i * S, (i + 1) * S)) for i in range(K)
+    )
+    prg.clear_planner_caches()
+    t0 = time.perf_counter()
+    p = prg.plan_all_to_all(L, rings)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 30.0, f"plan+validate took {elapsed:.1f}s"
+    assert len(p.steps) == L - 1  # chunk train cannot shrink
+    assert p.addr_shards == L and p.out_slots == L
+    # no dense table anywhere in the program
+    tables = [p.buf_init, p.out_init]
+    for s in p.steps:
+        tables += [t for t in (s.add_src, s.load, s.write) if t is not None]
+    assert not any(isinstance(t, tuple) for t in tables)
+    # spot checks against closed forms: every device's train starts as
+    # the identity chunk order, and the final output is chunk j from
+    # source j (out_init row d has slot d at its own column only).
+    for d in (0, L // 2, L - 1):
+        assert prg.resolve_row(p, p.buf_init, d) == tuple(range(L))
+        own = prg.resolve_row(p, p.out_init, d)
+        assert own[d] == d and all(
+            v == -1 for j, v in enumerate(own) if j != d
+        )
+
+
+@pytest.mark.parametrize("L,K", [(256, 8), (1024, 16)])
+def test_large_ring_all_reduce_golden(L, K):
+    S = L // K
+    rings = tuple(
+        tuple(range(i * S, (i + 1) * S)) for i in range(K)
+    )
+    t0 = time.perf_counter()
+    p = prg.plan_all_reduce(L, rings, algo="rs_ag")
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 30.0
+    # rs_ag over K rings: (S-1) RS + (S-1) AG intra steps, plus K-1
+    # cross-ring rotation steps in between.
+    assert len(p.steps) == 2 * (S - 1) + (K - 1)
+    assert p.addr_shards == S
+    # position-addressed chunks: the RS add target depends only on the
+    # device's ring position (d % S), never on which ring it sits in
+    for d in (0, S - 1, L - 1):
+        row = prg.resolve_row(p, p.steps[0].add_src, d)
+        assert row == prg.resolve_row(p, p.steps[0].add_src, d % S)
+        assert 0 <= row[0] < S
+
+
+def test_program_pickle_size_scales_linearly():
+    """The serialized program must not hide O(L^2) dense state: pickle
+    bytes per step stay O(K), not O(L)."""
+    sizes = {}
+    for L, K in ((256, 8), (1024, 8)):
+        S = L // K
+        rings = tuple(
+            tuple(range(i * S, (i + 1) * S)) for i in range(K)
+        )
+        p = prg.plan_all_to_all(L, rings)
+        sizes[L] = len(pickle.dumps(p)) / len(p.steps)
+    # quadrupling L (same K) must not even double per-step bytes
+    assert sizes[1024] < 2 * sizes[256], sizes
+
+
+# ---------------------------------------------------------------------------
+# Planner cache audit (satellite: bounded caches + complete keys).
+# ---------------------------------------------------------------------------
+
+
+def test_planner_caches_are_bounded_and_registered():
+    assert set(prg.PLANNER_CACHES) == {
+        "plan_broadcast", "plan_recovery", "plan_all_gather",
+        "plan_reduce_scatter", "plan_all_reduce", "plan_all_to_all",
+    }
+    for name, fn in prg.PLANNER_CACHES.items():
+        assert fn.cache_info().maxsize == prg._PLANNER_CACHE_MAXSIZE, name
+    stats = prg.planner_cache_stats()
+    assert set(stats) == set(prg.PLANNER_CACHES)
+    for name, s in stats.items():
+        assert {"hits", "misses", "maxsize", "currsize"} <= set(s), name
+
+
+def test_planner_cache_keys_are_complete_and_wire_free():
+    """Distinct (L, rings, algo) inputs never alias; wire_dtype is NOT
+    part of the key — int8 variants are with_wire_dtype replicas of one
+    cached base program."""
+    prg.clear_planner_caches()
+    assert all(
+        s["currsize"] == 0 for s in prg.planner_cache_stats().values()
+    )
+    r8 = (tuple(range(8)),)
+    r44 = ((0, 1, 2, 3), (4, 5, 6, 7))
+    a = prg.plan_all_reduce(8, r8, algo="rs_ag")
+    b = prg.plan_all_reduce(8, r8, algo="rotation")
+    c = prg.plan_all_reduce(8, r44, algo="rs_ag")
+    info = prg.PLANNER_CACHES["plan_all_reduce"].cache_info()
+    assert info.currsize == 3  # algo and ring set are both in the key
+    # wire variants share the cached base: no new entry, O(1) replace
+    q = prg.plan_all_reduce(8, r8, algo="rs_ag", wire_dtype="int8")
+    assert prg.PLANNER_CACHES["plan_all_reduce"].cache_info().currsize == 3
+    assert q.wire_dtype == "int8" and q.steps[0].edges == a.steps[0].edges
+    assert q.with_wire_dtype(None) is not q
+    assert a.with_wire_dtype(None) is a  # no-op returns the same object
+    # cold-vs-warm agreement regardless of call order
+    prg.clear_planner_caches()
+    assert prg.plan_all_reduce(8, r44, algo="rs_ag") == c
+    assert prg.plan_all_reduce(8, r8, algo="rotation") == b
+    assert prg.plan_all_reduce(8, r8, algo="rs_ag") == a
+    # same completeness for all_to_all (the other wire-capable planner)
+    prg.clear_planner_caches()
+    prg.plan_all_to_all(8, r8)
+    prg.plan_all_to_all(8, r44)
+    prg.plan_all_to_all(8, r44, wire_dtype="int8")
+    assert prg.PLANNER_CACHES["plan_all_to_all"].cache_info().currsize == 2
