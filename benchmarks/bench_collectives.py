@@ -391,6 +391,96 @@ def _recovery_metrics() -> dict[str, dict]:
     return out
 
 
+def _tiered_metrics() -> dict[str, dict]:
+    """Model-only tier-aware planning entries (no HLO twin — the SPMD
+    executor is topology-agnostic): on two 2-tier pod topologies, the
+    K-swept all-reduce chosen on the weighted link graph vs the
+    tier-blind twin (chosen on the uniform mesh of the same shape,
+    then priced on the tiered graph), plus the pod-partitioned
+    broadcast chains. Self-consistency: the tier-aware plan is never
+    slower than the tier-blind one on ANY entry, STRICTLY faster on
+    the 4-pod auto all-reduce entry (where one sub-ring per pod — the
+    hierarchical schedule — emerges, K=4), and every broadcast chain
+    crosses the inter-pod boundary at most once (exactly once for
+    every remote-pod chain). BENCH=1 ci.sh runs this."""
+    from repro.core.program import tier_crossing_stats
+    from repro.core.scheduling import (
+        partition_schedule,
+        partition_tier_crossings,
+    )
+    from repro.core.simulator import (
+        all_reduce_latency,
+        choose_num_chains,
+        multi_chain_latency,
+        plan_ring_collective,
+    )
+    from repro.core.topology import MeshTopology, parse_topology_spec
+
+    payload = N * 4
+    out: dict[str, dict] = {}
+    # the same spec grammar dryrun --topology / train --topology take
+    topos = {
+        "p4": parse_topology_spec("pods=4x(4x4):interpod_bw=0.25"),
+        "p2": parse_topology_spec(
+            "pods=2x(4x4):interpod_bw=0.5:interpod_lat=2"),
+    }
+    for tag, topo in topos.items():
+        uniform = MeshTopology(topo.nx, topo.ny, topo.torus)
+        dests = list(range(1, topo.num_nodes))
+        for mk in (2, 4):
+            aware = choose_num_chains(
+                topo, 0, dests, payload, max_chains=mk,
+                collective="all_reduce", algo="rs_ag", detail=True,
+            )
+            blind = choose_num_chains(
+                uniform, 0, dests, payload, max_chains=mk,
+                collective="all_reduce", algo="rs_ag", detail=True,
+            )
+            blind_cc = all_reduce_latency(
+                topo, 0, blind["rings"], payload, algo="rs_ag")
+            program = plan_ring_collective(
+                "all_reduce", topo.num_nodes, aware["rings"])
+            stats = tier_crossing_stats(program, topo)
+            out[f"tiered_{tag}_ar_k{mk}"] = {
+                "topology": topo.spec(),
+                "max_chains": mk,
+                "num_chains": aware["num_chains"],
+                "modeled_latency_cc": int(aware["latency_cc"]),
+                "blind_num_chains": blind["num_chains"],
+                "blind_latency_cc": int(blind_cc),
+                "modeled_bytes": program.wire_bytes(payload),
+                "interpod_crossings": stats["total"],
+                "crossing_steps": stats["crossing_steps"],
+            }
+        # pod-partitioned broadcast: one chain per pod, remote chains
+        # entering their pod once and staying there
+        k = topo.num_pods
+        chains = partition_schedule(topo, dests, 0, num_chains=k)
+        blind_chains = partition_schedule(uniform, dests, 0, num_chains=k)
+        out[f"tiered_{tag}_bcast_k{k}"] = {
+            "topology": topo.spec(),
+            "num_chains": k,
+            "modeled_latency_cc": int(
+                multi_chain_latency(topo, 0, chains, payload)),
+            "blind_latency_cc": int(
+                multi_chain_latency(topo, 0, blind_chains, payload)),
+            "chain_tier_crossings": partition_tier_crossings(
+                topo, chains, 0),
+        }
+    for name, e in out.items():
+        assert e["modeled_latency_cc"] <= e["blind_latency_cc"], (name, e)
+    # THE hierarchical pin: on the 4-pod topology the weighted planner
+    # picks one sub-ring per pod and beats the tier-blind plan
+    # STRICTLY on the same links.
+    p4 = out["tiered_p4_ar_k4"]
+    assert p4["num_chains"] == 4, p4
+    assert p4["modeled_latency_cc"] < p4["blind_latency_cc"], p4
+    for name, k in (("tiered_p4_bcast_k4", 4), ("tiered_p2_bcast_k2", 2)):
+        cr = out[name]["chain_tier_crossings"]
+        assert sorted(cr) == [0] + [1] * (k - 1), (name, cr)
+    return out
+
+
 def main() -> list[tuple[str, float, str]]:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
@@ -423,6 +513,15 @@ def main() -> list[tuple[str, float, str]]:
         rows.append((
             f"collectives.{name}", float(m["modeled_latency_cc"]),
             f"modeled_bytes={m['modeled_bytes']}",
+        ))
+    # Model-only entries: tier-aware planning on 2-tier pod topologies
+    # vs the tier-blind twin priced on the same links.
+    tiered = _tiered_metrics()
+    metrics.update(tiered)
+    for name, m in tiered.items():
+        rows.append((
+            f"collectives.{name}", float(m["modeled_latency_cc"]),
+            f"blind={m['blind_latency_cc']} k={m['num_chains']}",
         ))
     # Model-only entries: symbolic-addressing plan scaling + the HLO
     # constant-footprint independence pin.

@@ -39,9 +39,14 @@ def show_programs():
     """
     from repro.core import program as prg
     from repro.core.simulator import program_latency
+    from repro.core.topology import TieredMeshTopology
 
     L, payload = 8, 64 * 1024
     topo = MeshTopology(L, 1)
+    # a tiered twin of the same 8-ring: two 4-node pods joined by one
+    # 2x-slower link — the crossing counts below price against it
+    tiered = TieredMeshTopology(L, 1, pods_x=2, interpod_bw=0.5,
+                                interpod_latency=2)
     rings2 = ((0, 1, 2, 3), (4, 5, 6, 7))
     programs = [
         prg.plan_broadcast(L, 0, ((1, 2, 3), (4, 5, 6, 7))),
@@ -54,8 +59,12 @@ def show_programs():
     for prog in programs:
         for line in prog.describe(payload):
             print(line)
+        stats = prg.tier_crossing_stats(prog, tiered)
         print(f"  modeled latency: "
-              f"{program_latency(topo, 0, prog, payload)} CC\n")
+              f"{program_latency(topo, 0, prog, payload)} CC")
+        print(f"  inter-pod crossings on {tiered.spec()}: "
+              f"{stats['total']} link(s), per-chain {stats['per_group']}, "
+              f"{stats['crossing_steps']} crossing step(s)\n")
 
     # Recovery is a program too: two concurrent mid-chain failures of
     # the K=2 broadcast — the detection window plus each re-formed

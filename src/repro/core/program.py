@@ -640,6 +640,66 @@ def program_wire_bytes(program: ChainProgram, size_bytes: int) -> int:
     return program.wire_bytes(size_bytes)
 
 
+def tier_crossing_stats(
+    program: ChainProgram, topo, src: int = 0
+) -> dict[str, object]:
+    """Tier-crossing accounting of a planned program on a weighted
+    topology (``topo`` is any object honouring the link-graph contract
+    of :mod:`repro.core.topology` — duck-typed so this module stays
+    stdlib-only).
+
+    Returns ``{"per_group", "per_step", "crossing_steps", "total"}``:
+
+    * ``per_group`` — for each chain/ring, how many consecutive-member
+      route *segments* traverse at least one tier>0 (inter-pod) link
+      (pipeline chains walk head -> members; stepped rings close the
+      loop). The tier-aware partitioner targets ≤ 1 per chain.
+    * ``per_step`` — for each stepped round, how many of its fused
+      edges cross a pod boundary (pipeline programs have data-free
+      steps here: ``0`` per step).
+    * ``crossing_steps`` — number of steps with ≥ 1 crossing edge (the
+      "one inter-pod exchange per shard" count of a hierarchical
+      schedule).
+    * ``total`` — summed tier>0 link traversals over the group routes
+      (link granularity, wire-energy flavoured; the step edges are
+      derived from the same routes, so they are not double-counted).
+    """
+    heads = program.group_heads or (src,) * len(program.groups)
+    per_group: list[int] = []
+    total = 0
+    for order, head in zip(program.groups, heads):
+        if not order:
+            per_group.append(0)
+            continue
+        walk = [int(head)] + [int(d) for d in order]
+        if program.kind != "pipeline" and len(order) > 1:
+            walk = [int(d) for d in order] + [int(order[0])]  # closed ring
+        segs = 0
+        for a, b in zip(walk, walk[1:]):
+            c = topo.path_tier_crossings(a, b)
+            total += c
+            if c:
+                segs += 1
+        per_group.append(segs)
+    per_step: list[int] = []
+    crossing_steps = 0
+    for step in program.steps:
+        n = sum(
+            1
+            for a, b in step.edges
+            if topo.path_tier_crossings(int(a), int(b))
+        )
+        per_step.append(n)
+        if n:
+            crossing_steps += 1
+    return {
+        "per_group": per_group,
+        "per_step": per_step,
+        "crossing_steps": crossing_steps,
+        "total": total,
+    }
+
+
 def pipelined_wire_bytes(
     program: ChainProgram, size_bytes: int, num_frames: int = 1
 ) -> int:

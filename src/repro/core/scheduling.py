@@ -47,6 +47,16 @@ Balance bound: every chain's hop total is at most
 ``chain_total_hops(single_schedule)/K + 2*(nx + ny)`` — the slack is
 one diameter from LPT imbalance plus one diameter for the extra
 source->seed entry edge.
+
+Tier-awareness: all scoring goes through the weighted link-graph
+contract (``topo.weighted_distance`` / ``topo.path_tier_crossings``,
+see :mod:`.topology`), so on a uniform :class:`MeshTopology` every
+ordering and cost reduces exactly to the hop-based behaviour above,
+while on a :class:`~.topology.TieredMeshTopology` the growth step
+penalizes routes over slow tier>0 (inter-pod) links first and
+:func:`partition_schedule` additionally considers the **pod-aligned**
+partition (one sub-chain per pod, so each chain crosses the inter-pod
+boundary in at most one route segment).
 """
 
 from __future__ import annotations
@@ -83,23 +93,32 @@ def greedy_schedule(
     remaining = list(dict.fromkeys(destinations))  # dedupe, keep order
     # Start from the destination closest to the source (paper: min(D),
     # "dest closest to C0" — C0 is node 0 at the origin; we use the
-    # actual XY distance which coincides with min-ID on their layout).
-    start = min(remaining, key=lambda d: (topo.distance(source, d), d))
+    # weighted XY distance, which on a uniform mesh coincides with the
+    # hop count and hence min-ID on their layout).
+    start = min(
+        remaining, key=lambda d: (topo.weighted_distance(source, d), d)
+    )
     order = [start]
     remaining.remove(start)
     used_path: set[Link] = set(topo.xy_path(source, start))
 
     while remaining:
         best: int | None = None
-        best_hops = topo.nx + topo.ny  # upper bound as in Alg. 1
+        best_cost: int | None = None  # Alg. 1's bound, weighted
         best_path: list[Link] = []
         tail = order[-1]
         for cand in remaining:
             path = topo.xy_path(tail, cand)
-            if not (set(path) & used_path) and len(path) < best_hops:
-                best, best_hops, best_path = cand, len(path), path
+            if set(path) & used_path:
+                continue
+            w = topo.weighted_distance(tail, cand)
+            if best_cost is None or w < best_cost:
+                best, best_cost, best_path = cand, w, path
         if best is None:  # fallback: shortest path regardless of overlap
-            best = min(remaining, key=lambda c: (topo.distance(tail, c), c))
+            best = min(
+                remaining,
+                key=lambda c: (topo.weighted_distance(tail, c), c),
+            )
             best_path = topo.xy_path(tail, best)
         order.append(best)
         used_path.update(best_path)
@@ -115,7 +134,7 @@ def greedy_schedule(
 def _pairwise_dist(
     topo: MeshTopology, nodes: Sequence[int]
 ) -> list[list[int]]:
-    return [[topo.distance(a, b) for b in nodes] for a in nodes]
+    return [[topo.weighted_distance(a, b) for b in nodes] for a in nodes]
 
 
 def _held_karp_open_path(dist: list[list[int]]) -> list[int]:
@@ -300,6 +319,54 @@ def chain_total_hops(
     return hops
 
 
+def chain_total_cost(
+    topo: MeshTopology, order: Sequence[int], source: int = 0
+) -> int:
+    """Weighted link-latency total of a Chainwrite visiting ``order``
+    (== :func:`chain_total_hops` on a uniform mesh)."""
+    if not order:
+        return 0
+    cost = topo.weighted_distance(source, order[0])
+    for a, b in zip(order, order[1:]):
+        cost += topo.weighted_distance(a, b)
+    return cost
+
+
+def chain_slow_links(
+    topo: MeshTopology, order: Sequence[int], source: int = 0
+) -> int:
+    """Total tier>0 (inter-pod) links the chain's routes traverse."""
+    if not order:
+        return 0
+    n = topo.path_tier_crossings(source, order[0])
+    for a, b in zip(order, order[1:]):
+        n += topo.path_tier_crossings(a, b)
+    return n
+
+
+def chain_tier_crossings(
+    topo: MeshTopology, order: Sequence[int], source: int = 0
+) -> int:
+    """Number of consecutive-member route *segments* that traverse at
+    least one tier>0 link — a chain that enters a remote pod once and
+    stays there counts 1 even when the XY route to a diagonal pod
+    happens to cross two boundary links."""
+    if not order:
+        return 0
+    n = 1 if topo.path_tier_crossings(source, order[0]) else 0
+    for a, b in zip(order, order[1:]):
+        if topo.path_tier_crossings(a, b):
+            n += 1
+    return n
+
+
+def partition_tier_crossings(
+    topo: MeshTopology, chains: Sequence[Sequence[int]], source: int = 0
+) -> list[int]:
+    """Per-chain segment-level tier crossings of a partition."""
+    return [chain_tier_crossings(topo, c, source) for c in chains]
+
+
 def unicast_total_hops(
     topo: MeshTopology, destinations: Sequence[int], source: int = 0
 ) -> int:
@@ -343,12 +410,15 @@ def _farthest_point_seeds(
     topo: MeshTopology, dests: list[int], source: int, k: int
 ) -> list[int]:
     """K spread-out seeds; the first is Alg. 1's closest-to-source."""
-    first = min(dests, key=lambda d: (topo.distance(source, d), d))
+    first = min(dests, key=lambda d: (topo.weighted_distance(source, d), d))
     seeds = [first]
     while len(seeds) < k:
         nxt = max(
             (d for d in dests if d not in seeds),
-            key=lambda d: (min(topo.distance(d, s) for s in seeds), -d),
+            key=lambda d: (
+                min(topo.weighted_distance(d, s) for s in seeds),
+                -d,
+            ),
         )
         seeds.append(nxt)
     return seeds
@@ -370,7 +440,7 @@ def hop_proxy_cost(
     def cost(chains: list[list[int]]) -> float:
         total_members = sum(len(c) for c in chains)
         worst = max(
-            chain_total_hops(topo, c, source) + per_member_hops * len(c)
+            chain_total_cost(topo, c, source) + per_member_hops * len(c)
             for c in chains
         )
         # cfg packets for every member serialize through one port.
@@ -421,6 +491,22 @@ def partition_schedule(
     return best
 
 
+def _pod_partition(
+    topo: MeshTopology, dests: list[int], source: int, scheduler: str
+) -> list[list[int]]:
+    """Pod-aligned partition: one sub-chain per pod touched, each
+    ordered by the requested scheduler. Every chain enters its pod on
+    one route segment and stays there, so it crosses the slow inter-pod
+    boundary at most once (``chain_tier_crossings <= 1``)."""
+    by_pod: dict[int, list[int]] = {}
+    for d in dests:
+        by_pod.setdefault(topo.pod_of(d), []).append(d)
+    return [
+        SCHEDULERS[scheduler](topo, members, source)
+        for _, members in sorted(by_pod.items())
+    ]
+
+
 def _partition_fixed_k(
     topo: MeshTopology,
     dests: list[int],
@@ -434,7 +520,7 @@ def _partition_fixed_k(
 
     seeds = _farthest_point_seeds(topo, dests, source, k)
     chains: list[list[int]] = [[s] for s in seeds]
-    hops = [topo.distance(source, s) for s in seeds]
+    hops = [topo.weighted_distance(source, s) for s in seeds]
     used: set[Link] = set()
     for s in seeds:
         used.update(topo.xy_path(source, s))
@@ -442,22 +528,29 @@ def _partition_fixed_k(
     remaining = [d for d in dests if d not in seeds]
     while remaining:
         # Pick the globally best (chain, destination) extension:
-        # link-disjoint first (paper Alg. 1's preference), then the
-        # smallest resulting chain length (LPT balancing).
+        # link-disjoint first (paper Alg. 1's preference), then fewest
+        # slow tier>0 links on the extension route, then the smallest
+        # resulting weighted chain cost (LPT balancing). On a uniform
+        # mesh the slow term is a constant 0 and the weighted costs are
+        # hop counts, so the pre-tiering ordering is preserved exactly.
         best_key: tuple | None = None
         best_ci = -1
         best_d = -1
+        best_w = 0
         best_path: list[Link] = []
         for ci, chain in enumerate(chains):
             tail = chain[-1]
             for d in remaining:
                 path = topo.xy_path(tail, d)
                 overlap = bool(set(path) & used)
-                key = (overlap, hops[ci] + len(path), len(path), ci, d)
+                w = topo.weighted_distance(tail, d)
+                slow = topo.path_tier_crossings(tail, d)
+                key = (overlap, slow, hops[ci] + w, w, ci, d)
                 if best_key is None or key < best_key:
-                    best_key, best_ci, best_d, best_path = key, ci, d, path
+                    best_key, best_ci, best_d = key, ci, d
+                    best_w, best_path = w, path
         chains[best_ci].append(best_d)
-        hops[best_ci] += len(best_path)
+        hops[best_ci] += best_w
         used.update(best_path)
         remaining.remove(best_d)
 
@@ -465,12 +558,22 @@ def _partition_fixed_k(
     out: list[list[int]] = []
     for chain in chains:
         rescheduled = SCHEDULERS[scheduler](topo, chain, source)
-        if chain_total_hops(topo, rescheduled, source) <= chain_total_hops(
+        if chain_total_cost(topo, rescheduled, source) <= chain_total_cost(
             topo, chain, source
         ):
             out.append(rescheduled)
         else:
             out.append(chain)
+
+    # On a tiered topology, when K matches the number of pods touched,
+    # the pod-aligned split (<= 1 boundary crossing per chain) often
+    # beats region growth; keep whichever the weighted proxy prefers.
+    if topo.num_pods > 1:
+        pod_chains = _pod_partition(topo, dests, source, scheduler)
+        if len(pod_chains) == k:
+            cost = hop_proxy_cost(topo, source)
+            if cost(pod_chains) <= cost(out):
+                return pod_chains
     return out
 
 
@@ -527,9 +630,11 @@ def reform_chain(
     re-scheduled suffix is kept, so re-forming never costs more hops
     than the naive splice.
 
-    All scoring goes through :meth:`MeshTopology.distance`, so
-    wrap-around links are exploited when ``topo.torus`` — the recovery
-    path on a torus is never longer than on the equivalent mesh.
+    All scoring goes through the weighted link-graph contract
+    (:meth:`MeshTopology.weighted_distance`), so wrap-around links are
+    exploited when ``topo.torus`` — the recovery path on a torus is
+    never longer than on the equivalent mesh — and slow inter-pod links
+    are avoided when the topology is tiered.
 
     Like XDMA's distributed-DMA re-configuration, this is purely an
     endpoint operation: the result is just a new cfg schedule for the
@@ -549,7 +654,7 @@ def reform_chain(
         return prefix
     tail = prefix[-1] if prefix else source
     rescheduled = SCHEDULERS[scheduler](topo, suffix, tail)
-    if chain_total_hops(topo, rescheduled, tail) <= chain_total_hops(
+    if chain_total_cost(topo, rescheduled, tail) <= chain_total_cost(
         topo, suffix, tail
     ):
         return prefix + rescheduled

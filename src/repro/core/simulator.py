@@ -63,7 +63,7 @@ from .program import ALL_REDUCE_ALGOS, ChainProgram, program_wire_bytes
 from .scheduling import (
     SCHEDULERS,
     FailureSpec,
-    chain_total_hops,
+    chain_total_cost,
     normalize_failed,
     partition_schedule,
 )
@@ -127,8 +127,9 @@ def p2p_latency(
     p: SimParams = DEFAULT_PARAMS,
 ) -> int:
     """One wormhole-pipelined P2P copy."""
-    hops = topo.distance(src, dst)
-    return p.dma_setup_cc + hops * p.router_cc + _ceil_div(size_bytes, p.link_bw)
+    hops = topo.weighted_distance(src, dst)
+    bw = max(1, min(p.link_bw, int(p.link_bw * topo.path_min_bw(src, dst))))
+    return p.dma_setup_cc + hops * p.router_cc + _ceil_div(size_bytes, bw)
 
 
 def unicast_latency(
@@ -163,8 +164,15 @@ def multicast_latency(
         + p.mcast_setup_per_dst_cc * n
         + int(p.mcast_setup_quad_cc * n * n)
     )
-    far = max(topo.distance(src, d) for d in dsts)
-    return setup + far * p.router_cc + _ceil_div(size_bytes, p.link_bw)
+    far = max(topo.weighted_distance(src, d) for d in dsts)
+    bw = max(
+        1,
+        min(
+            p.link_bw,
+            int(p.link_bw * min(topo.path_min_bw(src, d) for d in dsts)),
+        ),
+    )
+    return setup + far * p.router_cc + _ceil_div(size_bytes, bw)
 
 
 def _effective_bw(p: SimParams, streams: int) -> int:
@@ -188,8 +196,9 @@ def _cfg_phase(
     """Cfg-dispatch phase shared by every chain-shaped schedule: the
     initiator serializes ``injected`` cfg packets through its single
     cfg-inject port; packets race to members in parallel; the chain is
-    ready when the farthest member has decoded its cfg."""
-    far = max(topo.distance(src, d) for d in order)
+    ready when the farthest (by weighted route latency) member has
+    decoded its cfg."""
+    far = max(topo.weighted_distance(src, d) for d in order)
     return (
         p.dma_setup_cc
         + injected * p.cfg_inject_cc
@@ -224,19 +233,40 @@ def _chain_phases(
     * grant / finish — tail -> head along the chain.
     * data — one pipelined stream through the chain: per-hop
       store-and-forward fill, then streaming at the effective
-      bandwidth.
+      bandwidth, bottlenecked by the slowest link on the chain's routes
+      (``path_min_bw``; a no-op on a uniform topology).
+
+    Hop terms are weighted link latencies (``chain_total_cost``), so a
+    uniform mesh prices CC-identically to the pre-tiering model while a
+    tiered topology charges slow inter-pod links honestly.
     """
     n = len(order)
-    chain_hops = chain_total_hops(topo, order, head)
+    chain_hops = chain_total_cost(topo, order, head)
     cfg = _cfg_phase(topo, src, order, p, injected)
     grant = chain_hops * p.router_cc + n * p.grant_fwd_cc
+    bw = _effective_bw(p, streams)
+    frac = _chain_min_bw(topo, order, head)
+    if frac < 1.0:
+        bw = max(1, min(bw, int(p.link_bw * frac)))
     data = (
         chain_hops * p.router_cc
         + n * p.sf_fill_cc
-        + _ceil_div(size_bytes, _effective_bw(p, streams))
+        + _ceil_div(size_bytes, bw)
     )
     finish = chain_hops * p.router_cc + n * p.finish_fwd_cc
     return cfg, grant, data, finish
+
+
+def _chain_min_bw(
+    topo: MeshTopology, order: Sequence[int], head: int
+) -> float:
+    """Bottleneck link bandwidth fraction over the chain's routes."""
+    frac = topo.path_min_bw(head, order[0])
+    for a, b in zip(order, order[1:]):
+        f = topo.path_min_bw(a, b)
+        if f < frac:
+            frac = f
+    return frac
 
 
 def chainwrite_latency(
@@ -334,19 +364,26 @@ def program_latency(
     else:  # stepped: lockstep rounds, shared by every ring
         bw = _effective_bw(p, 1)  # one outgoing stream per device
         # Steps share their edge tuples (one intra + one cross list per
-        # program), so the O(edges) worst-hop scan memoizes by identity
-        # — 1024-ring pricing stays O(L), not O(L²).
-        hops_memo: dict[int, int] = {}
+        # program), so the O(edges) worst-edge scan memoizes by identity
+        # — 1024-ring pricing stays O(L), not O(L²). Each step pays its
+        # slowest edge's weighted hop cost and streams its frame at the
+        # step's bottleneck link bandwidth (uniform: full link_bw).
+        costs_memo: dict[int, tuple[int, float]] = {}
         data = 0
         for step in program.steps:
-            eh = hops_memo.get(id(step.edges))
-            if eh is None:
-                eh = _max_edge_hops(topo, step.edges)
-                hops_memo[id(step.edges)] = eh
+            ec = costs_memo.get(id(step.edges))
+            if ec is None:
+                ec = _edge_costs(topo, step.edges)
+                costs_memo[id(step.edges)] = ec
+            eh, frac = ec
+            sbw = (
+                bw if frac >= 1.0
+                else max(1, min(bw, int(p.link_bw * frac)))
+            )
             data += (
                 eh * p.router_cc
                 + p.sf_fill_cc
-                + _ceil_div(program.step_bytes(step, size_bytes), bw)
+                + _ceil_div(program.step_bytes(step, size_bytes), sbw)
             )
         for order, _ in pairs:
             injected += len(order)
@@ -581,17 +618,28 @@ def all_reduce_wire_bytes(
 
 
 def _ring_hops(topo: MeshTopology, order: Sequence[int]) -> int:
-    """Total hop count around the closed ring (incl. the wrap link)."""
+    """Total weighted link cost around the closed ring (incl. the wrap
+    link) — plain hop count on a uniform topology."""
     if len(order) <= 1:
         return 0
     loop = list(order) + [order[0]]
-    return sum(topo.distance(a, b) for a, b in zip(loop, loop[1:]))
+    return sum(topo.weighted_distance(a, b) for a, b in zip(loop, loop[1:]))
 
 
-def _max_edge_hops(topo: MeshTopology, edges) -> int:
-    """Per-step cost of one fused rotation: the step completes when its
-    slowest edge lands."""
-    return max((topo.distance(a, b) for a, b in edges), default=0)
+def _edge_costs(topo: MeshTopology, edges) -> tuple[int, float]:
+    """Per-step cost of one fused rotation: (slowest edge's weighted
+    route cost, bottleneck link bandwidth fraction across the edges) —
+    the step completes when its slowest edge lands."""
+    max_w = 0
+    min_bw = 1.0
+    for a, b in edges:
+        w = topo.weighted_distance(a, b)
+        if w > max_w:
+            max_w = w
+        f = topo.path_min_bw(a, b)
+        if f < min_bw:
+            min_bw = f
+    return max_w, min_bw
 
 
 def all_reduce_latency(
@@ -749,6 +797,10 @@ def choose_num_chains(
     collective's planner — so K is chosen from modeled *bytes and
     cycles*. Returns the winning ``(k, sub_rings)``; K=1 is always a
     candidate, so the result never models worse than the single ring.
+    On a tiered topology (``topo.num_pods > 1``) the pod-aligned split
+    — one sub-ring per pod — joins the candidate set (scored first, so
+    it wins ties), which is how hierarchical all-reduce becomes a
+    planning outcome rather than a hand-set K=#pods special case.
 
     The all-reduce selection is JOINT over (K, algo, wire_dtype):
     ``algo="auto"`` scores both :data:`ALL_REDUCE_ALGOS` and
@@ -817,12 +869,52 @@ def choose_num_chains(
         return 1, [[int(src)]]
     ring = [int(src)] + [int(d) for d in SCHEDULERS[scheduler](topo, dsts, src)]
     n = len(ring)
-    best: tuple | None = None
+    # Candidate sub-ring sets. On a tiered topology the POD-ALIGNED
+    # split (one sub-ring per pod, members in scheduled-ring order) is
+    # scored first: its intra steps stay inside pods and only the K-1
+    # cross-ring exchanges touch the slow inter-pod links — so the
+    # hierarchical intra-pod RS -> one inter-pod exchange per shard ->
+    # intra-pod AG schedule *emerges* from the same argmin that picks K
+    # on a flat mesh (and wins ties over equally-priced flat splits).
+    candidates: list[tuple[int, list[list[int]]]] = []
+    if topo.num_pods > 1:
+        by_pod: dict[int, list[int]] = {}
+        for m in ring:
+            by_pod.setdefault(topo.pod_of(m), []).append(m)
+        pod_rings = [by_pod[pid] for pid in sorted(by_pod)]
+        if (
+            1 < len(pod_rings) <= max_chains
+            and len({len(r) for r in pod_rings}) == 1
+        ):
+            candidates.append((len(pod_rings), pod_rings))
     for k in range(1, max_chains + 1):
         if n % k:
             continue
         size = n // k
-        rings = [ring[i * size : (i + 1) * size] for i in range(k)]
+        candidates.append(
+            (k, [ring[i * size : (i + 1) * size] for i in range(k)])
+        )
+    if topo.num_pods > 1:
+        # The tier-blind twin's ring splits are candidates too — the
+        # weighted argmin then runs over a SUPERSET of what a tier-blind
+        # planner could pick, so the tier-aware choice is never slower
+        # than the blind plan priced on the same links (pinned in
+        # benchmarks/bench_collectives._tiered_metrics).
+        flat = MeshTopology(topo.nx, topo.ny, topo.torus)
+        blind_ring = [int(src)] + [
+            int(d) for d in SCHEDULERS[scheduler](flat, dsts, src)
+        ]
+        if blind_ring != ring:
+            for k in range(1, max_chains + 1):
+                if n % k:
+                    continue
+                size = n // k
+                candidates.append(
+                    (k, [blind_ring[i * size : (i + 1) * size]
+                         for i in range(k)])
+                )
+    best: tuple | None = None
+    for k, rings in candidates:
         for a in algos:
             # ONE planned program per (K, algo) candidate; the wire
             # variants are O(1) field replacements sharing its steps

@@ -29,6 +29,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
              variant: str = "baseline", num_chains: int | str = 1,
              ar_algo: str = "rs_ag", compress_grads: bool = False,
              bucket_bytes: int | None = None,
+             topology: str | None = None,
+             src_read_bw: int | None = None,
              overlap: bool = False) -> dict:
     import jax
 
@@ -43,6 +45,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         "collectives": collectives, "remat": remat, "variant": variant,
         "num_chains": num_chains, "ar_algo": ar_algo,
         "compress_grads": compress_grads, "bucket_bytes": bucket_bytes,
+        "topology": topology, "src_read_bw": src_read_bw,
     }
     if not ok:
         rec.update(status="skipped", reason=reason)
@@ -54,11 +57,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                       num_chains=num_chains, ar_algo=ar_algo,
                       remat=remat, variant=variant,
                       compress_grads=compress_grads,
-                      bucket_bytes=bucket_bytes)
+                      bucket_bytes=bucket_bytes,
+                      topology=topology)
     rec["num_chains"] = cell.num_chains  # effective K (VARIANTS resolved)
     rec["ar_algo"] = cell.ar_algo
     rec["compress_grads"] = cell.compress_grads
     rec["bucket_bytes"] = cell.bucket_bytes
+    rec["topology"] = cell.topology
     lowered = cell.lower()
     t1 = time.time()
     compiled = lowered.compile()
@@ -107,6 +112,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             num_chains=cell.num_chains,
             algo=cell.ar_algo,
             wire_dtype="int8" if cell.compress_grads else None,
+            topology=cell.topology,
+            src_read_bw=src_read_bw,
         )
         rec["hlo_overlap"] = overlap_stats(compiled.as_text())
     return rec
@@ -185,6 +192,15 @@ def main() -> None:
                    help="bucket size (MiB) for the bucketed, backward-"
                         "overlapped DP grad reduce (requires "
                         "--collectives torrent)")
+    p.add_argument("--topology", default=None,
+                   help="tiered link-graph spec for auto-K ring planning "
+                        "(requires --collectives torrent), e.g. "
+                        "'pods=4x(4x4):interpod_bw=0.25' or 'pods=2'; "
+                        "parsed by core.topology.parse_topology_spec")
+    p.add_argument("--src-read-bw", type=int, default=None,
+                   help="source HBM read bandwidth (bytes/cc) for the "
+                        "modeled overlap timeline; None = unconstrained "
+                        "(link-bw-limited)")
     p.add_argument("--overlap", action="store_true", default=False,
                    help="emit the modeled bucketed-overlap timeline "
                         "(roofline.modeled_train_overlap) and HLO "
@@ -225,6 +241,8 @@ def main() -> None:
             bucket_bytes=(
                 int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None
             ),
+            topology=args.topology,
+            src_read_bw=args.src_read_bw,
             overlap=args.overlap,
         )
     except Exception:
@@ -271,6 +289,14 @@ def _cell_suffix(args) -> str:
     mb = getattr(args, "bucket_mb", 0)
     if mb:
         suffix += f"__b{int(mb) if mb == int(mb) else mb}MB"
+    topo = getattr(args, "topology", None)
+    if topo:
+        # spec strings contain ':'/'('/')' — sanitize for filenames
+        safe = "".join(c if c.isalnum() or c in "x=." else "-" for c in topo)
+        suffix += f"__topo-{safe}"
+    srbw = getattr(args, "src_read_bw", None)
+    if srbw:
+        suffix += f"__srbw{srbw}"
     if args.variant != "baseline":
         suffix += f"__{args.variant}"
     if args.remat != "dots":
@@ -297,6 +323,10 @@ def _run_subprocess(arch: str, shape: str, mesh_kind: str, args) -> int:
         cmd.append("--compress-grads")
     if args.bucket_mb:
         cmd += ["--bucket-mb", str(args.bucket_mb)]
+    if getattr(args, "topology", None):
+        cmd += ["--topology", args.topology]
+    if getattr(args, "src_read_bw", None):
+        cmd += ["--src-read-bw", str(args.src_read_bw)]
     if args.overlap:
         cmd.append("--overlap")
     print("::", " ".join(cmd[3:]), flush=True)

@@ -239,6 +239,8 @@ def modeled_train_overlap(
     wire_dtype: "str | None" = None,
     scheduler: str = "tsp",
     max_chains: int = 4,
+    topology: "str | None" = None,
+    src_read_bw: "int | None" = None,
 ) -> dict:
     """End-to-end modeled step timeline of the bucketed,
     backward-overlapped DP gradient reduction — the composition of
@@ -257,6 +259,12 @@ def modeled_train_overlap(
     modeled wire bytes match the HLO parse of the bucketed step
     EXACTLY (asserted in benchmarks/bench_train.py).
 
+    ``topology`` (a ``parse_topology_spec`` string) makes the auto-K
+    ring planning and per-bucket latency pricing tier-aware; wire
+    bytes are topology-independent so the exact HLO byte match is
+    unaffected. ``src_read_bw`` caps the modeled source HBM read
+    bandwidth (``SimParams.src_read_bw``); None = link-bw-limited.
+
     Returns ``{"buckets": [...], "timeline": overlap_timeline(...),
     "total_wire_bytes", "serial_cc", "overlap_cc", "efficiency"}``.
     """
@@ -270,7 +278,16 @@ def modeled_train_overlap(
     from repro.parallel import collectives as _col
 
     buckets = _col.assign_buckets(leaves, bucket_bytes)
-    topo = _Topo(axis_size, 1)
+    topo = (
+        _col._ring_topology(axis_size, topology)
+        if topology is not None
+        else _Topo(axis_size, 1)
+    )
+    params = (
+        _sim.SimParams(src_read_bw=src_read_bw)
+        if src_read_bw is not None
+        else _sim.DEFAULT_PARAMS
+    )
     ready = bucket_ready_cc(
         [
             sum(_math.prod(leaves[i].shape) for i in b.indices)
@@ -283,7 +300,7 @@ def modeled_train_overlap(
         k, rings = _col.resolve_ring_chains(
             axis_size, b.num_bytes, num_chains=num_chains,
             scheduler=scheduler, algo=algo, wire_dtype=wire_dtype,
-            max_chains=max_chains,
+            max_chains=max_chains, topology=topo,
         )
         shards = _col.all_reduce_shards(axis_size, k, algo)
         sizes = [_math.prod(leaves[i].shape) for i in b.indices]
@@ -292,7 +309,7 @@ def modeled_train_overlap(
         program = _prg.plan_all_reduce(
             axis_size, rings, algo, wire_dtype=wire_dtype
         )
-        comm = _sim.program_latency(topo, 0, program, padded_bytes)
+        comm = _sim.program_latency(topo, 0, program, padded_bytes, params)
         wire = program.wire_bytes(padded_bytes)
         comms.append(int(comm))
         recs.append({

@@ -44,6 +44,7 @@ class Cell:
     ar_algo: str = "rs_ag"  # multi-ring all-reduce schedule (rs_ag | rotation)
     compress_grads: bool = False  # int8 wire on the DP grad reduction
     bucket_bytes: int | None = None  # bucketed backward-overlapped reduce
+    topology: str | None = None  # tiered link-graph spec for auto-K planning
 
     def lower(self):
         jitted = jax.jit(
@@ -94,6 +95,7 @@ def make_train_step(
     compress_grads: bool = False,
     error_feedback: bool = False,
     bucket_bytes: int | None = None,
+    topology: str | None = None,
     mesh=None,
     batch_specs=None,
     loss_chunks: int = 8,
@@ -135,6 +137,13 @@ def make_train_step(
     ef_state, batch) -> (params, opt_state, ef_state, metrics)``,
     carrying each DP rank's quantization residual across steps
     (EF-SGD; state from ``parallel.collectives.ef_residual_init``).
+
+    ``topology`` (``collectives="torrent"`` only) is a
+    ``core.topology`` spec string (e.g. ``"pods=4:interpod_bw=0.25"``)
+    that models the DP ring as a tiered link graph for the
+    ``num_chains="auto"`` selection — the hierarchical pod-aligned
+    schedule then competes on modeled latency. Advisory: specs that do
+    not fit the reduced axis degrade to the uniform ring.
     """
     if compress_grads and collectives != "torrent":
         raise ValueError(
@@ -158,6 +167,12 @@ def make_train_step(
             "dispatch is a property of the Chainwrite reduction; the "
             "XLA backend buckets internally)"
         )
+    if topology is not None and collectives != "torrent":
+        raise ValueError(
+            'topology requires collectives="torrent" (the link-graph '
+            "spec steers the Chainwrite ring planner; the XLA backend "
+            "has no topology knob)"
+        )
     wire_dtype = "int8" if compress_grads else None
 
     def grad_fn_local(params, batch):
@@ -173,6 +188,7 @@ def make_train_step(
                 grad_fn_local, mesh, batch_specs,
                 num_chains=num_chains, algo=ar_algo,
                 wire_dtype=wire_dtype, bucket_bytes=bucket_bytes,
+                topology=topology,
             )(params, batch)
         return grad_fn_local(params, batch)
 
@@ -181,7 +197,7 @@ def make_train_step(
             grad_fn_local, mesh, batch_specs,
             num_chains=num_chains, algo=ar_algo,
             wire_dtype=wire_dtype, error_feedback=True,
-            bucket_bytes=bucket_bytes,
+            bucket_bytes=bucket_bytes, topology=topology,
         )
 
         def train_step_ef(params, opt_state, ef_state, batch):
@@ -321,6 +337,14 @@ VARIANTS: dict[str, dict] = {
         "bucket_bytes": 4 << 20, "num_chains": "auto",
         "compress_grads": True,
     },
+    # tiered link-graph planning: the DP ring is modeled as 2 pods with
+    # 4× slower inter-pod links, so num_chains="auto" scores the
+    # hierarchical pod-aligned schedule; collectives="torrent" only.
+    # The relative pods=2 spec applies wherever 2 divides the DP axis
+    # and degrades to the uniform ring elsewhere.
+    "tiered": {
+        "topology": "pods=2:interpod_bw=0.25", "num_chains": "auto",
+    },
     # opt + query-sequence-sharded attention (heads ∤ TP archs).
     "opt-seq": {
         "attn_impl": "chunked", "mla_absorb": True,
@@ -340,6 +364,7 @@ def build_cell(
     ar_algo: str = "rs_ag",
     compress_grads: bool = False,
     bucket_bytes: int | None = None,
+    topology: str | None = None,
     remat: str = "dots",
     smoke: bool = False,
     variant: str = "baseline",
@@ -378,6 +403,14 @@ def build_cell(
                 f"bucket_bytes={bucket_bytes} was passed explicitly"
             )
         bucket_bytes = variant_bb
+    variant_topo = overrides.pop("topology", None)
+    if variant_topo is not None:
+        if topology not in (None, variant_topo):
+            raise ValueError(
+                f"variant {variant!r} sets topology={variant_topo!r} but "
+                f"topology={topology!r} was passed explicitly"
+            )
+        topology = variant_topo
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     shape = C.SHAPES[shape_name]
@@ -403,6 +436,7 @@ def build_cell(
             cfg, opt_cfg, remat=remat, collectives=collectives,
             num_chains=num_chains, ar_algo=ar_algo,
             compress_grads=compress_grads, bucket_bytes=bucket_bytes,
+            topology=topology,
             mesh=mesh, batch_specs=bspecs_clean,
         )
         return Cell(
@@ -419,6 +453,7 @@ def build_cell(
             ar_algo=ar_algo,
             compress_grads=compress_grads,
             bucket_bytes=bucket_bytes,
+            topology=topology,
         )
 
     if shape.kind == "prefill":

@@ -52,6 +52,7 @@ class TrainConfig:
     collectives: str = "xla"  # "xla" | "torrent"
     compress_grads: bool = False
     bucket_bytes: int | None = None  # bucketed backward-overlapped reduce
+    topology: str | None = None  # tiered link-graph spec (torrent auto-K)
     remat: str = "dots"
     loss_chunks: int = 4
     microbatches: int = 1  # gradient accumulation (HBM-fit lever)
@@ -131,6 +132,7 @@ class Trainer:
             compress_grads=tc.compress_grads,
             error_feedback=tc.compress_grads,
             bucket_bytes=tc.bucket_bytes,
+            topology=tc.topology,
             mesh=mesh,
             batch_specs={
                 k: _sanitize(v, mesh) for k, v in bspecs.items()
@@ -244,6 +246,10 @@ def main(argv=None) -> dict:
                    help="bucket size (MiB) for the bucketed, backward-"
                         "overlapped DP grad reduce (requires --collectives "
                         "torrent)")
+    p.add_argument("--topology", default=None,
+                   help="tiered link-graph spec for auto-K ring planning, "
+                        "e.g. 'pods=2:interpod_bw=0.25' (requires "
+                        "--collectives torrent)")
     p.add_argument("--tp", type=int, default=1)
     p.add_argument("--remat", default="dots")
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
@@ -260,6 +266,7 @@ def main(argv=None) -> dict:
         bucket_bytes=(
             int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None
         ),
+        topology=args.topology,
         tp=args.tp, remat=args.remat,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         fail_at=tuple(int(s) for s in args.fail_at.split(",") if s),

@@ -88,7 +88,7 @@ from repro.core.scheduling import (
     reform_chain,
 )
 from repro.core.simulator import SourceFailedError
-from repro.core.topology import MeshTopology
+from repro.core.topology import MeshTopology, parse_topology_spec
 from repro.core import program as prg
 from repro.parallel import hints
 from repro.runtime.compression import dequantize, quantize
@@ -278,6 +278,30 @@ def torrent_all_gather(
     return cw.multi_chain_all_gather(x, axis_name, orders, tiled=tiled)
 
 
+def _ring_topology(
+    axis_size: int, topology: "str | MeshTopology | None"
+) -> MeshTopology:
+    """Resolve the (optional) topology knob for one DP ring of
+    ``axis_size`` devices: ``None`` -> the uniform 1-D ring; a spec
+    string -> ``core.topology.parse_topology_spec``; a topology object
+    passes through. The knob is ADVISORY: a spec that does not apply to
+    this axis (wrong node count, pods that do not divide it) degrades
+    to the uniform ring instead of erroring, so one VARIANTS entry can
+    span meshes whose data-axis sizes differ."""
+    if topology is None:
+        return MeshTopology(axis_size, 1)
+    if isinstance(topology, MeshTopology):
+        topo = topology
+    else:
+        try:
+            topo = parse_topology_spec(str(topology), num_nodes=axis_size)
+        except ValueError:
+            return MeshTopology(axis_size, 1)
+    if topo.num_nodes != axis_size:
+        return MeshTopology(axis_size, 1)
+    return topo
+
+
 @functools.lru_cache(maxsize=None)
 def auto_ring_chains(
     axis_size: int,
@@ -286,13 +310,18 @@ def auto_ring_chains(
     algo: str = "rs_ag",
     wire_dtype: str | None = None,
     max_chains: int = 4,
+    topo: MeshTopology | None = None,
 ) -> tuple[int, tuple[tuple[int, ...], ...]]:
     """Model-driven (K, sub_rings) for one DP reduction of
     ``size_bytes`` over ``axis_size`` devices — the ``num_chains=
     "auto"`` resolver. Delegates to the algo-aware
     ``core.simulator.choose_num_chains(collective="all_reduce")`` on
     the 1-D ring topology (the same snake construction as
-    ``ring_order_for_axis``, so intra-ring hops stay 1 physical link).
+    ``ring_order_for_axis``, so intra-ring hops stay 1 physical link),
+    or on ``topo`` when given — a tiered topology makes the pod-aligned
+    hierarchical schedule a candidate, and the cache keys on the frozen
+    topology object itself, so a weighted graph can never alias the
+    uniform ring of the same shape.
     ``wire_dtype`` prices the candidate schedules with the compressed
     frame bytes (int8 payload + f32 scale sideband), so the chosen K
     matches what actually goes over the wire.
@@ -301,7 +330,12 @@ def auto_ring_chains(
     """
     if axis_size <= 2:
         return 1, (tuple(range(axis_size)),)
-    topo = MeshTopology(axis_size, 1)
+    if topo is None:
+        topo = MeshTopology(axis_size, 1)
+    elif topo.num_nodes != axis_size:
+        raise ValueError(
+            f"topology has {topo.num_nodes} nodes for a ring of {axis_size}"
+        )
     k, rings = sim.choose_num_chains(
         topo, 0, list(range(1, axis_size)), int(size_bytes),
         scheduler=scheduler, max_chains=max_chains,
@@ -409,15 +443,23 @@ def resolve_ring_chains(
     algo: str = "rs_ag",
     wire_dtype: str | None = None,
     max_chains: int = 4,
+    topology: "str | MeshTopology | None" = None,
 ) -> tuple[int, tuple[tuple[int, ...], ...]]:
     """(K, sub_rings) for one DP reduction — the module-level twin of
     ``torrent_grad_reduce``'s per-reduction resolution, shared with the
     overlap/step-time model (``launch.roofline.modeled_train_overlap``)
     so modeled schedules stay in lockstep with what the executor runs
-    (the EXACT modeled-vs-HLO byte match depends on it)."""
+    (the EXACT modeled-vs-HLO byte match depends on it).
+
+    ``topology`` (spec string or topology object, see
+    :func:`_ring_topology`) only steers the ``num_chains="auto"``
+    model: a tiered topology makes the hierarchical pod-aligned split a
+    scored candidate. Explicit ``num_chains`` keeps the contiguous
+    snake splits, which on a 1-D tiered ring are already pod-aligned."""
     if num_chains == "auto":
         k, rings = auto_ring_chains(
-            axis_size, nbytes, scheduler, algo, wire_dtype, max_chains
+            axis_size, nbytes, scheduler, algo, wire_dtype, max_chains,
+            _ring_topology(axis_size, topology),
         )
         if k > 1:
             return k, rings
@@ -463,6 +505,7 @@ def torrent_grad_reduce(
     wire_dtype: str | None = None,
     error_feedback: bool = False,
     bucket_bytes: int | None = None,
+    topology: "str | MeshTopology | None" = None,
 ) -> Callable[..., tuple[PyTree, PyTree]]:
     """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` (grads LOCAL
     to the batch shard) so grads come back chain-all-reduced over the DP
@@ -495,7 +538,14 @@ def torrent_grad_reduce(
     :func:`assign_buckets` and each bucket reduces as one chunk-aligned
     chain all-reduce, dispatched in reverse-topological bucket order.
     ``num_chains="auto"`` then resolves K per BUCKET (from the bucket's
-    total bytes) instead of per leaf; EF residuals stay per leaf."""
+    total bytes) instead of per leaf; EF residuals stay per leaf.
+
+    ``topology`` (a ``core.topology`` spec string such as
+    ``"pods=4:interpod_bw=0.25"``, or a topology object) models the DP
+    ring as a tiered link graph for the ``num_chains="auto"``
+    selection, making the hierarchical pod-aligned schedule a scored
+    candidate; see :func:`resolve_ring_chains`. Advisory: specs that
+    do not fit the reduced axis degrade to the uniform ring."""
     if algo not in cw.ALL_REDUCE_ALGOS:
         raise ValueError(
             f"unknown algo {algo!r}; expected {cw.ALL_REDUCE_ALGOS}"
@@ -527,7 +577,7 @@ def torrent_grad_reduce(
         """(K, sub_rings) for one axis reduction of ``nbytes``."""
         return resolve_ring_chains(
             size, nbytes, num_chains=num_chains, scheduler=scheduler,
-            algo=algo, wire_dtype=wire_dtype,
+            algo=algo, wire_dtype=wire_dtype, topology=topology,
         )
 
     def _ar(x, axis, k, rings):

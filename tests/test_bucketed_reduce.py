@@ -271,6 +271,62 @@ def test_auto_ring_chains_cache_keys_are_shape_and_dtype_distinct():
     assert auto_ring_chains(8, big_f32, wire_dtype="int8") == k_int8
 
 
+def test_auto_ring_chains_cache_keys_topology_distinct():
+    """The lru_cache keys on the frozen topology OBJECT: a weighted
+    link graph must never alias the uniform mesh of the same shape."""
+    from repro.core.topology import TieredMeshTopology
+
+    auto_ring_chains.cache_clear()
+    nbytes = (1 << 18) * 4
+    flat = MeshTopology(8, 1)
+    tiered = TieredMeshTopology(8, 1, pods_x=2, interpod_bw=0.25,
+                                interpod_latency=4)
+    k_default = auto_ring_chains(8, nbytes)
+    k_flat = auto_ring_chains(8, nbytes, topo=flat)
+    k_tiered = auto_ring_chains(8, nbytes, topo=tiered)
+    # an explicit uniform ring plans identically to the default...
+    assert k_flat == k_default
+    # ...but every distinct topology identity is a distinct entry
+    assert auto_ring_chains.cache_info().currsize >= 3
+    # cold-vs-warm agreement regardless of call order
+    auto_ring_chains.cache_clear()
+    assert auto_ring_chains(8, nbytes, topo=tiered) == k_tiered
+    assert auto_ring_chains(8, nbytes, topo=flat) == k_flat
+    # a topology of the wrong node count is a planning bug, not a knob
+    with pytest.raises(ValueError):
+        auto_ring_chains(8, nbytes, topo=MeshTopology(4, 1))
+
+
+def test_resolve_ring_chains_topology_spec_is_advisory():
+    """A spec string steers auto-K planning when it applies to the axis
+    and degrades to the uniform ring when it does not (one VARIANTS
+    entry spans meshes of different data-axis sizes)."""
+    nbytes = (1 << 18) * 4
+    k_flat, rings_flat = resolve_ring_chains(8, nbytes, num_chains="auto")
+    k_pod, rings_pod = resolve_ring_chains(
+        8, nbytes, num_chains="auto",
+        topology="pods=2:interpod_bw=0.25:interpod_lat=4",
+    )
+    from repro.core.topology import TieredMeshTopology
+
+    tiered = TieredMeshTopology(8, 1, pods_x=2, interpod_bw=0.25,
+                                interpod_latency=4)
+    # pod-aligned: each ring confined to one pod of the tiered 1-D ring
+    for ring in rings_pod:
+        assert len({tiered.pod_of(m) for m in ring}) == 1
+    # a spec that cannot tile this axis falls back to the uniform plan
+    assert resolve_ring_chains(
+        8, nbytes, num_chains="auto", topology="pods=3"
+    ) == (k_flat, rings_flat)
+    assert resolve_ring_chains(
+        8, nbytes, num_chains="auto", topology="4x4"
+    ) == (k_flat, rings_flat)
+    # explicit K ignores the topology knob entirely (contiguous splits)
+    assert resolve_ring_chains(
+        8, nbytes, num_chains=2, topology="pods=2"
+    ) == resolve_ring_chains(8, nbytes, num_chains=2)
+
+
 def test_overlap_stats_counts_async_and_interleavings():
     from repro.launch.hlo_breakdown import overlap_stats
 

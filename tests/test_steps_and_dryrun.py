@@ -105,6 +105,39 @@ def test_ar_algo_and_auto_variants_plumb_to_train_step(host_mesh, monkeypatch):
         )
 
 
+def test_tiered_variant_plumbs_topology_to_train_step(host_mesh, monkeypatch):
+    """The 'tiered' VARIANTS bundle routes a link-graph spec (and
+    auto-K) to the torrent grad reduction; the spec is advisory per
+    axis, so the same bundle compiles on any mesh. Topology without
+    torrent collectives is rejected (the XLA path cannot honour it)."""
+    from repro.launch.steps import VARIANTS
+
+    shape = SMOKE_SHAPES["train"]
+    monkeypatch.setitem(C.SHAPES, shape.name, shape)
+    assert VARIANTS["tiered"] == {
+        "topology": "pods=2:interpod_bw=0.25", "num_chains": "auto",
+    }
+    cell = build_cell(
+        "llama3-8b", shape.name, host_mesh, smoke=True,
+        collectives="torrent", variant="tiered",
+    )
+    assert cell.topology == "pods=2:interpod_bw=0.25"
+    assert cell.num_chains == "auto"
+    assert cell.cfg == C.get_smoke_config("llama3-8b")
+    assert cell.lower().compile().cost_analysis() is not None
+
+    with pytest.raises(ValueError):
+        build_cell(
+            "llama3-8b", shape.name, host_mesh, smoke=True,
+            collectives="xla", variant="tiered",
+        )
+    with pytest.raises(ValueError):
+        build_cell(
+            "llama3-8b", shape.name, host_mesh, smoke=True,
+            collectives="torrent", variant="tiered", topology="pods=4",
+        )
+
+
 def test_moe_ep_variant_plumbs_and_compiles(host_mesh, monkeypatch):
     """The 'moe-ep' VARIANTS bundle is a ModelConfig override (the
     Torrent expert-parallel dispatch knob) that still lowers + compiles

@@ -279,3 +279,26 @@ def test_planner_cache_keys_are_complete_and_wire_free():
     prg.plan_all_to_all(8, r44)
     prg.plan_all_to_all(8, r44, wire_dtype="int8")
     assert prg.PLANNER_CACHES["plan_all_to_all"].cache_info().currsize == 2
+
+
+def test_plan_recovery_cache_distinguishes_tiered_topology():
+    """plan_recovery is the one planner keyed on the topology: a
+    weighted link graph of the same shape must be a distinct cache
+    entry from the uniform mesh (its reform routes price differently),
+    which holds because the frozen topology object IS part of the key."""
+    from repro.core.topology import MeshTopology, TieredMeshTopology
+
+    prg.clear_planner_caches()
+    flat = MeshTopology(8, 8)
+    tiered = TieredMeshTopology(8, 8, pods_x=2, pods_y=2,
+                                interpod_bw=0.25, interpod_latency=4)
+    chains = ((1, 2, 3), (4, 5, 6))
+    prg.plan_recovery(flat, 0, chains, frozenset({2}))
+    prg.plan_recovery(tiered, 0, chains, frozenset({2}))
+    info = prg.PLANNER_CACHES["plan_recovery"].cache_info()
+    assert info.currsize == 2 and info.misses == 2
+    # warm hit on each: the two topologies stay separate entries
+    prg.plan_recovery(flat, 0, chains, frozenset({2}))
+    prg.plan_recovery(tiered, 0, chains, frozenset({2}))
+    info = prg.PLANNER_CACHES["plan_recovery"].cache_info()
+    assert info.currsize == 2 and info.hits == 2

@@ -1,11 +1,16 @@
-"""MeshTopology: XY routing, distances, multicast trees (unit + property)."""
+"""MeshTopology: XY routing, distances, multicast trees (unit + property),
+and the weighted link-graph generalization (LinkGraph / tiered meshes)."""
 
 from __future__ import annotations
 
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.topology import MeshTopology
+from repro.core.topology import (
+    LinkGraph,
+    MeshTopology,
+    TieredMeshTopology,
+)
 
 
 def test_coord_node_id_roundtrip():
@@ -181,3 +186,134 @@ def test_path_nodes_endpoints_match(nx, ny, torus, data):
     assert nodes[0] == topo.coord(a)
     assert nodes[-1] == topo.coord(b)
     assert len(nodes) == topo.distance(a, b) + 1
+
+
+# ---------------------------------------------------------------------------
+# weighted link-graph properties (the routing properties above, generalized)
+# ---------------------------------------------------------------------------
+
+
+def _tiered(nx, ny, pods_x, pods_y, torus=False):
+    return TieredMeshTopology(
+        nx, ny, torus=torus, pods_x=pods_x, pods_y=pods_y,
+        interpod_bw=0.25, interpod_latency=4,
+    )
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    nx=st.integers(2, 4).map(lambda p: 2 * p),
+    ny=st.integers(2, 4).map(lambda p: 2 * p),
+    data=st.data(),
+)
+def test_weighted_distance_symmetric_on_tiered_mesh(nx, ny, data):
+    topo = _tiered(nx, ny, 2, 2)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    assert topo.weighted_distance(a, b) == topo.weighted_distance(b, a)
+    assert topo.weighted_distance(a, a) == 0
+    assert topo.path_min_bw(a, b) == topo.path_min_bw(b, a)
+    assert topo.path_tier_crossings(a, b) == topo.path_tier_crossings(b, a)
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    nx=st.integers(2, 4).map(lambda p: 2 * p),
+    ny=st.integers(2, 4).map(lambda p: 2 * p),
+    data=st.data(),
+)
+def test_weighted_triangle_inequality_on_tiered_mesh(nx, ny, data):
+    # Non-torus XY routing on an axis-aligned tiering is separable per
+    # axis, so the weighted distance is a metric. (On a TORUS the wrap
+    # direction is chosen by hop count, not weight, so no such claim.)
+    topo = _tiered(nx, ny, 2, 2)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    c = data.draw(st.integers(0, nx * ny - 1))
+    assert topo.weighted_distance(a, c) <= (
+        topo.weighted_distance(a, b) + topo.weighted_distance(b, c)
+    )
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    nx=st.integers(2, 4).map(lambda p: 2 * p),
+    ny=st.integers(2, 4).map(lambda p: 2 * p),
+    torus=st.booleans(),
+    data=st.data(),
+)
+def test_weighted_path_cost_is_summed_link_weights(nx, ny, torus, data):
+    topo = _tiered(nx, ny, 2, 2, torus=torus)
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    links = topo.xy_path(a, b)
+    assert topo.weighted_distance(a, b) == sum(
+        topo.link_attrs(l).latency for l in links
+    )
+    assert topo.path_tier_crossings(a, b) == sum(
+        1 for l in links if topo.link_attrs(l).tier > 0
+    )
+    bws = [topo.link_attrs(l).bandwidth for l in links]
+    assert topo.path_min_bw(a, b) == (min(bws) if bws else 1.0)
+
+
+@pytest.mark.parametrize("torus", [False, True])
+def test_uniform_link_graph_matches_mesh_distance_all_pairs(torus):
+    topo = MeshTopology(4, 4, torus=torus)
+    g = topo.to_link_graph()
+    for a in topo.nodes():
+        for b in topo.nodes():
+            assert g.weighted_distance(a, b) == topo.distance(a, b), (a, b)
+            assert g.path_min_bw(a, b) == 1.0
+            assert g.path_tier_crossings(a, b) == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    nx=st.integers(2, 6),
+    ny=st.integers(2, 6),
+    torus=st.booleans(),
+    data=st.data(),
+)
+def test_uniform_link_graph_matches_mesh_distance_property(nx, ny, torus, data):
+    topo = MeshTopology(nx, ny, torus=torus)
+    g = topo.to_link_graph()
+    a = data.draw(st.integers(0, nx * ny - 1))
+    b = data.draw(st.integers(0, nx * ny - 1))
+    assert g.weighted_distance(a, b) == topo.distance(a, b)
+
+
+@settings(max_examples=100, deadline=None)
+@given(data=st.data())
+def test_link_graph_triangle_inequality(data):
+    # Dijkstra shortest-path costs are a metric by construction, even
+    # on the tiered torus where XY routing is not.
+    g = _tiered(4, 4, 2, 2, torus=True).to_link_graph()
+    a = data.draw(st.integers(0, 15))
+    b = data.draw(st.integers(0, 15))
+    c = data.draw(st.integers(0, 15))
+    assert g.weighted_distance(a, c) <= (
+        g.weighted_distance(a, b) + g.weighted_distance(b, c)
+    )
+    assert g.weighted_distance(a, b) == g.weighted_distance(b, a)
+
+
+@settings(max_examples=100, deadline=None)
+@given(data=st.data())
+def test_link_graph_never_exceeds_xy_route_cost(data):
+    # the oracle's shortest path can only improve on deterministic XY
+    topo = _tiered(8, 4, 2, 2)
+    g = topo.to_link_graph()
+    a = data.draw(st.integers(0, 31))
+    b = data.draw(st.integers(0, 31))
+    assert g.weighted_distance(a, b) <= topo.weighted_distance(a, b)
+
+
+def test_mesh_uniform_weight_hooks():
+    topo = MeshTopology(5, 3, torus=True)
+    assert topo.num_pods == 1
+    for n in (0, 7, 14):
+        assert topo.pod_of(n) == 0
+    assert topo.weighted_distance(0, 14) == topo.distance(0, 14)
+    assert topo.path_min_bw(0, 14) == 1.0
+    assert topo.path_tier_crossings(0, 14) == 0
